@@ -1,0 +1,40 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents import MLPFamily, PolynomialFamily
+from repro.data.friedman import make_dataset
+from repro.data.partition import one_per_agent
+
+__all__ = ["load_friedman", "poly_family", "mlp_family", "timed", "row"]
+
+
+def load_friedman(which: int, n: int = 4000, seed: int = 0):
+    xtr, ytr, xte, yte = make_dataset(which, n_train=n, n_test=n, seed=seed)
+    groups = one_per_agent(5)
+    xc = jnp.stack([xtr[:, g] for g in groups])
+    xct = jnp.stack([xte[:, g] for g in groups])
+    return xc, ytr, xct, yte
+
+
+def poly_family(degree: int = 4):
+    return PolynomialFamily(n_cols=1, degree=degree)
+
+
+def mlp_family(hidden: int = 24, fit_steps: int = 120):
+    return MLPFamily(n_cols=1, hidden=hidden, fit_steps=fit_steps)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) else None
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.0f},{derived}"

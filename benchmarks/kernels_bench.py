@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks.
+
+Wall-clock on this CPU box times the *reference* path (the Pallas kernels
+target TPU; interpret=True executes the kernel body in Python and is a
+correctness tool, not a performance number). Derived column reports the
+arithmetic intensity the TPU kernel claims per the BlockSpec tiling —
+the quantity the roofline analysis consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.gram.ref import gram_ref
+from benchmarks.common import row, timed
+
+
+def run() -> list[str]:
+    out = []
+    # gram: paper shape D=5, N=4000 and a production-ish D=64, N=1M
+    for d, n in ((5, 4000), (64, 262144)):
+        r = jax.random.normal(jax.random.PRNGKey(0), (d, n))
+        f = jax.jit(gram_ref)
+        f(r).block_until_ready()
+        _, us = timed(lambda: f(r).block_until_ready())
+        flops = 2 * d * d * n
+        bytes_ = 4 * d * n
+        out.append(row(f"kernel/gram/d{d}_n{n}", us,
+                       f"ai={flops / bytes_:.1f}flops_per_byte"))
+    # flash attention 1k seq
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1024, 2, 64), jnp.float32)
+    f = jax.jit(lambda q, k: attention_ref(q, k, k, causal=True))
+    f(q, k).block_until_ready()
+    _, us = timed(lambda: f(q, k).block_until_ready())
+    out.append(row("kernel/flash_attention/s1024_h8kv2", us, "vmem_tiles=128x128"))
+    # flash decode 32k cache
+    qd = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 64), jnp.float32)
+    kd = jax.random.normal(jax.random.PRNGKey(4), (4, 32768, 2, 64), jnp.float32)
+    f = jax.jit(lambda q, k: decode_ref(q, k, k, 30000))
+    f(qd, kd).block_until_ready()
+    _, us = timed(lambda: f(qd, kd).block_until_ready())
+    out.append(row("kernel/flash_decode/s32768", us, "cache_stream=1pass_per_kv_head"))
+    return out

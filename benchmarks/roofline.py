@@ -1,0 +1,41 @@
+"""Roofline table: reads the dry-run JSONL artifacts (single-pod baseline,
+multi-pod, and any perf-iteration runs) and emits the per-(arch x shape)
+three-term roofline rows used by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+BASELINE = "dryrun_baseline.jsonl"
+MULTIPOD = "dryrun_multipod.jsonl"
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def run(root: str = ".") -> list[str]:
+    out = []
+    for fname, tag in ((BASELINE, "pod1"), (MULTIPOD, "pod2")):
+        for r in _load(os.path.join(root, fname)):
+            name = f"roofline/{tag}/{r['arch']}/{r['shape']}"
+            if r["status"] == "skipped":
+                out.append(row(name, 0, f"skipped:{r['reason'][:60]}"))
+                continue
+            if r["status"] != "ok":
+                out.append(row(name, 0, f"ERROR:{r.get('error','')[:80]}"))
+                continue
+            t = r["roofline"]
+            ratio = r.get("useful_flops_ratio")
+            out.append(row(
+                name, r["compile_s"] * 1e6,
+                f"tc={t['t_compute']:.4f};tm={t['t_memory']:.4f};"
+                f"tcoll={t['t_collective']:.4f};dom={r['dominant'][2:]};"
+                f"useful={ratio and round(ratio, 3)}"))
+    return out

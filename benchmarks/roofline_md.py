@@ -1,0 +1,34 @@
+"""Regenerate the EXPERIMENTS.md §Roofline markdown table from the dry-run
+JSONL artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline_md dryrun_baseline.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def table(path: str) -> str:
+    rows = [json.loads(l) for l in open(path) if l.strip()]
+    out = ["| arch × shape | t_comp | t_mem | t_coll | dominant | useful |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        name = f"{r['arch']} × {r['shape']}"
+        if r["status"] == "skipped":
+            out.append(f"| {name} | — | — | — | skipped | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {name} | — | — | — | ERROR | — |")
+            continue
+        t = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        out.append(
+            f"| {name} | {t['t_compute']:.2f} | {t['t_memory']:.2f} | "
+            f"{t['t_collective']:.2f} | {r['dominant'][2:]} | "
+            f"{u and round(u, 2)} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "dryrun_baseline.jsonl"))

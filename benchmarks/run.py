@@ -1,0 +1,45 @@
+"""Benchmark harness: one function per paper table/figure (deliverable (d)).
+
+Prints ``name,us_per_call,derived`` CSV rows. Usage:
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run table1 fig5  # a subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (comm_cost, fig1_overtraining, fig3_divergence,
+                        fig5_upper_bound, kernels_bench, roofline,
+                        table1_algorithms, table2_minimax)
+
+SUITES = {
+    "table1": table1_algorithms.run,     # paper Table 1
+    "fig1": fig1_overtraining.run,       # paper Fig. 1
+    "fig3": fig3_divergence.run,         # paper Fig. 3/4
+    "table2": table2_minimax.run,        # paper Table 2
+    "fig5": fig5_upper_bound.run,        # paper Fig. 5
+    "comm": comm_cost.run,               # paper Fig. 2 / Sec 4 cost table
+    "kernels": kernels_bench.run,        # kernel micro-bench
+    "roofline": roofline.run,            # dry-run roofline table (Sec e/g)
+}
+
+
+def main() -> int:
+    which = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in which:
+        try:
+            for line in SUITES[name]():
+                print(line, flush=True)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},0,SUITE_FAILED")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

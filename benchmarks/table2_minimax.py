@@ -1,0 +1,44 @@
+"""Paper Table 2: ICOA + Minimax Protection on Friedman-1 over the
+(compression rate alpha) x (protection delta) grid.
+
+delta values are scaled to the data (sigma^2_max of the initial residuals)
+because the paper's absolute deltas correspond to a different residual
+normalisation (DESIGN.md §3.3); the phenomena to reproduce are:
+  * delta = 0 and alpha >> 1 -> divergence ("NaN" cells in the paper),
+  * sufficient delta stabilises every alpha,
+  * once converged, the error depends weakly on alpha.
+A cell is reported DIVERGED when the final test error exceeds 10x the
+unprotected full-communication optimum.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import icoa
+from benchmarks.common import load_friedman, poly_family, row, timed
+
+
+def run(n: int = 4000, sweeps: int = 8) -> list[str]:
+    fam = poly_family()
+    xc, y, xct, yt = load_friedman(1, n=n)
+
+    # sigma^2_max of the initial (non-cooperative) residuals sets the scale
+    import jax
+    state0 = icoa.init_state(fam, jax.random.split(jax.random.PRNGKey(0), 5), xc, y)
+    s2max = float(jnp.max(jnp.mean((y[None] - state0.f) ** 2, axis=1)))
+
+    alphas = [1.0, 10.0, 50.0, 200.0, 800.0]
+    deltas = [0.0, 0.1, 0.5, 1.0, 2.0]      # in units of sigma^2_max
+    base_err = None
+    out = [row("table2/sigma2_max", 0, f"{s2max:.4f}")]
+    for delta_rel in deltas:
+        for alpha in alphas:
+            cfg = icoa.ICOAConfig(n_sweeps=sweeps, alpha=alpha,
+                                  delta=delta_rel * s2max)
+            (_, _, hist), t = timed(icoa.run, fam, cfg, xc, y, xct, yt)
+            err = hist["test_mse"][-1]
+            if base_err is None:
+                base_err = err
+            label = f"{err:.4f}" if err < 10 * base_err else f"DIVERGED({err:.2g})"
+            out.append(row(f"table2/alpha{alpha:g}/delta{delta_rel:g}", t, label))
+    return out

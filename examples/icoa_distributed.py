@@ -1,0 +1,44 @@
+"""Distributed ICOA on a real device mesh (shard_map, 5 agent devices).
+
+Each agent owns its attribute columns on its own device; residual exchange
+is an `all_gather` over the "agents" mesh axis, with Minimax-Protection
+compression shrinking the payload alpha-fold — the paper's trade-off as a
+collective schedule.
+
+    PYTHONPATH=src python examples/icoa_distributed.py
+(the XLA_FLAGS line below must run before jax initialises)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=5")
+
+import jax                                            # noqa: E402
+import jax.numpy as jnp                               # noqa: E402
+
+from repro.agents import PolynomialFamily             # noqa: E402
+from repro.core import icoa                           # noqa: E402
+from repro.core.distributed import run_distributed    # noqa: E402
+from repro.data.friedman import make_dataset          # noqa: E402
+from repro.data.partition import one_per_agent        # noqa: E402
+
+
+def main():
+    print(f"devices: {jax.devices()}")
+    xtr, ytr, xte, yte = make_dataset(1, n_train=2000, n_test=2000, seed=0)
+    groups = one_per_agent(5)
+    xc = jnp.stack([xtr[:, g] for g in groups])
+    xct = jnp.stack([xte[:, g] for g in groups])
+    fam = PolynomialFamily(n_cols=1, degree=4)
+
+    for alpha, delta, label in [
+        (1.0, 0.0, "full residual exchange (O(N D^2) per sweep)"),
+        (20.0, 0.01, "5% exchange + Minimax Protection"),
+        (100.0, 0.02, "1% exchange + Minimax Protection"),
+    ]:
+        cfg = icoa.ICOAConfig(n_sweeps=8, alpha=alpha, delta=delta)
+        _, w, hist = run_distributed(fam, cfg, xc, ytr, xct, yte)
+        print(f"{label:52} test MSE {hist['test_mse'][0]:.4f} -> {hist['test_mse'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

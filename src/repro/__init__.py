@@ -1,0 +1,4 @@
+"""repro: ICOA cooperative attribute-distributed training (Zheng/Kulkarni/Poor
+2009) as a production-grade multi-pod JAX framework. See README.md."""
+
+__version__ = "1.0.0"

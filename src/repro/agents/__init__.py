@@ -1,0 +1,26 @@
+"""Local estimator families — the hypothesis spaces H_i of the paper.
+
+Each family implements the triplet the ICOA projection step needs:
+
+    init(key, n_cols)            -> params
+    fit(params, x_cols, target)  -> params   (train with `target` as the outcome
+                                              == project target onto H_i)
+    predict(params, x_cols)      -> (N,) predictions
+
+All three are pure and vmappable across agents when every agent sees the same
+number of columns (the paper's one-attribute-per-agent setup), which is how the
+distributed shard_map runtime batches them.
+"""
+from repro.agents.polynomial import PolynomialFamily
+from repro.agents.linear import LinearFamily
+from repro.agents.mlp import MLPFamily
+from repro.agents.rff import RFFFamily
+
+FAMILIES = {
+    "polynomial": PolynomialFamily,
+    "linear": LinearFamily,
+    "mlp": MLPFamily,
+    "rff": RFFFamily,
+}
+
+__all__ = ["PolynomialFamily", "LinearFamily", "MLPFamily", "RFFFamily", "FAMILIES"]

@@ -1,0 +1,18 @@
+"""Linear ridge agents — degenerate (degree-1) polynomial family.
+
+Useful as the weakest hypothesis space in tests: ICOA provably cannot reduce
+the ensemble error below the best additive-linear fit, which gives tests a
+sharp invariant to check against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.agents.polynomial import PolynomialFamily
+
+__all__ = ["LinearFamily"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearFamily(PolynomialFamily):
+    degree: int = 1

@@ -1,0 +1,77 @@
+"""Small MLP agents — a non-linear, non-closed-form hypothesis space.
+
+The ICOA projection step ("train with f_hat as the outcome") is approximate
+here: a fixed budget of full-batch Adam steps, warm-started from the current
+parameters. This stands in for the paper's CART regression trees (Table 1),
+which do not lower to XLA control flow; see DESIGN.md §3.3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MLPFamily"]
+
+
+def _forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    h = jnp.tanh(h @ params["w2"] + params["b2"])
+    return (h @ params["w3"] + params["b3"])[:, 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPFamily:
+    n_cols: int
+    hidden: int = 32
+    fit_steps: int = 200
+    lr: float = 3e-2
+
+    def init(self, key: jax.Array) -> dict:
+        k1, k2, k3 = jax.random.split(key, 3)
+        c, h = self.n_cols, self.hidden
+        return {
+            "w1": jax.random.normal(k1, (c, h)) / jnp.sqrt(c),
+            "b1": jnp.zeros((h,)),
+            "w2": jax.random.normal(k2, (h, h)) / jnp.sqrt(h),
+            "b2": jnp.zeros((h,)),
+            "w3": jax.random.normal(k3, (h, 1)) / jnp.sqrt(h),
+            "b3": jnp.zeros((1,)),
+        }
+
+    def predict(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        return _forward(params, x)
+
+    def fit(self, params: dict, x: jnp.ndarray, target: jnp.ndarray) -> dict:
+        """Fixed-budget full-batch Adam, warm-started (approximate projection)."""
+
+        def loss_fn(p):
+            return jnp.mean((_forward(p, x) - target) ** 2)
+
+        def adam_step(carry, _):
+            p, m, v, t = carry
+            g = jax.grad(loss_fn)(p)
+            t = t + 1
+            m = jax.tree.map(lambda mm, gg: 0.9 * mm + 0.1 * gg, m, g)
+            v = jax.tree.map(lambda vv, gg: 0.999 * vv + 0.001 * gg**2, v, g)
+            mhat = jax.tree.map(lambda mm: mm / (1 - 0.9**t), m)
+            vhat = jax.tree.map(lambda vv: vv / (1 - 0.999**t), v)
+            p = jax.tree.map(
+                lambda pp, mm, vv: pp - self.lr * mm / (jnp.sqrt(vv) + 1e-8),
+                p,
+                mhat,
+                vhat,
+            )
+            return (p, m, v, t), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (params, _, _, _), _ = jax.lax.scan(
+            adam_step, (params, zeros, zeros, jnp.array(0.0)), None, length=self.fit_steps
+        )
+        return params
+
+    def fit_predict(self, params: dict, x: jnp.ndarray, target: jnp.ndarray) -> Tuple[dict, jnp.ndarray]:
+        p = self.fit(params, x, target)
+        return p, self.predict(p, x)

@@ -1,0 +1,55 @@
+"""Random-Fourier-feature (RBF kernel) ridge agents.
+
+A third hypothesis-space family: f_i(x) = phi(x)^T beta with
+phi(x) = sqrt(2/F) cos(Omega x + b), Omega ~ N(0, 1/lengthscale^2) — an
+explicit-feature approximation of Gaussian-kernel ridge regression. Like the
+polynomial family, the ICOA projection step is a closed-form solve, but the
+space is far richer (the paper's tree agents sit between the two in
+capacity). Used by benchmarks to probe estimator-capacity effects on the
+overtraining claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["RFFFamily"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RFFFamily:
+    n_cols: int
+    n_features: int = 64
+    lengthscale: float = 0.5
+    ridge: float = 1e-4
+    seed: int = 0  # feature directions are part of the (frozen) family
+
+    def _omega(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(self.seed))
+        omega = jax.random.normal(k1, (self.n_cols, self.n_features)) / self.lengthscale
+        phase = jax.random.uniform(k2, (self.n_features,)) * 2 * jnp.pi
+        return omega, phase
+
+    def _features(self, x: jnp.ndarray) -> jnp.ndarray:
+        omega, phase = self._omega()
+        return jnp.sqrt(2.0 / self.n_features) * jnp.cos(x @ omega + phase)
+
+    def init(self, key) -> jnp.ndarray:
+        del key
+        return jnp.zeros((self.n_features,), jnp.float32)
+
+    def fit(self, params, x: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+        del params
+        phi = self._features(x)
+        gram = phi.T @ phi + self.ridge * jnp.eye(self.n_features)
+        return jnp.linalg.solve(gram, phi.T @ target)
+
+    def predict(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        return self._features(x) @ params
+
+    def fit_predict(self, params, x, target) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        p = self.fit(params, x, target)
+        return p, self.predict(p, x)

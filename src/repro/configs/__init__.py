@@ -1,0 +1,33 @@
+"""Architecture config registry: --arch <id> resolution."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, RunConfig
+
+_MODULES = {
+    "smollm-360m": "repro.configs.smollm_360m",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.smoke_config() if smoke else mod.config()
+
+
+__all__ = [
+    "ARCH_IDS", "get_config", "ModelConfig", "RunConfig", "InputShape", "INPUT_SHAPES",
+]

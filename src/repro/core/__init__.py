@@ -1,0 +1,9 @@
+"""Core paper library: ICOA + Minimax Protection + baselines.
+
+See DESIGN.md §2. Public API:
+
+    from repro.core import icoa, minimax, ensemble, covariance, baselines
+"""
+from repro.core import baselines, covariance, ensemble, gradient, icoa, minimax
+
+__all__ = ["baselines", "covariance", "ensemble", "gradient", "icoa", "minimax"]

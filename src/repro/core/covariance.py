@@ -1,0 +1,67 @@
+"""Residual covariance estimation (paper eq. 14) — full and alpha-compressed.
+
+Residuals are held as R in R^{D x N} (one row per agent). The covariance used
+throughout the paper is the *uncentered* second moment of the residuals,
+
+    A_ij = (1/N) (y - f_i)^T (y - f_j) = (1/N) r_i^T r_j,
+
+consistent with eq. 14 and the unbiasedness assumption E[r_i] = 0.
+
+`subsampled_covariance` implements the Minimax-Protection transport: only
+N/alpha instances are exchanged between agents, so off-diagonal entries are
+estimated from the subsample while diagonal entries (local, free) stay exact —
+this is the paper's delta_ii = 0 assumption (Sec 4.1).
+
+The O(N D^2) inner product is the per-sweep compute hot-spot; `gram` may be
+served by the Pallas kernel in `repro.kernels.gram` (see ops.py there).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gram", "residual_covariance", "subsample_indices", "subsampled_covariance"]
+
+
+def gram(r: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+    """(D, N) -> (D, D) Gram matrix R R^T / N."""
+    if use_kernel:
+        from repro.kernels.gram import ops as gram_ops
+
+        return gram_ops.gram(r, use_pallas=True) / r.shape[1]
+    return (r @ r.T) / r.shape[1]
+
+
+def residual_covariance(residuals: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+    """Full-data covariance estimate A (paper eq. 14)."""
+    return gram(residuals, use_kernel=use_kernel)
+
+
+def subsample_indices(key: jax.Array, n: int, alpha: float) -> jnp.ndarray:
+    """Randomly sample ceil(N / alpha) instance indices (without replacement)."""
+    m = max(2, int(-(-n // alpha)))  # ceil, >= 2 so a covariance is defined
+    return jax.random.permutation(key, n)[:m]
+
+
+def subsampled_covariance(
+    key: jax.Array,
+    residuals: jnp.ndarray,
+    alpha: float,
+    use_kernel: bool = False,
+    idx: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """A0: off-diagonals from an N/alpha subsample, exact local diagonal.
+
+    This is the compressed estimate the agents can actually afford to share:
+    each agent transmits only the subsampled slice of its residual vector
+    (N/alpha numbers instead of N), shrinking the all-gather payload by alpha.
+    """
+    d, n = residuals.shape
+    if idx is None:
+        idx = subsample_indices(key, n, alpha)
+    sub = residuals[:, idx]
+    a0 = gram(sub, use_kernel=use_kernel)
+    exact_diag = jnp.sum(residuals * residuals, axis=1) / n
+    return a0 - jnp.diag(jnp.diag(a0)) + jnp.diag(exact_diag)

@@ -1,0 +1,199 @@
+"""Distributed ICOA under shard_map: agents live on a mesh axis.
+
+This is the paper's system realised as a collective schedule (DESIGN.md §3.1):
+
+  * the data are ATTRIBUTE-SHARDED — each device holds only its agent's
+    covariate columns (xcols in_spec P("agents")); attribute data never
+    crosses the wire, matching the paper's confidentiality restriction;
+  * the ONLY inter-agent traffic is residuals: one `all_gather` over the
+    "agents" axis per agent update — O(N * D^2) per sweep, the paper's ICOA
+    figure (Fig. 2, right);
+  * Minimax Protection (alpha > 1) gathers only an N/alpha subsample plus the
+    D local variance scalars, shrinking the payload by alpha — the paper's
+    transmission/performance trade-off as a first-class sharding knob;
+  * the D x D covariance algebra is replicated (it is tiny); the projection
+    re-training runs everywhere but only the owning agent keeps its result
+    (a `where` on axis_index), so there is no parameter traffic either.
+
+The gradient uses the closed form (core/gradient.py) — cheap and local once
+residuals are gathered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import covariance as cov
+from repro.core import ensemble, minimax
+from repro.core.icoa import ICOAConfig
+
+__all__ = ["make_agent_mesh", "distributed_sweep", "run_distributed"]
+
+
+def make_agent_mesh(n_agents: int) -> Mesh:
+    devs = jax.devices()
+    if len(devs) < n_agents:
+        raise ValueError(
+            f"need >= {n_agents} devices for {n_agents} agents, have {len(devs)} "
+            "(launch with XLA_FLAGS=--xla_force_host_platform_device_count=D)")
+    return Mesh(__import__("numpy").array(devs[:n_agents]), ("agents",))
+
+
+def _gathered_a0(f_sub_all: jnp.ndarray, y_sub: jnp.ndarray, diag_all: jnp.ndarray,
+                 alpha: float) -> jnp.ndarray:
+    """A0 from gathered (possibly subsampled) residuals + exact local diags."""
+    r_sub = y_sub[None, :] - f_sub_all
+    a0 = (r_sub @ r_sub.T) / r_sub.shape[1]
+    if alpha > 1.0:
+        a0 = a0 - jnp.diag(jnp.diag(a0)) + jnp.diag(diag_all)
+    return a0
+
+
+def _sweep_body(cfg: ICOAConfig, family, xcol, y, f_local, params_local, key):
+    """Runs INSIDE shard_map. Shapes (local): xcol (1,N,C); f_local (1,N)."""
+    d = jax.lax.psum(1, "agents")
+    me = jax.lax.axis_index("agents")
+    n = y.shape[0]
+
+    if cfg.alpha > 1.0:
+        key, ksub = jax.random.split(key)
+        idx = cov.subsample_indices(ksub, n, cfg.alpha)   # same key everywhere
+    else:
+        idx = jnp.arange(n)
+
+    def eta_tilde_of(f_sub_all, diag_all):
+        a0 = _gathered_a0(f_sub_all, y[idx], diag_all, cfg.alpha)
+        if cfg.delta > 0.0:
+            a = jax.lax.stop_gradient(minimax.robust_weights(
+                a0, cfg.delta, steps=cfg.minimax_steps, lr=cfg.minimax_lr))
+            return -minimax.robust_objective(a, a0, cfg.delta)
+        return ensemble.eta_tilde(a0)
+
+    def agent_update(i, carry):
+        f_local, params_local, f_cache, diag_cache = carry
+        if cfg.row_broadcast:
+            # §Perf C: rows only change when their owner updates, so the
+            # carried gather stays current — no re-gather needed
+            f_sub_all, diag_all = f_cache, diag_cache
+        else:
+            # paper-faithful schedule: every agent re-transmits its residual
+            # before every update — O(N*D) wire bytes per update
+            f_sub_all = jax.lax.all_gather(f_local[0][idx], "agents")   # (D, N/alpha)
+            diag_all = jax.lax.all_gather(
+                jnp.mean((y - f_local[0]) ** 2), "agents")              # (D,) local variances
+
+        # replicated D x D algebra: gradient of the (protected) objective
+        # w.r.t. agent i's subsampled predictions
+        g_sub = jax.grad(lambda fi: eta_tilde_of(f_sub_all.at[i].set(fi), diag_all))(
+            f_sub_all[i])
+        gnorm = jnp.linalg.norm(g_sub) + 1e-30
+        g_unit = g_sub / gnorm
+        eta0 = eta_tilde_of(f_sub_all, diag_all)
+
+        def cond(state):
+            step, probes = state
+            improved = eta_tilde_of(
+                f_sub_all.at[i].set(f_sub_all[i] + step * g_unit), diag_all) > eta0
+            return jnp.logical_and(~improved, probes < cfg.max_probes)
+
+        step0 = cfg.step0 * jnp.sqrt(jnp.asarray(idx.shape[0], jnp.float32))
+        step, probes = jax.lax.while_loop(
+            cond, lambda s: (s[0] * cfg.backtrack, s[1] + 1), (step0, 0))
+        step = jnp.where(probes >= cfg.max_probes, 0.0, step)
+
+        # scatter the gradient step back to full-length targets: only the
+        # subsampled positions move (the paper re-fits on the perturbed vector)
+        f_hat_full = f_local[0].at[idx].add(step * g_unit)
+
+        # projection onto H_i — executed everywhere, kept only by agent i
+        # (xcol is the agent's OWN columns: no attribute data moved)
+        new_p = family.fit(jax.tree.map(lambda t: t[0], params_local), xcol[0], f_hat_full)
+        new_f = family.predict(new_p, xcol[0])
+        # accept/reject after projection (see core.icoa.sweep): agent i checks
+        # its own post-projection objective on the shared subsample
+        my_sub_new = jax.lax.psum(
+            jnp.where(me == i, new_f[idx], jnp.zeros_like(new_f[idx])), "agents")
+        eta_post = eta_tilde_of(f_sub_all.at[i].set(my_sub_new), diag_all)
+        accept = eta_post > eta0
+        new_p = jax.tree.map(lambda new, old: jnp.where(accept, new, old[0]),
+                             new_p, params_local)
+        new_f = jnp.where(accept, new_f, f_local[0])
+        is_me = (me == i)
+        params_local = jax.tree.map(
+            lambda old, new: jnp.where(is_me, new[None], old), params_local, new_p)
+        f_local = jnp.where(is_me, new_f[None], f_local)
+        if cfg.row_broadcast:
+            # broadcast ONLY agent i's accepted row: one masked psum = O(N/alpha)
+            row = jax.lax.psum(jnp.where(is_me, new_f[idx], jnp.zeros_like(new_f[idx])),
+                               "agents")
+            dnew = jax.lax.psum(jnp.where(is_me, jnp.mean((y - new_f) ** 2), 0.0),
+                                "agents")
+            f_cache = f_cache.at[i].set(row)
+            diag_cache = diag_cache.at[i].set(dnew)
+        return f_local, params_local, f_cache, diag_cache
+
+    # one initial gather (row_broadcast keeps it current; the paper-faithful
+    # path re-gathers inside the loop and ignores the carry)
+    f_cache0 = jax.lax.all_gather(f_local[0][idx], "agents")
+    diag_cache0 = jax.lax.all_gather(jnp.mean((y - f_local[0]) ** 2), "agents")
+    f_local, params_local, f_cache, diag_cache = jax.lax.fori_loop(
+        0, d, agent_update, (f_local, params_local, f_cache0, diag_cache0))
+
+    # final weights from what agents can see
+    if cfg.row_broadcast:
+        f_sub_all, diag_all = f_cache, diag_cache
+    else:
+        f_sub_all = jax.lax.all_gather(f_local[0][idx], "agents")
+        diag_all = jax.lax.all_gather(jnp.mean((y - f_local[0]) ** 2), "agents")
+    a0 = _gathered_a0(f_sub_all, y[idx], diag_all, cfg.alpha)
+    if cfg.delta > 0.0:
+        w = minimax.robust_weights(a0, cfg.delta, steps=cfg.minimax_steps, lr=cfg.minimax_lr)
+    else:
+        w = ensemble.optimal_weights(a0)
+    return f_local, params_local, w
+
+
+def distributed_sweep(mesh: Mesh, cfg: ICOAConfig, family):
+    """Compiled shard_map sweep: (xcols, y, f, params, key) -> (f, params, w)."""
+    body = partial(_sweep_body, cfg, family)
+    return jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("agents"), P(), P("agents"), P("agents"), P()),
+        out_specs=(P("agents"), P("agents"), P()),
+        check_vma=False,
+    ))
+
+
+def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
+                    xcols_test: Optional[jnp.ndarray] = None,
+                    y_test: Optional[jnp.ndarray] = None,
+                    mesh: Optional[Mesh] = None, seed: int = 0):
+    """Full distributed ICOA run; mirrors core.icoa.run's return contract."""
+    d = xcols.shape[0]
+    mesh = mesh or make_agent_mesh(d)
+    keys = jax.random.split(jax.random.PRNGKey(seed), d)
+    params = jax.vmap(lambda k, x: family.fit(family.init(k), x, y))(keys, xcols)
+    f = jax.vmap(family.predict)(params, xcols)
+
+    sweep_fn = distributed_sweep(mesh, cfg, family)
+    hist = {"train_mse": [], "test_mse": []}
+    key = jax.random.PRNGKey(seed + 1)
+    w = jnp.ones((d,)) / d
+
+    def record(params, f, w):
+        hist["train_mse"].append(float(jnp.mean((y - w @ f) ** 2)))
+        if xcols_test is not None:
+            preds = jax.vmap(family.predict)(params, xcols_test)
+            hist["test_mse"].append(float(jnp.mean((y_test - w @ preds) ** 2)))
+
+    record(params, f, w)
+    for _ in range(cfg.n_sweeps):
+        key, k1 = jax.random.split(key)
+        f, params, w = sweep_fn(xcols, y, f, params, k1)
+        record(params, f, w)
+    return params, w, hist

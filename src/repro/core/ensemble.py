@@ -1,0 +1,76 @@
+"""Closed-form inner stage of the two-stage optimization (paper eq. 10-12).
+
+    min_a a^T A a  s.t.  1^T a = 1
+        => a* = A^{-1} 1 / (1^T A^{-1} 1),   min value  eta = 1 / (1^T A^{-1} 1).
+
+`eta_tilde` is the *outer* objective 1^T A^{-1} 1 that ICOA maximises (eq. 12).
+A small jitter keeps the solve stable when residuals become collinear late in
+training (A is then numerically singular even though mathematically PD).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["optimal_weights", "eta", "eta_tilde", "eta_tilde_from_predictions", "combine"]
+
+_JITTER = 1e-10
+
+
+def _solve_ones(a_mat: jnp.ndarray) -> jnp.ndarray:
+    d = a_mat.shape[0]
+    ones = jnp.ones((d,), dtype=a_mat.dtype)
+    return jnp.linalg.solve(a_mat + _JITTER * jnp.eye(d, dtype=a_mat.dtype), ones)
+
+
+def optimal_weights(a_mat: jnp.ndarray) -> jnp.ndarray:
+    """a* = A^{-1}1 / (1^T A^{-1} 1)   (paper eq. 10)."""
+    s = _solve_ones(a_mat)
+    return s / jnp.sum(s)
+
+
+def eta_tilde(a_mat: jnp.ndarray) -> jnp.ndarray:
+    """1^T A^{-1} 1 — the quantity ICOA maximises (paper eq. 12)."""
+    return jnp.sum(_solve_ones(a_mat))
+
+
+def eta(a_mat: jnp.ndarray) -> jnp.ndarray:
+    """Minimum ensemble training MSE = 1 / (1^T A^{-1} 1)  (paper eq. 11)."""
+    return 1.0 / eta_tilde(a_mat)
+
+
+def eta_tilde_from_predictions(f: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """eta_tilde as a differentiable function of the agents' prediction vectors.
+
+    f: (D, N) predictions, y: (N,) outcomes. This is the function whose
+    per-agent gradient drives the ICOA update (DESIGN.md: jax.grad replaces the
+    paper's adjoint-matrix closed form; tests verify they agree).
+    """
+    r = y[None, :] - f
+    a_mat = (r @ r.T) / f.shape[1]
+    return eta_tilde(a_mat)
+
+
+def combine(weights: jnp.ndarray, predictions: jnp.ndarray) -> jnp.ndarray:
+    """Ensemble prediction  sum_i a_i f_i:  (D,), (D, N) -> (N,)."""
+    return weights @ predictions
+
+
+def surviving_weights(a_mat: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
+    """Fault-tolerant re-weighting: optimal weights over the ALIVE agents only
+    (production feature — an agent dropping out of the ensemble must not take
+    the system down; the optimum over the submatrix of A is recovered by
+    masking, no retraining or re-transmission needed).
+
+    alive: (D,) boolean. Dead agents get weight exactly 0; the rest solve the
+    constrained problem restricted to the principal submatrix.
+    """
+    d = a_mat.shape[0]
+    alive_f = alive.astype(a_mat.dtype)
+    # replace dead rows/cols by identity so the solve stays well-posed, then
+    # zero dead entries of the solution and renormalise
+    mask2 = alive_f[:, None] * alive_f[None, :]
+    a_masked = a_mat * mask2 + jnp.diag(1.0 - alive_f)
+    s = jnp.linalg.solve(a_masked + _JITTER * jnp.eye(d, dtype=a_mat.dtype),
+                         alive_f)
+    s = s * alive_f
+    return s / jnp.maximum(jnp.sum(s), 1e-30)

@@ -1,0 +1,3 @@
+from repro.data import friedman, partition
+
+__all__ = ["friedman", "partition"]

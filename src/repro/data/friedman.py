@@ -1,0 +1,89 @@
+"""Friedman-1/2/3 synthetic regression data, as used in the paper (Sec 3.2).
+
+The paper follows Ridgeway et al. '99: covariates drawn from the stated
+uniform distributions, outcomes normalised to [0, 1], additive noise set to a
+negligible level so the distributed-system effects dominate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "friedman1",
+    "friedman2",
+    "friedman3",
+    "make_dataset",
+    "FRIEDMAN_FNS",
+]
+
+
+def _normalise(y: jnp.ndarray) -> jnp.ndarray:
+    lo, hi = jnp.min(y), jnp.max(y)
+    return (y - lo) / jnp.maximum(hi - lo, 1e-12)
+
+
+def friedman1(key: jax.Array, n: int, noise: float = 0.0):
+    """phi(x) = 10 sin(pi x1 x2) + 20 (x3 - 1/2)^2 + 10 x4 + 5 x5,  x_j ~ U[0,1]."""
+    kx, kw = jax.random.split(key)
+    x = jax.random.uniform(kx, (n, 5))
+    y = (
+        10.0 * jnp.sin(jnp.pi * x[:, 0] * x[:, 1])
+        + 20.0 * (x[:, 2] - 0.5) ** 2
+        + 10.0 * x[:, 3]
+        + 5.0 * x[:, 4]
+    )
+    y = y + noise * jax.random.normal(kw, (n,))
+    return x, _normalise(y)
+
+
+def _friedman23_covariates(key: jax.Array, n: int) -> jnp.ndarray:
+    ks = jax.random.split(key, 5)
+    x1 = jax.random.uniform(ks[0], (n,), minval=1.0, maxval=100.0)
+    x2 = jax.random.uniform(ks[1], (n,), minval=40.0 * jnp.pi, maxval=560.0 * jnp.pi)
+    x3 = jax.random.uniform(ks[2], (n,))
+    x4 = jax.random.uniform(ks[3], (n,), minval=1.0, maxval=11.0)
+    x5 = jax.random.uniform(ks[4], (n,))  # nuisance attribute
+    return jnp.stack([x1, x2, x3, x4, x5], axis=1)
+
+
+def friedman2(key: jax.Array, n: int, noise: float = 0.0):
+    """phi(x) = sqrt(x1^2 + (x2 x3 - 1/(x2 x4))^2); X5 is a nuisance variable."""
+    kx, kw = jax.random.split(key)
+    x = _friedman23_covariates(kx, n)
+    y = jnp.sqrt(x[:, 0] ** 2 + (x[:, 1] * x[:, 2] - 1.0 / (x[:, 1] * x[:, 3])) ** 2)
+    y = y + noise * jax.random.normal(kw, (n,))
+    return x, _normalise(y)
+
+
+def friedman3(key: jax.Array, n: int, noise: float = 0.0):
+    """phi(x) = atan((x2 x3 - 1/(x2 x4)) / x1); X5 is a nuisance variable."""
+    kx, kw = jax.random.split(key)
+    x = _friedman23_covariates(kx, n)
+    y = jnp.arctan((x[:, 1] * x[:, 2] - 1.0 / (x[:, 1] * x[:, 3])) / x[:, 0])
+    y = y + noise * jax.random.normal(kw, (n,))
+    return x, _normalise(y)
+
+
+FRIEDMAN_FNS = {1: friedman1, 2: friedman2, 3: friedman3}
+
+
+def make_dataset(
+    which: int,
+    n_train: int = 4000,
+    n_test: int = 4000,
+    seed: int = 0,
+    noise: float = 0.0,
+):
+    """Train/test split with standardised covariates (fit on train).
+
+    Standardisation matters for the polynomial agents on Friedman-2/3 whose raw
+    covariate scales span [1, 560*pi].
+    """
+    fn = FRIEDMAN_FNS[which]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    xtr, ytr = fn(k1, n_train, noise)
+    xte, yte = fn(k2, n_test, noise)
+    mu = xtr.mean(axis=0)
+    sd = xtr.std(axis=0) + 1e-12
+    return (xtr - mu) / sd, ytr, (xte - mu) / sd, yte

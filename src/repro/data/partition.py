@@ -1,0 +1,54 @@
+"""Attribute partitioning: assign covariate columns to agents.
+
+The paper's setup (Sec 3.2) is 5 agents, agent i observing attribute X_i
+exclusively. We generalise to arbitrary disjoint / overlapping assignments so
+the framework supports D != M.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["one_per_agent", "round_robin", "validate_partition", "column_mask"]
+
+
+def one_per_agent(n_attrs: int) -> list[list[int]]:
+    """Paper default: agent i sees attribute i only."""
+    return [[j] for j in range(n_attrs)]
+
+
+def round_robin(n_attrs: int, n_agents: int) -> list[list[int]]:
+    """Deal attributes to agents round-robin (covers D < M)."""
+    groups: list[list[int]] = [[] for _ in range(n_agents)]
+    for j in range(n_attrs):
+        groups[j % n_agents].append(j)
+    return [g for g in groups]
+
+
+def validate_partition(groups: Sequence[Sequence[int]], n_attrs: int) -> None:
+    seen: set[int] = set()
+    for g in groups:
+        if len(g) == 0:
+            raise ValueError("empty attribute group — every agent needs >=1 attribute")
+        for j in g:
+            if not (0 <= j < n_attrs):
+                raise ValueError(f"attribute index {j} out of range [0, {n_attrs})")
+            seen.add(j)
+    if seen != set(range(n_attrs)):
+        missing = set(range(n_attrs)) - seen
+        raise ValueError(f"attributes not covered by any agent: {sorted(missing)}")
+
+
+def column_mask(groups: Sequence[Sequence[int]], n_attrs: int) -> np.ndarray:
+    """(D, M) 0/1 mask; row i selects agent i's columns.
+
+    Used by the shard_map runtime: every agent holds the full (N, M) array but
+    multiplies by its mask, so no attribute data ever crosses the wire — only
+    residuals do, per the paper's communication restriction.
+    """
+    mask = np.zeros((len(groups), n_attrs), dtype=np.float32)
+    for i, g in enumerate(groups):
+        for j in g:
+            mask[i, j] = 1.0
+    return mask

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: causal/sliding-window GQA flash attention (prefill).
+
+TPU adaptation of the flash pattern (HBM->VMEM streaming + online softmax):
+
+  grid = (B, Hq, Sq/BQ, Skv/BK); the KV-block axis is innermost (sequential on
+  TPU), so the (BQ, dh) fp32 accumulator, row-max m and row-sum l live in VMEM
+  scratch across KV steps for a fixed (b, h, iq) and the output tile is
+  written once on the last KV step — no (Sq, Skv) score materialisation.
+
+  BlockSpecs: q tile (1, BQ, 1, dh); k/v tiles (1, BK, 1, dh) indexed by
+  h // group for GQA. BQ = BK = 128 aligns the MXU; VMEM at dh=128:
+  q/k/v tiles 64 KiB each + acc 64 KiB + stats — well under budget.
+
+  Causality/window: blocks fully outside the band are masked via the in-block
+  position comparison (TPU grids cannot skip steps, but the band mask is the
+  only extra VPU work; fully-masked blocks are rare for BQ=BK).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, nk: int, causal: bool, window: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (BQ, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (BK, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)              # (BK, dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BQ, BK)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]                                     # (BQ, 1)
+    m_cur = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+    alpha = jnp.exp(m_prev - m_cur)                         # (BQ, 1)
+    p = jnp.exp(s - m_cur)                                  # (BQ, BK)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)[:, None]
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, :, 0, :] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                             ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B,Sq,Hq,dh); k,v: (B,Skv,Hkv,dh). Sq % bq == Skv % bk == 0."""
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    nq, nk = sq // bq, skv // bk
+    scale = dh ** -0.5
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk,
+                               causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b_, h, iq, ik: (b_, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b_, h, iq, ik: (b_, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b_, h, iq, ik: (b_, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh), lambda b_, h, iq, ik: (b_, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

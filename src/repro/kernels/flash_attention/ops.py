@@ -1,0 +1,41 @@
+"""jit'd wrapper: shape guards, padding to block multiples, ref fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas", "interpret", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_pallas: bool = False, interpret: bool = True,
+                    bq: int = 128, bk: int = 128) -> jnp.ndarray:
+    """Public GQA attention op. Pads Sq/Skv to block multiples when needed.
+
+    Padding correctness: padded KV rows sit at positions > every real q
+    position, so the causal mask removes them; padded q rows produce garbage
+    rows that are sliced off.
+    """
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    bq_ = min(bq, max(8, sq))
+    bk_ = min(bk, max(8, skv))
+    sq_p = -(-sq // bq_) * bq_
+    skv_p = -(-skv // bk_) * bk_
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    if not causal and skv_p != skv:
+        raise ValueError("non-causal flash path requires Skv % bk == 0 "
+                         "(padded KV would leak into the softmax)")
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 bq=bq_, bk=bk_, interpret=interpret)
+    return out[:, :sq]

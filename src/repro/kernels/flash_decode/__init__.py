@@ -1,0 +1,3 @@
+from repro.kernels.flash_decode.ops import flash_decode
+
+__all__ = ["flash_decode"]

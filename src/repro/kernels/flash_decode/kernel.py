@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: single-token decode attention over a long KV cache.
+
+The decode hot-spot is pure HBM streaming: one (Hq, dh) query reads S x Hkv x
+dh keys/values once. Kernel layout:
+
+  grid = (B, Hkv, S/BK), KV-block axis innermost/sequential; VMEM scratch
+  holds the (G, dh) fp32 accumulator and (G, 1) online-softmax stats for the
+  whole query head-group of this KV head (GQA: all G = Hq/Hkv query heads
+  sharing a KV head ride along in one pass, so the cache is streamed ONCE for
+  the whole group — the same insight that makes flash-decoding bandwidth-
+  optimal on GPU, re-tiled for TPU VMEM).
+
+  Fill-length masking (`idx`) is a scalar-prefetch argument: blocks beyond the
+  fill are masked in-block. BK=512 keeps the K/V tiles (512 x dh x 4B each)
+  comfortably inside VMEM at dh up to 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode_pallas"]
+
+_NEG = -1e30
+
+
+def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                   bk: int, nk: int, window: int, scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = idx_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (BK, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, BK)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    mask = k_pos <= idx
+    if window > 0:
+        mask &= k_pos > idx - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)[:, None]
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, k, v, idx, *, window: int = 0, bk: int = 512,
+                        interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hkv, G, dh) grouped query; k,v: (B, S, Hkv, dh); idx: (1,) s32."""
+    b, hkv, g, dh = q.shape
+    _, s, _, _ = k.shape
+    nk = s // bk
+    kernel = functools.partial(_decode_kernel, bk=bk, nk=nk, window=window,
+                               scale=dh ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # idx scalar
+            pl.BlockSpec((1, 1, g, dh), lambda b_, h, ik: (b_, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b_, h, ik: (b_, ik, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b_, h, ik: (b_, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda b_, h, ik: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, q, k, v)

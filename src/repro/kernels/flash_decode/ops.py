@@ -1,0 +1,32 @@
+"""jit'd wrapper for decode attention: GQA regrouping, padding, ref fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+from repro.kernels.flash_decode.ref import decode_ref
+
+__all__ = ["flash_decode"]
+
+
+@partial(jax.jit, static_argnames=("window", "use_pallas", "interpret", "bk"))
+def flash_decode(q, k, v, idx, *, window: int = 0, use_pallas: bool = False,
+                 interpret: bool = True, bk: int = 512) -> jnp.ndarray:
+    """q: (B,Hq,dh); k,v: (B,S,Hkv,dh); idx scalar fill position (inclusive)."""
+    if not use_pallas:
+        return decode_ref(q, k, v, idx, window=window)
+    b, hq, dh = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    bk_ = min(bk, max(8, s))
+    s_p = -(-s // bk_) * bk_
+    kp = jnp.pad(k, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+    qg = q.reshape(b, hkv, g, dh)
+    idx_arr = jnp.asarray(idx, jnp.int32).reshape(1)
+    out = flash_decode_pallas(qg, kp, vp, idx_arr, window=window, bk=bk_,
+                              interpret=interpret)
+    return out.reshape(b, hq, dh)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token decode attention over a filled cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_ref"]
+
+
+def decode_ref(q, k, v, idx, *, window: int = 0) -> jnp.ndarray:
+    """q: (B,Hq,dh); k,v: (B,S,Hkv,dh); positions 0..idx valid (inclusive —
+    the new token's K/V is already written at `idx`). fp32 softmax."""
+    b, hq, dh = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    pos = jnp.arange(s)
+    mask = pos <= idx
+    if window > 0:
+        mask &= pos > idx - window
+    scores = jnp.where(mask[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, dh).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.gram.ops import gram
+
+__all__ = ["gram"]

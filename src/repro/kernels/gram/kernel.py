@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: blocked Gram matrix R @ R^T for residual covariance.
+
+This is the paper's per-sweep compute hot-spot (eq. 14): D agent residual
+vectors of N instances each, N >> D. TPU mapping:
+
+  * grid over N-blocks; each step loads one (Dp, BN) tile of R into VMEM
+    (Dp = D padded to the 128 MXU lane width by the wrapper, BN a multiple of
+    128) and issues a (Dp, BN) x (BN, Dp) MXU matmul;
+  * a (Dp, Dp) fp32 VMEM scratch accumulates across grid steps (the N axis is
+    the sequential innermost grid dim), written out on the last step.
+
+VMEM budget at the default BN=2048, Dp=128: tile 128*2048*4 = 1 MiB + scratch
+64 KiB — comfortably inside the ~16 MiB/core VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gram_pallas"]
+
+
+def _gram_kernel(r_ref, out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = r_ref[...].astype(jnp.float32)        # (Dp, BN)
+    acc_ref[...] += jax.lax.dot_general(
+        blk, blk, (((1,), (1,)), ((), ())),      # R_blk @ R_blk^T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def gram_pallas(r: jnp.ndarray, *, block_n: int = 2048, interpret: bool = True) -> jnp.ndarray:
+    """r: (Dp, Np), Np a multiple of block_n. Returns fp32 (Dp, Dp)."""
+    dp, np_ = r.shape
+    assert np_ % block_n == 0, (np_, block_n)
+    nk = np_ // block_n
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, nk=nk),
+        grid=(nk,),
+        in_specs=[pl.BlockSpec((dp, block_n), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((dp, dp), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((dp, dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dp, dp), jnp.float32)],
+        interpret=interpret,
+    )(r)

@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the Gram kernel: padding, dtype and fallback.
+
+TPU is the target; on CPU we validate through interpret=True (exercised in
+tests) but default to the ref oracle for speed inside ICOA itself.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.ref import gram_ref
+
+__all__ = ["gram"]
+
+_LANE = 128
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_n"))
+def gram(r: jnp.ndarray, use_pallas: bool = False, interpret: bool = True,
+         block_n: int = 2048) -> jnp.ndarray:
+    """(D, N) -> (D, D) = R @ R^T with fp32 accumulation.
+
+    `use_pallas=True` routes through the TPU kernel (interpret=True executes
+    the kernel body in Python on CPU — correctness validation path).
+    """
+    d, n = r.shape
+    if not use_pallas:
+        return gram_ref(r)
+    bn = min(block_n, _pad_to(n, _LANE))
+    dp = _pad_to(d, _LANE)
+    np_ = _pad_to(n, bn)
+    rp = jnp.zeros((dp, np_), r.dtype).at[:d, :n].set(r)
+    out = gram_pallas(rp, block_n=bn, interpret=interpret)
+    return out[:d, :d]

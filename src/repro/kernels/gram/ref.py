@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the residual Gram kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gram_ref"]
+
+
+def gram_ref(r: jnp.ndarray) -> jnp.ndarray:
+    """(D, N) -> (D, D) = R @ R.T, fp32 accumulation."""
+    r32 = r.astype(jnp.float32)
+    return r32 @ r32.T

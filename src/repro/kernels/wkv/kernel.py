@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV (the §Perf-A blocking, fused).
+
+The pure-JAX chunked form (models/rwkv.py::_wkv_chunked) already collapses
+the memory roofline 62x; this kernel is its TPU end-state: the (dh, dh) WKV
+state lives in a VMEM scratch across the sequential chunk axis, so state
+traffic to HBM is ZERO (not merely 1/C) and the in-chunk math runs as
+(C x C)/(C x dh) MXU matmuls from VMEM-resident tiles.
+
+Grid: (B, H, S/C) with the chunk axis innermost (sequential on TPU).
+Per-step tiles: r/k/v/w (C, dh) fp32 -> 4 * C*dh*4 B; scratch state
+(dh, dh) fp32. At C=64, dh=64: ~80 KiB — far under the VMEM budget; dh=128
+and C=128 still fit comfortably.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv_chunked_pallas"]
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *, c: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)          # (C, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)                # (dh,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    lp = jnp.cumsum(logw, axis=0)                      # (C, dh) inclusive
+    lp_prev = lp - logw
+    r_t = r * jnp.exp(lp_prev)                         # r_t * P_{t-1}
+    k_s = k * jnp.exp(-lp)                             # k_s / P_s
+
+    scores = jax.lax.dot_general(r_t, k_s, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (C, C)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    scores = jnp.where(s_idx < t_idx, scores, 0.0)     # strict lower triangle
+
+    out = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)     # (C, dh)
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)        # (C,)
+    out = out + bonus[:, None] * v
+    out = out + jax.lax.dot_general(r_t, state_ref[...], (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+    # state to next chunk: P_C .* S + sum_s (P_C/P_s .* k_s) v_s^T
+    lp_end = lp[-1:, :]                                # (1, dh)
+    k_end = k * jnp.exp(lp_end - lp)                   # (C, dh)
+    state_ref[...] = (jnp.exp(lp_end[0])[:, None] * state_ref[...]
+                      + jax.lax.dot_general(k_end, v, (((0,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def wkv_chunked_pallas(r, k, v, w, u, *, chunk: int = 64,
+                       interpret: bool = True) -> jnp.ndarray:
+    """r,k,v,w: (B,S,H,dh); u: (H,dh); S % chunk == 0. fp32 out (B,S,H,dh)."""
+    b, s, h, dh = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    kernel = functools.partial(_wkv_kernel, c=chunk)
+    spec = pl.BlockSpec((1, chunk, 1, dh), lambda b_, h_, ic: (b_, ic, h_, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, dh), lambda b_, h_, ic: (h_, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

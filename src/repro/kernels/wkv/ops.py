@@ -1,0 +1,29 @@
+"""jit'd wrapper for the chunked WKV kernel (padding + ref fallback)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv_chunked_pallas
+from repro.kernels.wkv.ref import wkv_ref
+
+__all__ = ["wkv_chunked"]
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def wkv_chunked(r, k, v, w, u, *, chunk: int = 64, use_pallas: bool = False,
+                interpret: bool = True) -> jnp.ndarray:
+    """RWKV-6 WKV over a full sequence. Pads S to a chunk multiple (padded
+    tail tokens have w=1, k=0 — they don't disturb the state)."""
+    if not use_pallas:
+        return wkv_ref(r, k, v, w, u)
+    b, s, h, dh = r.shape
+    c = min(chunk, s) if s % min(chunk, s) == 0 else chunk
+    s_p = -(-s // c) * c
+    pad = ((0, 0), (0, s_p - s), (0, 0), (0, 0))
+    rp, kp, vp = (jnp.pad(x, pad) for x in (r, k, v))
+    wp = jnp.pad(w, pad, constant_values=1.0)
+    out = wkv_chunked_pallas(rp, kp, vp, wp, u, chunk=c, interpret=interpret)
+    return out[:, :s]

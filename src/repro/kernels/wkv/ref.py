@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (sequential scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv_ref"]
+
+
+def wkv_ref(r, k, v, w, u):
+    """r,k,v,w: (B,S,H,dh) fp32 (w in (0,1)); u: (H,dh). -> (B,S,H,dh).
+
+        out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+        S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    b, s, h, dh = r.shape
+
+    def step(state, t):
+        rt, kt, vt, wt = t
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        return wt[..., :, None] * state + kv, out
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1), (r, k, v, w))
+    _, outs = jax.lax.scan(step, jnp.zeros((b, h, dh, dh), jnp.float32), xs)
+    return outs.swapaxes(0, 1)

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, print memory/cost analysis, and extract roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run wants 512 placeholder devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape long_500k --attn sliding
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, RunConfig, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, shape_check
+from repro.sharding import axis_ctx, rules
+from repro.train import make_train_step, train_state_specs
+
+__all__ = ["dryrun_one", "model_flops"]
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for the useful-compute
+    ratio. N counts *active* non-embedding params; D = tokens processed."""
+    n = _active_params(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _active_params(cfg: ModelConfig) -> float:
+    d, f = cfg.d_model, cfg.d_ff
+    dh = cfg.resolved_head_dim
+    per_layer = {}
+    attn = d * (cfg.n_heads * dh) * 2 + d * (cfg.n_kv_heads * dh) * 2 if cfg.n_heads else 0
+    dense_ffn = 3 * d * f
+    moe_ffn = 3 * d * f * cfg.top_k  # active experts only
+    if cfg.family == "ssm":
+        di = 0
+        # rwkv time-mix ~ 4 d^2 (+ lora) + out d^2; chan ~ 2 d f + d^2
+        total_layer = 5 * d * d + 2 * d * f + d * d
+        n = cfg.n_layers * total_layer
+    else:
+        n = 0.0
+        for i in range(cfg.n_layers):
+            kind = cfg.layer_kinds()[i]
+            if kind == "attn":
+                n += attn
+            elif kind == "mamba":
+                di = cfg.mamba_expand * d
+                n += 2 * d * di + di * d + di * (cfg.dt_rank + 2 * cfg.mamba_d_state)
+            n += moe_ffn if cfg.layer_is_moe(i) else dense_ffn
+        if cfg.family == "encdec":
+            n += cfg.n_enc_layers * (attn + dense_ffn) + cfg.n_layers * attn  # cross attn
+    return float(n)
+
+
+def _apply_overrides(cfg: ModelConfig, attn: Optional[str], microbatch: Optional[int],
+                     scan_block: Optional[int], remat: Optional[bool] = None,
+                     rwkv_chunk: Optional[int] = None,
+                     seq_shard: Optional[bool] = None,
+                     attn_impl: Optional[str] = None,
+                     window_cache: Optional[bool] = None,
+                     moe_group: Optional[int] = None,
+                     attn_q_block: Optional[int] = None,
+                     mamba_chunk: Optional[int] = None) -> ModelConfig:
+    kw: Dict[str, Any] = {}
+    if attn:
+        kw["attn_variant"] = attn
+    if microbatch:
+        kw["microbatch"] = microbatch
+    if scan_block:
+        kw["scan_block"] = scan_block
+    if remat is not None:
+        kw["remat"] = remat
+    if rwkv_chunk is not None:
+        kw["rwkv_chunk"] = rwkv_chunk
+    if seq_shard is not None:
+        kw["seq_shard"] = seq_shard
+    if attn_impl is not None:
+        kw["attn_impl"] = attn_impl
+    if window_cache is not None:
+        kw["window_cache"] = window_cache
+    if moe_group is not None:
+        kw["moe_group_size"] = moe_group
+    if attn_q_block is not None:
+        kw["attn_q_block"] = attn_q_block
+    if mamba_chunk is not None:
+        kw["mamba_chunk"] = mamba_chunk
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _lower_target(model, shape: InputShape, mesh, run: RunConfig):
+    """Build (fn, args_specs, in_shardings, out_shardings) for the mode."""
+    cfg = model.cfg
+    batch_specs = model.input_specs(shape)
+    batch_sh = rules.named(None, mesh, rules.batch_specs(batch_specs, mesh, cfg))
+
+    if shape.mode == "train":
+        state_specs = train_state_specs(model, run)
+        pspec = rules.param_specs(state_specs.params, mesh, cfg)
+        ospec = {"mu": pspec, "nu": pspec, "count": P()}
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                {"params": pspec, "opt": ospec, "step": P()})
+        from repro.train.step import TrainState
+        state_sh = TrainState(params=state_sh["params"], opt=state_sh["opt"], step=state_sh["step"])
+        step_fn = make_train_step(model, run)
+        fn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None))
+        return fn, (state_specs, batch_specs)
+
+    params_specs = model.param_specs()
+    pspec = rules.param_specs(params_specs, mesh, cfg)
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+
+    if shape.mode == "prefill":
+        cache_sh = rules.named(None, mesh, rules.cache_specs(model.cache_specs(shape), mesh, cfg))
+        fn = jax.jit(lambda p, b: model.prefill(p, b),
+                     in_shardings=(params_sh, batch_sh),
+                     out_shardings=(None, cache_sh))
+        return fn, (params_specs, batch_specs)
+
+    # decode
+    cache_specs = model.cache_specs(shape)
+    cache_sh = rules.named(None, mesh, rules.cache_specs(cache_specs, mesh, cfg))
+    fn = jax.jit(lambda p, b, c: model.decode_step(p, b, c),
+                 in_shardings=(params_sh, batch_sh, cache_sh),
+                 out_shardings=(None, cache_sh))
+    return fn, (params_specs, batch_specs, cache_specs)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               attn: Optional[str] = None, microbatch: Optional[int] = None,
+               scan_block: Optional[int] = None, rwkv_chunk: Optional[int] = None,
+               seq_shard: Optional[bool] = None, attn_impl: Optional[str] = None,
+               window_cache: Optional[bool] = None, moe_group: Optional[int] = None,
+               attn_q_block: Optional[int] = None, mamba_chunk: Optional[int] = None,
+               verbose: bool = True) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = _apply_overrides(get_config(arch), attn, microbatch, scan_block,
+                           rwkv_chunk=rwkv_chunk, seq_shard=seq_shard,
+                           attn_impl=attn_impl, window_cache=window_cache,
+                           moe_group=moe_group, attn_q_block=attn_q_block,
+                           mamba_chunk=mamba_chunk)
+    ok, why = shape_check(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    run = RunConfig()
+    t0 = time.time()
+    result: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "mesh": "x".join(map(str, mesh.devices.shape)),
+                              "multi_pod": multi_pod,
+                              "overrides": {k: v for k, v in (("attn", attn),
+                                            ("microbatch", microbatch),
+                                            ("scan_block", scan_block),
+                                            ("rwkv_chunk", rwkv_chunk),
+                                            ("seq_shard", seq_shard),
+                                            ("attn_impl", attn_impl),
+                                            ("window_cache", window_cache),
+                                            ("moe_group", moe_group),
+                                            ("attn_q_block", attn_q_block)) if v}}
+    rules_override = {"seq": ("model",)} if cfg.seq_shard else None
+    with axis_ctx(mesh, rules_override):
+        fn, args = _lower_target(model, shape, mesh, run)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    # cost_analysis counts while bodies once (loops!) — use the HLO walker,
+    # which applies loop trip counts (see hlo_analysis docstring)
+    stats = hlo_analysis.analyze_hlo(hlo)
+
+    n_chips = mesh.devices.size
+    terms = hlo_analysis.roofline_terms(stats.flops, stats.bytes_accessed,
+                                        stats.collective_bytes)
+    mf = model_flops(cfg, shape)
+
+    result.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            "flops": stats.flops,
+            "bytes_accessed": stats.bytes_accessed,
+            "collective_bytes": stats.collective_bytes,
+            "collectives_by_type": stats.collectives_by_type,
+            "xla_cost_analysis_flops_loop_body_once": float(cost.get("flops", 0.0)),
+        },
+        "memory": _mem_dict(mem),
+        "roofline": {k: v for k, v in terms.items()},
+        "dominant": max(terms, key=terms.get),
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / n_chips) / stats.flops if stats.flops else None,
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} mesh={result['mesh']}]")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {result['memory']}")
+        print(f"  per-device: flops={stats.flops:.3e} bytes={stats.bytes_accessed:.3e} "
+              f"(xla-cost-raw flops={float(cost.get('flops', 0.0)):.3e})")
+        print(f"  collectives/device: { {k: f'{v:.3e}' for k,v in stats.collectives_by_type.items()} } "
+              f"total={stats.collective_bytes:.3e}B")
+        print(f"  roofline terms (s): " + ", ".join(f"{k}={v:.4f}" for k, v in terms.items())
+              + f" -> dominant: {result['dominant']}")
+        print(f"  MODEL_FLOPS={mf:.3e} useful/compiled="
+              f"{result['useful_flops_ratio'] and round(result['useful_flops_ratio'],3)}")
+    return result
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+              "generated_code_size_in_bytes", "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true", help="all (arch x shape) pairs")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attn", choices=["full", "sliding"], default=None)
+    ap.add_argument("--microbatch", type=int)
+    ap.add_argument("--scan-block", type=int)
+    ap.add_argument("--rwkv-chunk", type=int, default=None)
+    ap.add_argument("--seq-shard", action="store_true", default=None)
+    ap.add_argument("--attn-impl", choices=["eager", "chunked"], default=None)
+    ap.add_argument("--window-cache", action="store_true", default=None)
+    ap.add_argument("--moe-group", type=int, default=None)
+    ap.add_argument("--attn-q-block", type=int, default=None)
+    ap.add_argument("--mamba-chunk", type=int, default=None)
+    ap.add_argument("--out", help="append JSON lines here")
+    args = ap.parse_args(argv)
+
+    pairs = ([(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    results = []
+    for arch, shape in pairs:
+        attn = args.attn
+        if args.all and shape == "long_500k" and attn is None:
+            cfg = get_config(arch)
+            if cfg.family in ("dense", "vlm") and cfg.sliding_window == 0:
+                attn = "sliding"  # framework sliding-window variant (DESIGN §4.3)
+        try:
+            r = dryrun_one(arch, shape, multi_pod=args.multi_pod, attn=attn,
+                           microbatch=args.microbatch, scan_block=args.scan_block,
+                           rwkv_chunk=args.rwkv_chunk, seq_shard=args.seq_shard,
+                           attn_impl=args.attn_impl, window_cache=args.window_cache,
+                           moe_group=args.moe_group, attn_q_block=args.attn_q_block,
+                           mamba_chunk=args.mamba_chunk)
+        except Exception as e:  # a failure here is a bug in the system
+            r = {"arch": arch, "shape": shape, "status": "error", "error": f"{type(e).__name__}: {e}"}
+            print(f"[{arch} x {shape}] ERROR {r['error']}", file=sys.stderr)
+        results.append(r)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\n{len(results)} pairs: {sum(r['status']=='ok' for r in results)} ok, "
+          f"{sum(r['status']=='skipped' for r in results)} skipped, {len(bad)} errors")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py forces
+512 host devices via XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "POD_SHAPE", "MULTIPOD_SHAPE"]
+
+POD_SHAPE = (16, 16)            # 256 chips / pod
+MULTIPOD_SHAPE = (2, 16, 16)    # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist, as a 1D 'data' mesh (examples / CI)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,82 @@
+"""Training launcher: `--arch <id>` + input shape + mesh-aware execution.
+
+On this CPU box it runs the smoke config on a 1-device mesh; on a real
+slice the same entry point shards over whatever devices exist (the sharding
+rules are mesh-shape-agnostic). The dry-run path for the production meshes
+lives in dryrun.py (which forces 512 host devices).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 50 --seq 128 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import ARCH_IDS, RunConfig, get_config
+from repro.data.lm import lm_batches
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.sharding import axis_ctx, rules
+from repro.train import init_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--attn-impl", choices=["eager", "chunked"])
+    ap.add_argument("--rwkv-chunk", type=int)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    kw = {}
+    if args.attn_impl:
+        kw["attn_impl"] = args.attn_impl
+    if args.rwkv_chunk is not None:
+        kw["rwkv_chunk"] = args.rwkv_chunk
+    if kw:
+        cfg = dataclasses.replace(cfg, **kw)
+
+    mesh = make_local_mesh()
+    model = build_model(cfg)
+    run = RunConfig(learning_rate=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                    total_steps=args.steps)
+
+    with axis_ctx(mesh):
+        state = init_state(model, jax.random.PRNGKey(run.seed), run)
+        if args.ckpt_dir and (step0 := latest_step(args.ckpt_dir)) is not None:
+            like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                                state.params)
+            state = dataclasses.replace(state, params=restore_checkpoint(
+                args.ckpt_dir, step0, like))
+            print(f"restored step {step0} from {args.ckpt_dir}")
+
+        step_fn = jax.jit(make_train_step(model, run))
+        stream = lm_batches(model, seq=args.seq, batch=args.batch, seed=0)
+        t0 = time.time()
+        for i in range(args.steps):
+            state, met = step_fn(state, next(stream))
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss {float(met['loss']):.4f} "
+                      f"gnorm {float(met['grad_norm']):.2f} "
+                      f"({(i + 1) * args.batch * args.seq / (time.time() - t0):.0f} tok/s)",
+                      flush=True)
+            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, i + 1, state.params)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,205 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment carve-out the mel + conv frontend is a stub: the model
+consumes precomputed frame embeddings (B, n_frames, D) directly. Absolute
+sinusoidal positions (whisper uses no RoPE), pre-LN blocks with GELU MLPs,
+bidirectional encoder self-attention, causal decoder self-attention plus
+cross-attention into the encoder output.
+
+Decode cache: per decoder layer {self k/v (growing), cross k/v (static,
+computed once at prefill from the encoder output)}.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import constrain
+
+__all__ = ["init", "forward", "prefill", "decode_step", "cache_shapes"]
+
+
+def _xattn_init(key, cfg) -> dict:
+    # cross-attention has its own q/kv projections (kv over encoder states)
+    return L.attn_proj_init(key, cfg)
+
+
+def _enc_layer_init(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.pdtype()
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": L.attn_proj_init(k1, cfg),
+        "norm2": L.rmsnorm_init(cfg.d_model, dt),
+        "ffn": L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _dec_layer_init(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.pdtype()
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model, dt),
+        "self_attn": L.attn_proj_init(k1, cfg),
+        "norm_x": L.rmsnorm_init(cfg.d_model, dt),
+        "cross_attn": _xattn_init(k2, cfg),
+        "norm2": L.rmsnorm_init(cfg.d_model, dt),
+        "ffn": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init(key, cfg) -> dict:
+    ke, kd, kemb = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": L.embed_init(kemb, cfg),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "enc_norm": L.rmsnorm_init(cfg.d_model, cfg.pdtype()),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.pdtype()),
+    }
+
+
+def _attn(pp, xq, xkv, cfg, *, causal, q_offset=0, bidirectional=False):
+    bq, sq, _ = xq.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (xq @ pp["wq"]).reshape(bq, sq, hq, dh)
+    k = (xkv @ pp["wk"]).reshape(bq, xkv.shape[1], hkv, dh)
+    v = (xkv @ pp["wv"]).reshape(bq, xkv.shape[1], hkv, dh)
+    q = constrain(q, "batch", None, "heads", None)
+    if cfg.attn_impl == "chunked" and causal and sq > cfg.attn_q_block:
+        out = L.chunked_attention(q, k, v, causal=True, q_offset=q_offset,
+                                  q_block=cfg.attn_q_block)
+    else:
+        out = L.attention_scores(q, k, v, causal=causal, q_offset=q_offset,
+                                 bidirectional=bidirectional)
+    return out.reshape(bq, sq, -1) @ pp["wo"]
+
+
+def encode(params, frames: jnp.ndarray, cfg) -> jnp.ndarray:
+    """frames: (B, n_frames, D) stubbed conv-frontend output."""
+    x = frames.astype(cfg.cdtype())
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(cfg.cdtype())
+    x = constrain(x, "batch", None, "embed")
+
+    def body(x, pp):
+        h = L.rmsnorm(pp["norm1"], x, cfg.norm_eps)
+        x = x + _attn(pp["attn"], h, h, cfg, causal=False, bidirectional=True)
+        h = L.rmsnorm(pp["norm2"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp(pp["ffn"], h)
+        return constrain(x, "batch", None, "embed"), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _decoder(params, tokens, enc_out, cfg):
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+
+    def body(x, pp):
+        h = L.rmsnorm(pp["norm1"], x, cfg.norm_eps)
+        x = x + _attn(pp["self_attn"], h, h, cfg, causal=True)
+        h = L.rmsnorm(pp["norm_x"], x, cfg.norm_eps)
+        x = x + _attn(pp["cross_attn"], h, enc_out, cfg, causal=False, bidirectional=True)
+        h = L.rmsnorm(pp["norm2"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp(pp["ffn"], h)
+        return constrain(x, "batch", None, "embed"), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, batch, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Train forward: batch {"frames": (B,F,D), "tokens": (B,S)} -> (logits, aux)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    x = _decoder(params, batch["tokens"], enc_out, cfg)
+    return L.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def cache_shapes(cfg, batch: int, max_len: int):
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    nl = cfg.n_layers
+    return {
+        "self_k": ((nl, batch, max_len, hkv, dh), cfg.cdtype()),
+        "self_v": ((nl, batch, max_len, hkv, dh), cfg.cdtype()),
+        "cross_k": ((nl, batch, cfg.n_frames, hkv, dh), cfg.cdtype()),
+        "cross_v": ((nl, batch, cfg.n_frames, hkv, dh), cfg.cdtype()),
+    }
+
+
+def prefill(params, batch, cfg) -> Tuple[jnp.ndarray, dict]:
+    """Encode + decoder pass over the prompt, building self+cross caches."""
+    enc_out = encode(params, batch["frames"], cfg)
+    b, s = batch["tokens"].shape
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def body(x, pp):
+        h = L.rmsnorm(pp["norm1"], x, cfg.norm_eps)
+        sk = (h @ pp["self_attn"]["wk"]).reshape(b, s, hkv, dh)
+        sv = (h @ pp["self_attn"]["wv"]).reshape(b, s, hkv, dh)
+        q = (h @ pp["self_attn"]["wq"]).reshape(b, s, hq, dh)
+        out = L.attention_scores(q, sk, sv, causal=True)
+        x = x + out.reshape(b, s, -1) @ pp["self_attn"]["wo"]
+        h = L.rmsnorm(pp["norm_x"], x, cfg.norm_eps)
+        ck = (enc_out @ pp["cross_attn"]["wk"]).reshape(b, -1, hkv, dh)
+        cv = (enc_out @ pp["cross_attn"]["wv"]).reshape(b, -1, hkv, dh)
+        x = x + _cross(pp["cross_attn"], h, ck, cv, cfg)
+        h = L.rmsnorm(pp["norm2"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp(pp["ffn"], h)
+        cache = {"self_k": sk.astype(cfg.cdtype()), "self_v": sv.astype(cfg.cdtype()),
+                 "cross_k": ck.astype(cfg.cdtype()), "cross_v": cv.astype(cfg.cdtype())}
+        return x, cache
+
+    x, cache = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def _cross(pp, h, ck, cv, cfg, q_offset=0):
+    b, sq, _ = h.shape
+    hq, dh = cfg.n_heads, cfg.resolved_head_dim
+    q = (h @ pp["wq"]).reshape(b, sq, hq, dh)
+    out = L.attention_scores(q, ck, cv, causal=False, bidirectional=True)
+    return out.reshape(b, sq, -1) @ pp["wo"]
+
+
+def decode_step(params, batch, cache, cfg) -> Tuple[jnp.ndarray, dict]:
+    """One decoder token. batch: {"tokens": (B,1), "idx": ()}."""
+    idx = batch["idx"]
+    b = batch["tokens"].shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    pos_table = L.sinusoidal_positions(cache["self_k"].shape[2], cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pos_table, idx, 1, axis=0)[None].astype(x.dtype)
+
+    def body(x, xs):
+        pp, c = xs
+        h = L.rmsnorm(pp["norm1"], x, cfg.norm_eps)
+        q = (h @ pp["self_attn"]["wq"]).reshape(b, 1, hq, dh)
+        k = (h @ pp["self_attn"]["wk"]).reshape(b, 1, hkv, dh)
+        v = (h @ pp["self_attn"]["wv"]).reshape(b, 1, hkv, dh)
+        kc = jax.lax.dynamic_update_slice_in_dim(c["self_k"], k.astype(c["self_k"].dtype), idx, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(c["self_v"], v.astype(c["self_v"].dtype), idx, axis=1)
+        out = L.attention_scores(q, kc, vc, causal=True, q_offset=idx)
+        x = x + out.reshape(b, 1, -1) @ pp["self_attn"]["wo"]
+        h = L.rmsnorm(pp["norm_x"], x, cfg.norm_eps)
+        x = x + _cross(pp["cross_attn"], h, c["cross_k"], c["cross_v"], cfg)
+        h = L.rmsnorm(pp["norm2"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp(pp["ffn"], h)
+        return x, {"self_k": kc, "self_v": vc, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits[:, 0], new_cache

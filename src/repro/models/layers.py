@@ -1,0 +1,265 @@
+"""Shared neural building blocks (pure JAX, functional, param-dict based).
+
+Conventions:
+  * params are nested dicts of jnp arrays; stacked layers carry a leading L dim
+  * activations: (B, S, D); attention heads: (B, S, H, dh)
+  * compute dtype from cfg.compute_dtype, fp32 for norms/softmax accumulation
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain, constrain_unchecked
+
+# ---------------------------------------------------------------- init utils
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / (fan_in**0.5)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ RMSNorm
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,S) -> cos/sin (...,S,head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (B,S,H,dh); cos/sin (B,S,half) or (S,half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:  # (B, S, half)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_angles(pos_ids: jnp.ndarray, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL M-RoPE: pos_ids (3, B, S) — temporal/height/width position ids.
+
+    The head_dim//2 frequency slots are split into `sections` (t, h, w); each
+    section takes its angle from the corresponding position-id stream.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos_ids.astype(jnp.float32)[..., None] * freqs  # (3, B, S, half)
+    sec_idx = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    # select per-slot section: ang_sel[b, s, k] = ang[sec_idx[k], b, s, k]
+    onehot = jax.nn.one_hot(sec_idx, 3, dtype=jnp.float32)  # (half, 3)
+    ang_sel = jnp.einsum("tbsk,kt->bsk", ang, onehot)
+    return jnp.cos(ang_sel), jnp.sin(ang_sel)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def attention_scores(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     causal: bool, window: int = 0, q_offset=0,
+                     bidirectional: bool = False,
+                     kv_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Reference grouped-query attention (the jnp oracle path).
+
+    q: (B, Sq, Hq, dh); k, v: (B, Skv, Hkv, dh); Hq = Hkv * G.
+    `q_offset` is the absolute position of q[0] (decode: cache length so far,
+    may be a traced scalar). Sliding `window` > 0 limits lookback.
+    `kv_mask` (Skv,) marks valid cache slots (ring-buffer decode).
+    """
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = dh**-0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+
+    kv_pos = jnp.arange(skv)
+    q_pos = jnp.arange(sq) + q_offset
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if not bidirectional:
+        mask = kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+    if kv_mask is not None:
+        mask = mask & kv_mask[None, :]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, window: int = 0, q_offset=0,
+                      q_block: int = 512) -> jnp.ndarray:
+    """Flash-style streamed attention in pure JAX (§Perf hillclimb B).
+
+    Identical semantics to `attention_scores`, but the query axis is scanned
+    in blocks and each block is `jax.checkpoint`ed, so no (Sq, Skv) score
+    tensor is ever materialised — in HLO or in the backward residuals. The
+    per-block softmax sees all of K (exact, not online), which keeps the
+    math bit-comparable to the eager reference while cutting peak activation
+    bytes by Sq/q_block. (The Pallas `flash_attention` kernel is the TPU
+    end-state; this is its XLA-level shape for the dry-run.)
+    """
+    b, sq, hq, dh = q.shape
+    if sq <= q_block:
+        return attention_scores(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    assert sq % q_block == 0, (sq, q_block)
+    nb = sq // q_block
+
+    def block(qb, start):
+        return attention_scores(qb, k, v, causal=causal, window=window,
+                                q_offset=q_offset + start)
+
+    block = jax.checkpoint(block, prevent_cse=False)
+    qb = q.reshape(b, nb, q_block, hq, dh).swapaxes(0, 1)     # (nb,B,Bq,Hq,dh)
+    starts = jnp.arange(nb) * q_block
+
+    def body(_, xs):
+        qblk, s0 = xs
+        return None, block(qblk, s0)
+
+    _, out = jax.lax.scan(body, None, (qb, starts))
+    return out.swapaxes(0, 1).reshape(b, sq, hq, dh)
+
+
+def attn_proj_init(key, cfg) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh), dt),
+        "wk": dense_init(ks[1], (d, hkv * dh), dt),
+        "wv": dense_init(ks[2], (d, hkv * dh), dt),
+        "wo": dense_init(ks[3], (hq * dh, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dt)
+        p["bk"] = jnp.zeros((hkv * dh,), dt)
+        p["bv"] = jnp.zeros((hkv * dh,), dt)
+    return p
+
+
+def qkv(p: dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    from repro.sharding import current_mesh
+
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    mesh = current_mesh()
+    model_size = mesh.shape.get("model", 1) if mesh is not None else 1
+    if hq % model_size == 0:
+        q = constrain(q.reshape(b, s, hq, dh), "batch", None, "heads", None)
+        k = constrain(k.reshape(b, s, hkv, dh), "batch", None, "kv_heads", None)
+        v = constrain(v.reshape(b, s, hkv, dh), "batch", None, "kv_heads", None)
+    elif 2 * hkv <= model_size:
+        # GQA with few kv heads (smollm 15q/5kv): shard the QUERY sequence,
+        # replicate the small k/v — padding forces resharding copies and
+        # head-replication wastes model_size x the compute (measured 2.8x
+        # better than either; EXPERIMENTS §Perf extras)
+        q = constrain(q.reshape(b, s, hq, dh), "batch", "attn_seq", None, None)
+        k = constrain(k.reshape(b, s, hkv, dh), "batch", None, None, None)
+        v = constrain(v.reshape(b, s, hkv, dh), "batch", None, None, None)
+    else:
+        # MHA-like (qwen1.5 20q/20kv): replicating k/v costs huge backward
+        # psums; uneven padded head sharding (20 -> 32 slots, 1.6x waste)
+        # is the best available layout
+        q = constrain_unchecked(q.reshape(b, s, hq, dh), "batch", None, "heads", None)
+        k = constrain_unchecked(k.reshape(b, s, hkv, dh), "batch", None, "kv_heads", None)
+        v = constrain_unchecked(v.reshape(b, s, hkv, dh), "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+# ------------------------------------------------------------------- SwiGLU
+
+
+def mlp_init(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d, f), dtype),
+        "wi_up": dense_init(k2, (d, f), dtype),
+        "wo": dense_init(k3, (f, d), dtype),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    h = constrain(h, "batch", None, "mlp")
+    return h @ p["wo"]
+
+
+def gelu_mlp_init(key, d: int, f: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key, 2)
+    return {"wi": dense_init(k1, (d, f), dtype), "wo": dense_init(k2, (f, d), dtype)}
+
+
+def gelu_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(x @ p["wi"])
+    h = constrain(h, "batch", None, "mlp")
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------- embeddings
+
+
+def embed_init(key, cfg) -> dict:
+    dt = cfg.pdtype()
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (cfg.padded_vocab, cfg.d_model), dt, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(k2, (cfg.d_model, cfg.padded_vocab), dt)
+    return p
+
+
+def embed(p: dict, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.cdtype())
+    return constrain(x, "batch", None, "embed")
+
+
+def unembed(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    w = p["tok"].T if cfg.tie_embeddings else p["out"]
+    logits = x @ w.astype(cfg.cdtype())
+    return constrain(logits, "batch", None, "vocab")
+
+
+def sinusoidal_positions(s: int, d: int) -> jnp.ndarray:
+    """Whisper-style absolute sinusoidal embeddings (fp32, (S, D))."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / (half - 1)))
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,144 @@
+"""Mamba-1 selective SSM mixer (Jamba's recurrent layer), TPU-adapted.
+
+TPU adaptation (DESIGN.md §3.2 analogue for the backbone): the original CUDA
+kernel is a fused sequential scan in SRAM; on TPU we exploit the *diagonal* A
+to turn the recurrence h_t = a_t * h_{t-1} + b_t into an element-wise
+`jax.lax.associative_scan` (logarithmic depth, XLA-fusable), and replace the
+depthwise causal conv with k shifted adds (no conv lowering).
+
+Train: full-sequence associative scan.  Decode: O(1) state update with a
+cache {"h": (B, d_inner, d_state), "conv": (B, d_conv-1, d_inner)}.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import constrain
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "mamba_cache_shape"]
+
+
+def _dims(cfg):
+    di = cfg.mamba_expand * cfg.d_model
+    return di, cfg.mamba_d_state, cfg.mamba_d_conv, cfg.dt_rank
+
+
+def mamba_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di, n, kconv, rank = _dims(cfg)
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A; dt bias so softplus(dt) spans [1e-3, 1e-1]
+    a_init = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "in_proj": L.dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": (jax.random.normal(ks[1], (kconv, di)) * (1.0 / kconv)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": L.dense_init(ks[2], (di, rank + 2 * n), dt),
+        "dt_proj": L.dense_init(ks[3], (rank, di), dt, scale=rank**-0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(
+            jax.random.uniform(ks[4], (di,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))
+        ))).astype(jnp.float32),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(ks[5], (di, d), dt),
+    }
+
+
+def _ssm_inputs(p, xc: jnp.ndarray, cfg):
+    """xc: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    di, n, _, rank = _dims(cfg)
+    proj = xc @ p["x_proj"]
+    dt_in, b_in, c_in = jnp.split(proj, [rank, rank + n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                               # (..., di)
+    return dt, b_in.astype(jnp.float32), c_in.astype(jnp.float32)
+
+
+def _conv_shifts(p, xin: jnp.ndarray, kconv: int) -> jnp.ndarray:
+    """Causal depthwise conv via shifted adds; xin: (B, S, di)."""
+    out = xin * p["conv_w"][kconv - 1]
+    for j in range(kconv - 1):
+        shift = kconv - 1 - j
+        shifted = jnp.pad(xin, ((0, 0), (shift, 0), (0, 0)))[:, : xin.shape[1]]
+        out = out + shifted * p["conv_w"][j]
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba_apply(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Full-sequence train/prefill path. x: (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    di, n, kconv, _ = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "batch", None, "mlp")
+    xc = _conv_shifts(p, xin, kconv)
+
+    dt, b_in, c_in = _ssm_inputs(p, xc, cfg)
+    a = -jnp.exp(p["a_log"])                                        # (di, n)
+    # discretise: abar = exp(dt * A) (diagonal), bbar*x = dt * B * x
+    abar = jnp.exp(dt[..., None] * a)                               # (B,S,di,n)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_in[:, :, None, :]  # (B,S,di,n)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    c = cfg.mamba_chunk
+    if c and s % c == 0 and s > c:
+        # chunked scan (§Perf): the log-depth associative-scan intermediates
+        # are (B,S,di,n) fp32 per level — chunking bounds them to (B,C,di,n)
+        # and carries only the (B,di,n) boundary state between chunks
+        nc = s // c
+        ab_c = abar.reshape(b, nc, c, *abar.shape[2:]).swapaxes(0, 1)
+        bx_c = bx.reshape(b, nc, c, *bx.shape[2:]).swapaxes(0, 1)
+
+        def chunk(h0, t):
+            ab, bxx = t                                             # (B,C,di,n)
+            af, bf = jax.lax.associative_scan(comb, (ab, bxx), axis=1)
+            hh = af * h0[:, None] + bf                              # carry in
+            return hh[:, -1], hh
+
+        h0 = jnp.zeros_like(abar[:, 0])
+        _, hs = jax.lax.scan(chunk, h0, (ab_c, bx_c))
+        h = hs.swapaxes(0, 1).reshape(*abar.shape)
+    else:
+        _, h = jax.lax.associative_scan(comb, (abar, bx), axis=1)   # (B,S,di,n)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_in) + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+def mamba_cache_shape(cfg, batch: int):
+    di, n, kconv, _ = _dims(cfg)
+    return {
+        "h": (batch, di, n),       # fp32 SSM state
+        "conv": (batch, kconv - 1, di),
+    }
+
+
+def mamba_decode(p: dict, x: jnp.ndarray, cache: dict, cfg) -> Tuple[jnp.ndarray, dict]:
+    """One-token step. x: (B, 1, D); cache per mamba_cache_shape."""
+    b = x.shape[0]
+    di, n, kconv, _ = _dims(cfg)
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                              # (B, di)
+
+    conv_buf = jnp.concatenate([cache["conv"], xin[:, None]], axis=1)  # (B,kconv,di)
+    xc = jnp.einsum("bkd,kd->bd", conv_buf, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, b_in, c_in = _ssm_inputs(p, xc, cfg)                        # (B,di),(B,n),(B,n)
+    a = -jnp.exp(p["a_log"])
+    abar = jnp.exp(dt[..., None] * a)                               # (B,di,n)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_in[:, None, :]
+    h = cache["h"] * abar + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_in) + p["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": conv_buf[:, 1:]}

@@ -1,0 +1,148 @@
+"""Unified model facade + input specs for every (arch x input-shape) pair.
+
+`Model` dispatches on cfg.family to the decoder-only assembly
+(`transformer.py`) or the enc-dec assembly (`encdec.py`) and exposes:
+
+    init(key) -> params
+    loss(params, batch) -> (scalar, metrics)        # train_4k
+    prefill(params, batch) -> (last logits, cache)  # prefill_32k
+    decode_step(params, batch, cache) -> (logits, cache)  # decode_32k / long_500k
+    input_specs(shape) / cache_specs(shape)         # ShapeDtypeStruct stand-ins
+
+input_specs returns ShapeDtypeStructs so the multi-pod dry-run lowers without
+allocating anything; the same specs drive jax.eval_shape-based tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec, transformer
+
+__all__ = ["Model", "build_model", "shape_check"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec.init(key, self.cfg)
+        return transformer.init(key, self.cfg)
+
+    def param_specs(self) -> Any:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -------------------------------------------------------------- train
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if self.cfg.family == "encdec":
+            return encdec.forward(params, batch, self.cfg)
+        return transformer.forward(params, batch, self.cfg)
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if self.cfg.family == "vlm":
+            # vision prefix carries no LM loss
+            logits = logits[:, -labels.shape[1]:]
+        lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None], axis=-1
+        )[..., 0]
+        ce = jnp.mean(lse - ll)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -------------------------------------------------------------- serve
+    def prefill(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.prefill(params, batch, self.cfg)
+        return transformer.prefill(params, batch, self.cfg)
+
+    def decode_step(self, params, batch, cache):
+        if self.cfg.family == "encdec":
+            return encdec.decode_step(params, batch, cache, self.cfg)
+        return transformer.decode_step(params, batch, cache, self.cfg)
+
+    # -------------------------------------------------------------- specs
+    def input_specs(self, shape: InputShape) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = jnp.int32
+        if shape.mode in ("train", "prefill"):
+            if cfg.family == "encdec":
+                batch = {"frames": _sds((b, cfg.n_frames, cfg.d_model), cfg.compute_dtype),
+                         "tokens": _sds((b, s), tok)}
+            elif cfg.family == "vlm":
+                v = cfg.n_vision_tokens
+                batch = {"tokens": _sds((b, s - v), tok),
+                         "vision_embeds": _sds((b, v, cfg.d_model), cfg.compute_dtype),
+                         "pos_ids": _sds((3, b, s), tok)}
+            else:
+                batch = {"tokens": _sds((b, s), tok)}
+            if shape.mode == "train":
+                n_text = (s - cfg.n_vision_tokens) if cfg.family == "vlm" else s
+                batch["labels"] = _sds((b, n_text), tok)
+            return batch
+        # decode: ONE token against a cache of seq_len
+        batch = {"tokens": _sds((b, 1), tok), "idx": _sds((), tok)}
+        if cfg.family == "vlm":
+            batch["pos_ids"] = _sds((3, b, 1), tok)
+        return batch
+
+    def cache_specs(self, shape: InputShape) -> Any:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        mod = encdec if cfg.family == "encdec" else transformer
+        shapes = mod.cache_shapes(cfg, b, s)
+        return jax.tree.map(
+            lambda sh: _sds(*sh), shapes,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple),
+        )
+
+    def make_inputs(self, shape: InputShape, key=None) -> dict:
+        """Materialised random inputs matching input_specs (smoke tests)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        specs = self.input_specs(shape)
+
+        def mk(path_spec):
+            k = jax.random.fold_in(key, hash(str(path_spec.shape)) % (2**31))
+            if jnp.issubdtype(path_spec.dtype, jnp.integer):
+                if path_spec.shape == ():
+                    return jnp.array(0, path_spec.dtype)
+                return jax.random.randint(k, path_spec.shape, 0, max(2, self.cfg.vocab_size - 1),
+                                          dtype=path_spec.dtype)
+            return jax.random.normal(k, path_spec.shape, dtype=jnp.float32).astype(path_spec.dtype)
+
+        batch = jax.tree.map(mk, specs)
+        if "pos_ids" in batch:  # positions must be sane, not random vocab ids
+            s = batch["pos_ids"].shape[-1]
+            batch["pos_ids"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32), batch["pos_ids"].shape).copy()
+        return batch
+
+    def make_cache(self, shape: InputShape) -> Any:
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), self.cache_specs(shape))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def shape_check(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Is this (arch, shape) pair applicable? (DESIGN.md §4.3 skips)."""
+    if shape.name == "long_500k":
+        if cfg.family == "encdec":
+            return False, "whisper decoder is a <=448-token speech decoder; 524k KV is meaningless"
+        if cfg.family in ("dense", "vlm") and cfg.sliding_window == 0 and cfg.attn_variant != "sliding":
+            return False, "full attention at 524k context requires the sliding variant (--attn sliding)"
+    return True, ""

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN (top-k router, capacity-based dense dispatch).
+
+TPU adaptation: dispatch/combine are one-hot einsums (the GSPMD/Mesh-TF
+pattern) rather than sort/ragged gathers — no data-dependent shapes, and the
+expert dimension shards cleanly over the `model` ("expert") mesh axis, turning
+dispatch into the all-to-all the roofline analysis tracks.
+
+Tokens are split into groups of `moe_group_size` so the dispatch/combine
+tensors stay O(B * S * k * capacity_factor * group) instead of O(B * S^2):
+capacity is per-group, C = ceil(g * top_k * capacity_factor / E).
+
+Train path uses capacity dispatch; the decode path (S == 1) computes every
+expert densely and mixes by the routing weights — at one token the dense
+compute is trivially small and avoids degenerate C=1 dispatch tensors.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import constrain
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (d, e), jnp.float32),  # router kept fp32
+        "wi_gate": L.dense_init(ks[1], (e, d, f), dt),
+        "wi_up": L.dense_init(ks[2], (e, d, f), dt),
+        "wo": L.dense_init(ks[3], (e, f, d), dt),
+    }
+
+
+def _aux_losses(logits, probs, expert_mask, cfg):
+    """Switch-style load-balance loss + router z-loss (both fp32 scalars)."""
+    density = jnp.mean(expert_mask.astype(jnp.float32), axis=tuple(range(expert_mask.ndim - 1)))
+    density_proxy = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    lb = cfg.n_experts * jnp.sum(density * density_proxy)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return cfg.router_aux_weight * lb + cfg.router_z_weight * z
+
+
+def _expert_ffn(p, xe: jnp.ndarray, cfg) -> jnp.ndarray:
+    """xe: (E, T, D) -> (E, T, D); per-expert SwiGLU (T = flattened buffer).
+
+    Sharding: expert-parallel when E divides the model axis; otherwise the
+    hidden dim carries the model axis (mixtral's 8 experts on a 16-way axis),
+    matching rules._leaf_spec's weight fallback — the activation constraint
+    must agree or GSPMD replicates the expert compute (§Perf lesson)."""
+    from repro.sharding import current_mesh
+
+    dt = cfg.cdtype()
+    gate = jnp.einsum("etd,edf->etf", xe, p["wi_gate"].astype(dt))
+    up = jnp.einsum("etd,edf->etf", xe, p["wi_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    mesh = current_mesh()
+    model_size = mesh.shape.get("model", 1) if mesh is not None else 1
+    if cfg.n_experts % model_size == 0:
+        h = constrain(h, "expert", None, None)
+    else:
+        h = constrain(h, None, None, "mlp")
+    return jnp.einsum("etf,efd->etd", h, p["wo"].astype(dt))
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg, *, decode: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out, aux_loss). x: (B, S, D)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if decode or s <= k:
+        # dense decode path: compute all experts, mix by masked routing weights
+        topw, topi = jax.lax.top_k(probs, k)                      # (B,S,k)
+        gate = jnp.sum(jax.nn.one_hot(topi, e, dtype=probs.dtype) * topw[..., None], axis=2)
+        gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+        xe = jnp.broadcast_to(x[None], (e, b, s, d)).reshape(e, b * s, d)
+        ye = _expert_ffn(p, xe.astype(cfg.cdtype()), cfg).reshape(e, b, s, d)
+        out = jnp.einsum("ebsd,bse->bsd", ye, gate.astype(cfg.cdtype()))
+        return out.astype(x.dtype), jnp.zeros((), jnp.float32)
+
+    g = min(cfg.moe_group_size, s)
+    assert s % g == 0, (s, g)
+    ng = s // g
+    cap = int(-(-g * k * cfg.capacity_factor // e))
+
+    topw, topi = jax.lax.top_k(probs, k)                          # (B,S,k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+    topw = topw.reshape(b, ng, g, k)
+    topi = topi.reshape(b, ng, g, k)
+
+    # slot positions: k-major priority (all k=0 slots claim capacity first)
+    combine = jnp.zeros((b, ng, g, e, cap), dtype=cfg.cdtype())
+    counts = jnp.zeros((b, ng, e), dtype=jnp.int32)
+    for kk in range(k):
+        e_idx = topi[..., kk]                                      # (B,NG,g)
+        mask_e = jax.nn.one_hot(e_idx, e, dtype=jnp.int32)         # (B,NG,g,E)
+        cnt = jnp.cumsum(mask_e, axis=2)                           # inclusive
+        pos = jnp.take_along_axis(cnt, e_idx[..., None], axis=-1)[..., 0] - 1
+        pos = pos + jnp.take_along_axis(counts, e_idx, axis=-1)    # offset by prior slots... (B,NG,g)
+        within = pos < cap
+        pos_safe = jnp.where(within, pos, cap)                     # overflow -> dropped
+        oh_c = jax.nn.one_hot(pos_safe, cap, dtype=cfg.cdtype())   # (B,NG,g,C)
+        oh_e = mask_e.astype(cfg.cdtype())
+        combine = combine + (
+            topw[..., kk][..., None, None] * oh_e[..., :, None] * oh_c[..., None, :]
+        )
+        counts = counts + jnp.sum(mask_e, axis=2)
+
+    dispatch = (combine > 0).astype(cfg.cdtype())
+    aux = _aux_losses(logits, probs,
+                      jax.nn.one_hot(topi, e, dtype=jnp.float32).sum(axis=-2) > 0, cfg)
+
+    xg = x.reshape(b, ng, g, d).astype(cfg.cdtype())
+    xe = jnp.einsum("bnsec,bnsd->ebncd", dispatch, xg)             # the all-to-all
+    xe = constrain(xe, "expert", "batch", None, None, None)
+    ye = _expert_ffn(p, xe.reshape(e, b * ng * cap, d), cfg).reshape(e, b, ng, cap, d)
+    out = jnp.einsum("bnsec,ebncd->bnsd", combine, ye)
+    return out.reshape(b, s, d).astype(x.dtype), aux

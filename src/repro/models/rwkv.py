@@ -1,0 +1,237 @@
+"""RWKV-6 "Finch" mixer: token-shift + data-dependent decay WKV attention-free
+recurrence [arXiv:2404.05892], plus the squared-ReLU channel-mix.
+
+State per layer is O(1) in sequence length — head-wise outer-product matrices
+S in R^{dh x dh} — which is what makes the `long_500k` decode shape native for
+this architecture (no KV cache at all).
+
+Train path: `lax.scan` over time (the WKV recurrence is not associative in a
+cheap element-wise form because of the rank-1 update; a chunked Pallas kernel
+is the TPU end-state, the scan is the reference the dry-run compiles).
+Decode: single-step state update.
+
+Simplifications vs the released checkpoint (noted in DESIGN.md §3.3 spirit):
+static token-shift mixing coefficients (RWKV-6 uses an extra data-dependent
+LoRA on the lerp); the *decay* w_t keeps its data-dependent LoRA, which is the
+defining Finch feature.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = [
+    "rwkv_time_init", "rwkv_time_apply", "rwkv_time_decode",
+    "rwkv_chan_init", "rwkv_chan_apply", "rwkv_chan_decode",
+    "rwkv_cache_shape",
+]
+
+_LORA = 64  # decay LoRA rank
+
+
+def _heads(cfg):
+    dh = cfg.rwkv_head_dim
+    return cfg.d_model // dh, dh
+
+
+def rwkv_time_init(key, cfg) -> dict:
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 9)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d)).astype(dt),  # r,k,v,g,w shift lerps
+        "wr": L.dense_init(ks[1], (d, d), dt),
+        "wk": L.dense_init(ks[2], (d, d), dt),
+        "wv": L.dense_init(ks[3], (d, d), dt),
+        "wg": L.dense_init(ks[4], (d, d), dt),
+        "w0": jnp.linspace(-6.0, -0.5, d, dtype=jnp.float32),        # base decay
+        "w_lora_a": L.dense_init(ks[5], (d, _LORA), dt),
+        "w_lora_b": (jax.random.normal(ks[6], (_LORA, d)) * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[7], (d,)) * 0.1).astype(jnp.float32),  # bonus
+        "ln_scale": jnp.ones((d,), dt),                              # per-head group norm
+        "wo": L.dense_init(ks[8], (d, d), dt),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray = None) -> jnp.ndarray:
+    """Token shift: x_{t-1} (zeros / `prev` before the first token)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, : x.shape[1]]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(p, x, xs):
+    """r,k,v,g,w input streams via per-channel lerp with the shifted token."""
+    mu = p["mu"].astype(x.dtype)
+    streams = [x + mu[i] * (xs - x) for i in range(5)]
+    return streams  # xr, xk, xv, xg, xw
+
+
+def _decay(p, xw: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent decay w_t in (0,1): exp(-exp(w0 + lora(x)))  (fp32)."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))
+
+
+def _group_norm(p, x: jnp.ndarray, h: int, dh: int, eps: float) -> jnp.ndarray:
+    """Per-head RMS normalisation of the WKV output."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], h, dh).astype(jnp.float32)
+    xh = xh * jax.lax.rsqrt(jnp.mean(xh * xh, axis=-1, keepdims=True) + eps)
+    return (xh.reshape(shp) * p["ln_scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_time_apply(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Full-sequence time-mix. x: (B, S, D).
+
+    Two execution strategies (cfg.rwkv_chunk):
+      0  — faithful sequential `lax.scan`: one (B,H,dh,dh) state update per
+           token. Memory-roofline disaster at long seq (the dh^2 state hits
+           HBM every step) — kept as the reference/baseline path.
+      C>0 — chunked linear-attention form (§Perf hillclimb A): within a chunk
+           of C tokens the recurrence unrolls to
+              out_t = (r_t * P_{t-1}) S_0 + sum_{s<t} ((r_t*P_{t-1}) . (k_s/P_s)) v_s
+                      + (r_t*u . k_t) v_t,
+           with P the within-chunk cumprod of decays — all (C x C) / (C x dh)
+           MXU matmuls; the dh^2 state only touches HBM at chunk boundaries
+           (C-fold less state traffic). This is also the blocking the target
+           Pallas WKV kernel would use (state resident in VMEM per chunk).
+    """
+    b, s, d = x.shape
+    h, dh = _heads(cfg)
+    xs = _shift(x)
+    xr, xk, xv, xg, xw = _mix(p, x, xs)
+    r = (xr @ p["wr"]).reshape(b, s, h, dh).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, s, h, dh).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, s, h, dh).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(b, s, h, dh)                           # (B,S,H,dh)
+    u = p["u"].reshape(h, dh)
+
+    c = cfg.rwkv_chunk
+    if c and s % c == 0 and s > c:
+        out = _wkv_chunked(r, k, v, w, u, c)
+    else:
+        def step(state, t):
+            rt, kt, vt, wt = t                                       # (B,H,dh) each
+            kv = kt[..., :, None] * vt[..., None, :]                 # (B,H,dh,dh)
+            o = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+            state = wt[..., :, None] * state + kv
+            return state, o
+
+        state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        xs_t = jax.tree.map(lambda a: a.swapaxes(0, 1), (r, k, v, w))  # (S,B,H,dh)
+        _, outs = jax.lax.scan(step, state0, xs_t)
+        out = outs.swapaxes(0, 1)                                    # (B,S,H,dh)
+
+    out = out.reshape(b, s, d)
+    out = _group_norm(p, out.astype(x.dtype), h, dh, cfg.norm_eps) * g
+    return out @ p["wo"]
+
+
+def _wkv_chunked(r, k, v, w, u, c: int) -> jnp.ndarray:
+    """Chunked WKV: r/k/v/w (B,S,H,dh) fp32, u (H,dh) -> out (B,S,H,dh).
+
+    Per chunk (see rwkv_time_apply docstring): log-space cumulative decays
+    keep the P ratios stable (w in (0,1), so log w < 0; within a chunk the
+    exponent spread is bounded by C * |log w|_max and C <= 64 keeps it fp32).
+    """
+    b, s, h, dh = r.shape
+    n = s // c
+    rc = r.reshape(b, n, c, h, dh).swapaxes(0, 1)                    # (N,B,C,H,dh)
+    kc = k.reshape(b, n, c, h, dh).swapaxes(0, 1)
+    vc = v.reshape(b, n, c, h, dh).swapaxes(0, 1)
+    wc = w.reshape(b, n, c, h, dh).swapaxes(0, 1)
+
+    def chunk(state, t):
+        rch, kch, vch, wch = t                                       # (B,C,H,dh)
+        logw = jnp.log(jnp.maximum(wch, 1e-38))
+        lp = jnp.cumsum(logw, axis=1)                                # log P_t (inclusive)
+        lp_prev = lp - logw                                          # log P_{t-1}
+        r_t = rch * jnp.exp(lp_prev)                                 # r_t * P_{t-1}
+        k_s = kch * jnp.exp(-lp)                                     # k_s / P_s
+        # intra-chunk attention-like scores over the chunk dim (strict lower)
+        scores = jnp.einsum("bthd,bshd->bhts", r_t, k_s)             # (B,H,C,C)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        out = jnp.einsum("bhts,bshd->bthd", scores, vch)             # (B,C,H,dh)
+        # current-token bonus + carry-in state
+        bonus = jnp.einsum("bthd,bthd->bth", rch * u[None, None], kch)
+        out = out + bonus[..., None] * vch
+        out = out + jnp.einsum("bthk,bhkv->bthv", r_t, state)
+        # state to the next chunk: decay whole chunk + accumulate
+        lp_end = lp[:, -1:]                                          # (B,1,H,dh)
+        k_end = kch * jnp.exp(lp_end - lp)                           # k_s * P_C/P_s
+        new_state = (jnp.exp(lp_end[:, 0])[..., None] * state
+                     + jnp.einsum("bshk,bshv->bhkv", k_end, vch))
+        return new_state, out
+
+    state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    _, outs = jax.lax.scan(chunk, state0, (rc, kc, vc, wc))          # (N,B,C,H,dh)
+    return outs.swapaxes(0, 1).reshape(b, s, h, dh)
+
+
+def rwkv_chan_init(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, d)).astype(dt),          # k, r lerps
+        "wk": L.dense_init(ks[1], (d, f), dt),
+        "wv": L.dense_init(ks[2], (f, d), dt),
+        "wr": L.dense_init(jax.random.fold_in(ks[0], 7), (d, d), dt),
+    }
+
+
+def rwkv_chan_apply(p: dict, x: jnp.ndarray, cfg, prev=None) -> jnp.ndarray:
+    xs = _shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    from repro.sharding import constrain
+    k = constrain(k, "batch", None, "mlp")
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+
+def rwkv_cache_shape(cfg, batch: int):
+    h, dh = _heads(cfg)
+    return {
+        "wkv": (batch, h, dh, dh),   # fp32 outer-product state
+        "shift_t": (batch, cfg.d_model),
+        "shift_c": (batch, cfg.d_model),
+    }
+
+
+def rwkv_time_decode(p: dict, x: jnp.ndarray, cache: dict, cfg) -> Tuple[jnp.ndarray, dict]:
+    """One-token time-mix. x: (B, 1, D)."""
+    b, _, d = x.shape
+    h, dh = _heads(cfg)
+    xt = x[:, 0]
+    xs = cache["shift_t"].astype(xt.dtype)
+    xr, xk, xv, xg, xw = _mix(p, xt[:, None], xs[:, None])
+    r = (xr[:, 0] @ p["wr"]).reshape(b, h, dh).astype(jnp.float32)
+    k = (xk[:, 0] @ p["wk"]).reshape(b, h, dh).astype(jnp.float32)
+    v = (xv[:, 0] @ p["wv"]).reshape(b, h, dh).astype(jnp.float32)
+    g = jax.nn.silu(xg[:, 0] @ p["wg"])
+    w = _decay(p, xw[:, 0]).reshape(b, h, dh)
+    u = p["u"].reshape(h, dh)
+
+    kv = k[..., :, None] * v[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r, cache["wkv"] + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * cache["wkv"] + kv
+    out = out.reshape(b, d).astype(x.dtype)
+    out = _group_norm(p, out, h, dh, cfg.norm_eps) * g
+    out = (out @ p["wo"])[:, None]
+    return out, dict(cache, wkv=new_state, shift_t=xt.astype(jnp.float32))
+
+
+def rwkv_chan_decode(p: dict, x: jnp.ndarray, cache: dict, cfg) -> Tuple[jnp.ndarray, dict]:
+    xt = x[:, 0]
+    out = rwkv_chan_apply(p, x, cfg, prev=cache["shift_c"].astype(xt.dtype))
+    return out, dict(cache, shift_c=xt.astype(jnp.float32))

@@ -1,0 +1,412 @@
+"""Decoder-only transformer assembly: dense / MoE / SSM (RWKV6) / hybrid
+(Jamba) / VLM (Qwen2-VL M-RoPE) from one config-driven pattern machine.
+
+Layers are grouped into a repeating *pattern* of period `p` (dense: p=1;
+Jamba: p=8 — one attention layer per period, MoE every other layer). Params
+for each pattern position are stacked over the `n_rep = n_layers // p`
+repetitions, and the stack is consumed by `lax.scan` — one compiled layer body
+regardless of depth, which keeps the 126-layer llama3-405b HLO small.
+
+Remat is two-level: the rep axis is reshaped to (n_out, scan_block) and the
+inner scan is wrapped in `jax.checkpoint`, so backward saves only n_out
+residual-stream tensors and recomputes inside each block (DESIGN.md §4.2).
+
+Decode threads the KV/SSM cache through the same scan as per-step xs/ys.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv as R
+from repro.sharding import constrain
+
+__all__ = ["pattern_period", "init", "forward", "prefill", "decode_step", "cache_shapes"]
+
+
+# ----------------------------------------------------------------- pattern
+
+
+def pattern_period(cfg) -> int:
+    if cfg.family == "hybrid":
+        p = cfg.attn_period
+        if cfg.n_experts:
+            p = max(p, cfg.moe_every) if p % cfg.moe_every == 0 else p * cfg.moe_every
+        return p
+    if cfg.n_experts and cfg.moe_every > 1:
+        return cfg.moe_every
+    return 1
+
+
+def _pattern_info(cfg):
+    p = pattern_period(cfg)
+    assert cfg.n_layers % p == 0, (cfg.arch_id, cfg.n_layers, p)
+    kinds = cfg.layer_kinds()[:p]
+    moes = [cfg.layer_is_moe(i) for i in range(p)]
+    return p, cfg.n_layers // p, kinds, moes
+
+
+def _effective_window(cfg) -> int:
+    if cfg.sliding_window > 0:
+        return cfg.sliding_window
+    if cfg.attn_variant == "sliding":
+        return 4096
+    return 0
+
+
+# -------------------------------------------------------------------- init
+
+
+def _layer_init(key, cfg, kind: str, is_moe: bool) -> dict:
+    dt = cfg.pdtype()
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": L.rmsnorm_init(cfg.d_model, dt),
+                         "norm2": L.rmsnorm_init(cfg.d_model, dt)}
+    if kind == "attn":
+        p["mixer"] = L.attn_proj_init(k1, cfg)
+    elif kind == "mamba":
+        p["mixer"] = M.mamba_init(k1, cfg)
+    elif kind == "rwkv":
+        p["mixer"] = R.rwkv_time_init(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if is_moe:
+        p["ffn"] = MOE.moe_init(k2, cfg)
+    elif kind == "rwkv":
+        p["ffn"] = R.rwkv_chan_init(k2, cfg)
+    else:
+        p["ffn"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init(key, cfg) -> dict:
+    period, n_rep, kinds, moes = _pattern_info(cfg)
+    keys = jax.random.split(key, period + 2)
+    blocks = {}
+    for pos in range(period):
+        rep_keys = jax.random.split(keys[pos], n_rep)
+        blocks[f"pos{pos}"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, kinds[pos], moes[pos])
+        )(rep_keys)
+    params = {
+        "embed": L.embed_init(keys[-1], cfg),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.pdtype()),
+        "blocks": blocks,
+    }
+    if cfg.family == "vlm":
+        params["vision_proj"] = L.dense_init(keys[-2], (cfg.d_model, cfg.d_model), cfg.pdtype())
+    return params
+
+
+# ------------------------------------------------------------------ layers
+
+
+def _attn_train(pp, x, cfg, rope, window: int):
+    q, k, v = L.qkv(pp, x, cfg)
+    if rope is not None:
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    out = _attention(q, k, v, cfg, causal=True, window=window)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ pp["wo"]
+
+
+def _attention(q, k, v, cfg, **kw):
+    if cfg.attn_impl == "chunked" and q.shape[1] > 1:
+        return L.chunked_attention(q, k, v, q_block=cfg.attn_q_block, **kw)
+    return L.attention_scores(q, k, v, **kw)
+
+
+def _apply_layer_train(pp, x, cfg, kind, is_moe, rope, window):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(pp["norm1"], x, cfg.norm_eps)
+    if cfg.seq_shard:
+        # Megatron-style sequence parallelism: the residual stream lives
+        # seq-sharded over "model"; gather to full sequence exactly at the
+        # mixer/FFN inputs (all-gather) and the trailing "seq" constraint on
+        # the residual add becomes a reduce-scatter — replacing the 2x-cost
+        # all-reduce of plain tensor parallelism (§Perf hillclimb B).
+        h = constrain(h, "batch", None, "embed")
+    if kind == "attn":
+        mix = _attn_train(pp["mixer"], h, cfg, rope, window)
+    elif kind == "mamba":
+        mix = M.mamba_apply(pp["mixer"], h, cfg)
+    else:
+        mix = R.rwkv_time_apply(pp["mixer"], h, cfg)
+    x = constrain(x + mix, "batch", "seq", "embed")
+    h = L.rmsnorm(pp["norm2"], x, cfg.norm_eps)
+    if cfg.seq_shard:
+        h = constrain(h, "batch", None, "embed")
+    if is_moe:
+        ffn, aux = MOE.moe_apply(pp["ffn"], h, cfg)
+    elif kind == "rwkv":
+        ffn = R.rwkv_chan_apply(pp["ffn"], h, cfg)
+    else:
+        ffn = L.mlp(pp["ffn"], h)
+    return constrain(x + ffn, "batch", "seq", "embed"), aux
+
+
+def _run_layers_train(params, x, cfg, rope):
+    period, n_rep, kinds, moes = _pattern_info(cfg)
+    window = _effective_window(cfg)
+    blocks = params["blocks"]
+
+    n_in = min(cfg.scan_block, n_rep)
+    while n_rep % n_in:
+        n_in -= 1
+    n_out = n_rep // n_in
+    blocks2 = jax.tree.map(lambda a: a.reshape(n_out, n_in, *a.shape[1:]), blocks)
+
+    def pattern_body(carry, rep_params):
+        x, aux = carry
+        for pos in range(period):
+            pp = rep_params[f"pos{pos}"]
+            x, a = _apply_layer_train(pp, x, cfg, kinds[pos], moes[pos], rope, window)
+            aux = aux + a
+        return (x, aux), None
+
+    def inner(carry, inner_params):
+        return jax.lax.scan(pattern_body, carry, inner_params)[0]
+
+    if cfg.remat:
+        inner = jax.checkpoint(inner, prevent_cse=False)
+
+    def outer(carry, outer_params):
+        return inner(carry, outer_params), None
+
+    (x, aux), _ = jax.lax.scan(outer, (x, jnp.zeros((), jnp.float32)), blocks2)
+    return x, aux
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _rope_for(cfg, batch, positions):
+    """rope (cos, sin) for given integer positions; None for rwkv / no-rope."""
+    if cfg.family == "ssm" or cfg.rope_theta == 0.0:
+        return None
+    dh = cfg.resolved_head_dim
+    if cfg.family == "vlm":
+        return L.mrope_angles(batch["pos_ids"], dh, cfg.rope_theta, cfg.mrope_sections)
+    return L.rope_angles(positions, dh, cfg.rope_theta)
+
+
+def _embed_inputs(params, batch, cfg):
+    """tokens (+ vision embeds for VLM) -> (B, S_total, D)."""
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    if cfg.family == "vlm":
+        v = batch["vision_embeds"].astype(cfg.cdtype()) @ params["vision_proj"].astype(cfg.cdtype())
+        x = jnp.concatenate([v, x], axis=1)  # vision tokens prefix the text
+    return constrain(x, "batch", None, "embed")
+
+
+def forward(params, batch, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence causal forward. Returns (logits (B,S_total,V), aux)."""
+    x = _embed_inputs(params, batch, cfg)
+    s_total = x.shape[1]
+    rope = _rope_for(cfg, batch, jnp.arange(s_total))
+    x, aux = _run_layers_train(params, x, cfg, rope)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), aux
+
+
+# ------------------------------------------------------------------- cache
+
+
+def cache_shapes(cfg, batch: int, max_len: int):
+    """Pytree of (shape, dtype) for the decode cache (pattern layout).
+
+    With cfg.window_cache and sliding attention, attention caches are ring
+    buffers of length `window` — the 524k-context decode then carries a 4k
+    cache (beyond-paper serving optimisation, §Perf extras)."""
+    period, n_rep, kinds, _ = _pattern_info(cfg)
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    w = _effective_window(cfg)
+    attn_len = min(max_len, w) if (cfg.window_cache and w > 0) else max_len
+    out = {}
+    for pos in range(period):
+        if kinds[pos] == "attn":
+            shp = {"k": ((n_rep, batch, attn_len, hkv, dh), cfg.cdtype()),
+                   "v": ((n_rep, batch, attn_len, hkv, dh), cfg.cdtype())}
+        elif kinds[pos] == "mamba":
+            shp = {k: (( n_rep, *v), jnp.float32) for k, v in M.mamba_cache_shape(cfg, batch).items()}
+        else:
+            shp = {k: ((n_rep, *v), jnp.float32) for k, v in R.rwkv_cache_shape(cfg, batch).items()}
+        out[f"pos{pos}"] = shp
+    return out
+
+
+def _apply_layer_decode(pp, x, cache, idx, cfg, kind, is_moe, rope, window):
+    h = L.rmsnorm(pp["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        q, k, v = L.qkv(pp["mixer"], h, cfg)
+        if rope is not None:
+            cos, sin = rope
+            q = L.apply_rope(q, cos, sin)
+            k = L.apply_rope(k, cos, sin)
+        cache_len = cache["k"].shape[1]
+        ring = cfg.window_cache and window > 0 and cache_len <= window
+        write_at = jax.lax.rem(idx, cache_len) if ring else idx
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                                 write_at, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                                 write_at, axis=1)
+        if ring:
+            # ring buffer: every slot <= idx is one of the last `cache_len`
+            # positions (the window); RoPE was applied at write time, so
+            # ordering inside the buffer is irrelevant to the math
+            slots = jnp.arange(cache_len)
+            kv_mask = (slots <= idx) | (idx >= cache_len)
+            out = _attention(q, kc, vc, cfg, causal=False, bidirectional=True,
+                             kv_mask=kv_mask)
+        else:
+            out = _attention(q, kc, vc, cfg, causal=True, window=window, q_offset=idx)
+        b = x.shape[0]
+        mix = out.reshape(b, 1, -1) @ pp["mixer"]["wo"]
+        cache = {"k": kc, "v": vc}
+    elif kind == "mamba":
+        mix, cache = M.mamba_decode(pp["mixer"], h, cache, cfg)
+    else:
+        mix, cache = R.rwkv_time_decode(pp["mixer"], h, cache, cfg)
+    x = x + mix
+    h = L.rmsnorm(pp["norm2"], x, cfg.norm_eps)
+    if is_moe:
+        ffn, _ = MOE.moe_apply(pp["ffn"], h, cfg, decode=True)
+    elif kind == "rwkv":
+        ffn, cache = R.rwkv_chan_decode(pp["ffn"], h, cache, cfg)
+    else:
+        ffn = L.mlp(pp["ffn"], h)
+    return x + ffn, cache
+
+
+def decode_step(params, batch, cache, cfg) -> Tuple[jnp.ndarray, dict]:
+    """One new token against the cache. batch: {"tokens": (B,1), "idx": ()}.
+
+    Returns (logits (B, V), new cache). `idx` is the current fill length.
+    """
+    idx = batch["idx"]
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    if cfg.family == "vlm":
+        pos = batch.get("pos_ids")  # (3, B, 1) decode position ids
+        rope = L.mrope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.family == "ssm" or cfg.rope_theta == 0.0:
+        rope = None
+    else:
+        rope = L.rope_angles(jnp.array([0]) + idx, cfg.resolved_head_dim, cfg.rope_theta)
+
+    period, n_rep, kinds, moes = _pattern_info(cfg)
+    window = _effective_window(cfg)
+
+    def body(x, xs):
+        rep_params, rep_cache = xs
+        new_cache = {}
+        for pos in range(period):
+            x, new_cache[f"pos{pos}"] = _apply_layer_decode(
+                rep_params[f"pos{pos}"], x, rep_cache[f"pos{pos}"], idx, cfg,
+                kinds[pos], moes[pos], rope, window)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, batch, cfg) -> Tuple[jnp.ndarray, dict]:
+    """Forward over the prompt, building the cache. Returns (last logits, cache).
+
+    Attention K/V are produced by the same scan as ys; SSM/RWKV final states
+    come from dedicated single-pass state builders (cheap relative to logits).
+    For the dry-run shapes, prefill length == cache length.
+    """
+    period, n_rep, kinds, moes = _pattern_info(cfg)
+    window = _effective_window(cfg)
+    x = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    rope = _rope_for(cfg, batch, jnp.arange(s))
+
+    def body(carry, rep_params):
+        x = carry
+        caches = {}
+        for pos in range(period):
+            pp = rep_params[f"pos{pos}"]
+            kind = kinds[pos]
+            h = L.rmsnorm(pp["norm1"], x, cfg.norm_eps)
+            if kind == "attn":
+                q, k, v = L.qkv(pp["mixer"], h, cfg)
+                if rope is not None:
+                    cos, sin = rope
+                    q = L.apply_rope(q, cos, sin)
+                    k = L.apply_rope(k, cos, sin)
+                out = _attention(q, k, v, cfg, causal=True, window=window)
+                mix = out.reshape(b, s, -1) @ pp["mixer"]["wo"]
+                caches[f"pos{pos}"] = {"k": k.astype(cfg.cdtype()), "v": v.astype(cfg.cdtype())}
+            elif kind == "mamba":
+                mix = M.mamba_apply(pp["mixer"], h, cfg)
+                caches[f"pos{pos}"] = _mamba_final_state(pp["mixer"], h, cfg)
+            else:
+                mix = R.rwkv_time_apply(pp["mixer"], h, cfg)
+                caches[f"pos{pos}"] = _rwkv_final_state(pp["mixer"], h, cfg)
+            x = x + mix
+            h = L.rmsnorm(pp["norm2"], x, cfg.norm_eps)
+            if moes[pos]:
+                ffn, _ = MOE.moe_apply(pp["ffn"], h, cfg)
+            elif kind == "rwkv":
+                ffn = R.rwkv_chan_apply(pp["ffn"], h, cfg)
+                caches[f"pos{pos}"]["shift_c"] = h[:, -1].astype(jnp.float32)
+            else:
+                ffn = L.mlp(pp["ffn"], h)
+            x = x + ffn
+        return x, caches
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def _mamba_final_state(pp, h, cfg):
+    """Final (h, conv) state after a full-sequence pass (for prefill->decode)."""
+    di, n, kconv, _ = M._dims(cfg)
+    xz = h @ pp["in_proj"]
+    xin, _ = jnp.split(xz, 2, axis=-1)
+    xc = M._conv_shifts(pp, xin, kconv)
+    dt, b_in, _ = M._ssm_inputs(pp, xc, cfg)
+    a = -jnp.exp(pp["a_log"])
+    abar = jnp.exp(dt[..., None] * a)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_in[:, :, None, :]
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    af, bf = jax.lax.associative_scan(comb, (abar, bx), axis=1)
+    return {"h": bf[:, -1], "conv": xin[:, -(kconv - 1):].astype(jnp.float32)}
+
+
+def _rwkv_final_state(pp, h, cfg):
+    """Final WKV state after a full-sequence pass."""
+    b, s, d = h.shape
+    nh, dh = R._heads(cfg)
+    xs = R._shift(h)
+    _, xk, xv, _, xw = R._mix(pp, h, xs)
+    k = (xk @ pp["wk"]).reshape(b, s, nh, dh).astype(jnp.float32)
+    v = (xv @ pp["wv"]).reshape(b, s, nh, dh).astype(jnp.float32)
+    w = R._decay(pp, xw).reshape(b, s, nh, dh)
+
+    def step(state, t):
+        kt, vt, wt = t
+        return wt[..., :, None] * state + kt[..., :, None] * vt[..., None, :], None
+
+    state0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    xs_t = jax.tree.map(lambda a_: a_.swapaxes(0, 1), (k, v, w))
+    state, _ = jax.lax.scan(step, state0, xs_t)
+    return {"wkv": state, "shift_t": h[:, -1].astype(jnp.float32),
+            "shift_c": jnp.zeros((b, d), jnp.float32)}

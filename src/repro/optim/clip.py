@@ -1,0 +1,18 @@
+"""Global-norm gradient clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["global_norm", "clip_by_global_norm"]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), gn

@@ -1,0 +1,16 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_warmup"]
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    """Linear warmup then cosine decay to floor*peak."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = (s + 1.0) / jnp.maximum(1.0, warmup_steps)  # step 0 trains too
+    prog = jnp.clip((s - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup_steps, warm, cos)

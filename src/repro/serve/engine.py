@@ -1,0 +1,75 @@
+"""Batched serving engine: prefill + iterative decode with a KV/state cache.
+
+The engine drives the model's `prefill` / `decode_step`; sampling is greedy
+or temperature-based. Under the production mesh the cache shardings come from
+`sharding.rules.cache_specs` (sequence-sharded KV — flash-decoding merge).
+On one CPU device it runs the exact same code unsharded (serve_demo example).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ServeEngine", "greedy_sample"]
+
+
+def greedy_sample(logits: jnp.ndarray, key=None, temperature: float = 0.0) -> jnp.ndarray:
+    if temperature and key is not None:
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+    return jnp.argmax(logits, axis=-1)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Any
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(self, params, prompt_batch: dict, max_new_tokens: int,
+                 cache: Optional[Any] = None, key=None) -> Tuple[jnp.ndarray, Any]:
+        """prompt_batch: model input_specs-shaped prompt (tokens (B, S), ...).
+
+        Returns (generated tokens (B, max_new_tokens), final cache).
+        The decode cache must be sized >= S + max_new_tokens; we build it by
+        padding the prefill cache along the sequence axis when needed.
+        """
+        logits, cache = self._prefill(params, prompt_batch)
+        s0 = prompt_batch["tokens"].shape[1]
+        cache = _pad_cache(cache, self.model.cfg, s0 + max_new_tokens)
+        b = prompt_batch["tokens"].shape[0]
+        toks = []
+        tok = greedy_sample(logits, key, self.temperature)[:, None].astype(jnp.int32)
+        for i in range(max_new_tokens):
+            toks.append(tok)
+            step_batch = {"tokens": tok, "idx": jnp.array(s0 + i, jnp.int32)}
+            if self.model.cfg.family == "vlm":
+                pos = jnp.full((3, b, 1), s0 + i, jnp.int32)
+                step_batch["pos_ids"] = pos
+            logits, cache = self._decode(params, step_batch, cache)
+            if key is not None:
+                key = jax.random.fold_in(key, i)
+            tok = greedy_sample(logits, key, self.temperature)[:, None].astype(jnp.int32)
+        return jnp.concatenate(toks, axis=1), cache
+
+
+def _pad_cache(cache, cfg, target_len: int):
+    """Grow attention K/V caches along the sequence axis to target_len."""
+
+    def one(kp, leaf):
+        name = kp[-1].key if hasattr(kp[-1], "key") else str(kp[-1])
+        if name in ("k", "v", "self_k", "self_v") and leaf.ndim >= 4:
+            seq_axis = leaf.ndim - 3
+            cur = leaf.shape[seq_axis]
+            if cur < target_len:
+                padw = [(0, 0)] * leaf.ndim
+                padw[seq_axis] = (0, target_len - cur)
+                return jnp.pad(leaf, padw)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, cache)

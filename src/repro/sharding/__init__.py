@@ -1,0 +1,11 @@
+from repro.sharding.ctx import (
+    axis_ctx,
+    constrain,
+    constrain_unchecked,
+    current_mesh,
+    logical_spec,
+)
+from repro.sharding import rules
+
+__all__ = ["axis_ctx", "constrain", "constrain_unchecked", "current_mesh",
+           "logical_spec", "rules"]

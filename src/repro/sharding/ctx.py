@@ -1,0 +1,121 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, "batch", None, "embed")``). The launcher installs a mesh and a
+logical->mesh translation table; outside any context the annotations are
+no-ops, so the same model code runs on 1 CPU device (smoke tests) and on the
+512-chip production mesh (dry-run) unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# default logical -> mesh-axis translation (single pod). "pod" is prepended to
+# the batch mapping by the multi-pod rules (see rules.py).
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "vocab": ("model",),
+    "embed": None,
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qlen": None,
+    "attn_seq": ("model",),   # fallback TP for attention when the head count
+                              # doesn't divide the model axis: shard the query
+                              # sequence instead of replicating the compute
+    "seq": None,              # residual-stream seq dim; ("model",) enables
+                              # Megatron-style sequence parallelism (§Perf B)
+    "kvlen": ("model",),      # decode KV caches: sequence-sharded over model
+    "expert": ("model",),
+    "fsdp": ("data",),
+}
+
+
+def _get():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_ctx(mesh: Mesh, rules: Optional[dict] = None):
+    prev = _get()
+    _state.ctx = (mesh, dict(DEFAULT_RULES, **(rules or {})))
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _get()
+    return ctx[0] if ctx else None
+
+
+def logical_spec(*names: Optional[str], mesh: Optional[Mesh] = None) -> P:
+    """Translate logical axis names to a PartitionSpec under the active rules.
+
+    A mesh axis is only used if the context mesh actually has it; unknown or
+    unmapped names become replicated dims.
+    """
+    ctx = _get()
+    if ctx is None:
+        return P(*([None] * len(names)))
+    mesh, rules = ctx
+    out = []
+    for nm in names:
+        if nm is None:
+            out.append(None)
+            continue
+        axes = rules.get(nm)
+        if axes is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def constrain_unchecked(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint WITHOUT the divisibility guard — GSPMD pads
+    the uneven dim. Only sane when the padding waste is small relative to the
+    replication the guard would fall back to (e.g. 20 MHA heads on a 16-way
+    axis: 1.6x padding beats 16x replication)."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, logical_spec(*names)))
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active logical rules (no-op outside).
+
+    Divisibility-guarded: a mesh axis is dropped from any dim it does not
+    divide evenly. Uneven (padded) GSPMD shardings — e.g. 8 kv heads on a
+    16-way model axis — otherwise force 'involuntary full rematerialization'
+    resharding copies on every transition (measured 8x collective blow-up on
+    llama3-405b; see EXPERIMENTS.md §Perf).
+    """
+    ctx = _get()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = logical_spec(*names)
+    fixed = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= x.ndim:
+            fixed.append(ax)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        fixed.append(ax if x.shape[i] % prod == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,173 @@
+"""Parameter / batch / cache PartitionSpec assignment (FSDP + TP).
+
+Strategy (DESIGN.md §4.4):
+  * batch dims shard over ("pod", "data") — pods are pure data parallel
+  * tensor parallel over "model": FFN hidden, attention heads, MoE experts,
+    vocab; FSDP over "data" on each parameter's other large dim (ZeRO-3 —
+    XLA inserts the per-layer all-gathers). Optimizer state inherits specs.
+  * every assignment is divisibility-guarded: a mesh axis is only applied to
+    a dim it divides (GSPMD would pad uneven shardings, but jit in_shardings
+    reject them; replicating instead is the honest fallback and shows up in
+    the roofline as the cost it is — e.g. smollm's 15 q-heads or mixtral's
+    8 experts on a 16-way model axis).
+
+Specs are assigned by parameter *name* + path (stacked-layer params live
+under blocks/ or *_layers/) — the param trees are plain dicts.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "named", "DATA_AXES"]
+
+DATA_AXES = ("pod", "data")  # batch axes present in the mesh, in order
+
+
+def _fit(axes: Union[str, Tuple[str, ...], None], dim: int, mesh: Mesh):
+    """Return axes (possibly reduced) that evenly divide `dim`, else None."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    prod = 1
+    for a in axes:
+        prod *= mesh.shape[a]
+    if dim % prod == 0:
+        return axes if len(axes) > 1 else axes[0]
+    # try progressively fewer axes (drop from the left: "pod" first)
+    for start in range(1, len(axes)):
+        sub = axes[start:]
+        prod = 1
+        for a in sub:
+            prod *= mesh.shape[a]
+        if dim % prod == 0:
+            return sub if len(sub) > 1 else sub[0]
+    return None
+
+
+def _batch_axes(mesh: Mesh, dim: int):
+    return _fit(DATA_AXES, dim, mesh)
+
+
+def _leaf_spec(path: str, leaf, mesh: Mesh, cfg) -> P:
+    """Decide a PartitionSpec for one parameter from its name, path, shape."""
+    name = path.split("/")[-1]
+    shape = tuple(leaf.shape)
+    ndim = len(shape)
+    stacked = ("blocks/" in path or "_layers/" in path) and ndim >= 1
+
+    def spec(*dims):
+        """dims for the un-stacked tensor; divisibility-guarded."""
+        dims = ([None] if stacked else []) + list(dims)
+        dims = dims + [None] * (ndim - len(dims))
+        dims = dims[:ndim]
+        out = [_fit(ax, shape[i], mesh) for i, ax in enumerate(dims)]
+        return P(*out)
+
+    if name in ("scale", "conv_b", "dt_bias", "a_log", "d_skip", "u", "w0",
+                "ln_scale", "mu", "b1", "b2", "b3"):
+        return spec(None)
+    if name == "tok":                      # (V, D): vocab over model, embed FSDP
+        return P(_fit("model", shape[0], mesh), _fit("data", shape[1], mesh))
+    if name == "out":                      # (D, V)
+        return P(_fit("data", shape[0], mesh), _fit("model", shape[1], mesh))
+    if name == "vision_proj":
+        return P(_fit("data", shape[0], mesh), _fit("model", shape[1], mesh))
+    if name == "router":                   # (D, E): replicate E (it's tiny)
+        return spec("data", None)
+    if name in ("wi_gate", "wi_up", "wo") and ndim - (1 if stacked else 0) == 3:
+        # MoE expert-stacked (E, D, F) / (E, F, D): expert-parallel over model
+        e = shape[1] if stacked else shape[0]
+        if e % mesh.shape.get("model", 1) == 0:
+            return spec("model", "data", None)
+        # experts don't divide the axis: shard the hidden dim instead
+        if name == "wo":                   # (E, F, D)
+            return spec(None, "model", "data")
+        return spec(None, "data", "model")
+    if name in ("wi_gate", "wi_up", "wi"):
+        return spec("data", "model")       # dense (D, F)
+    if name in ("wq", "wk", "wv", "wg", "wr"):  # (D, H*dh) etc.
+        return spec("data", "model")
+    if name in ("bq", "bk", "bv"):
+        return spec("model")
+    if name == "wo":                       # (H*dh, D)
+        return spec("model", "data")
+    if name == "in_proj":                  # mamba (D, 2*di)
+        return spec("data", "model")
+    if name == "out_proj":                 # mamba (di, D)
+        return spec("model", "data")
+    if name == "conv_w":                   # (k, di)
+        return spec(None, "model")
+    if name == "x_proj":                   # (di, rank+2n)
+        return spec("model", None)
+    if name == "dt_proj":                  # (rank, di)
+        return spec(None, "model")
+    if name in ("w_lora_a", "w_lora_b"):
+        return spec("data", None)
+    return spec("data")                    # fallback: FSDP the first real dim
+
+
+def _tree_paths(tree) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, _: "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp),
+        tree,
+    )
+
+
+def param_specs(param_tree, mesh: Mesh, cfg) -> Any:
+    paths = _tree_paths(param_tree)
+    return jax.tree.map(lambda p, l: _leaf_spec(p, l, mesh, cfg), paths, param_tree)
+
+
+def batch_specs(batch_tree, mesh: Mesh, cfg) -> Any:
+    """Shard batch dims over ("pod","data"); pos_ids have batch at dim 1."""
+
+    def one(path, leaf):
+        name = path.split("/")[-1]
+        if leaf.shape == ():
+            return P()
+        if name == "pos_ids":              # (3, B, S)
+            return P(None, _batch_axes(mesh, leaf.shape[1]),
+                     *([None] * (len(leaf.shape) - 2)))
+        return P(_batch_axes(mesh, leaf.shape[0]),
+                 *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, _tree_paths(batch_tree), batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh, cfg) -> Any:
+    """Decode caches: batch over data axes; KV *sequence* over "model"
+    (flash-decoding layout — the 524k cache fits because of this). Cross-attn
+    caches (1500 frames) and SSM states shard heads/channels instead."""
+
+    def one(path, leaf):
+        name = path.split("/")[-1]
+        shp = tuple(leaf.shape)
+        nd = len(shp)
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            lead = [None] if nd == 5 else []
+            b_i, s_i, h_i = (1, 2, 3) if nd == 5 else (0, 1, 2)
+            seq_ax = _fit("model", shp[s_i], mesh)
+            head_ax = None if seq_ax else _fit("model", shp[h_i], mesh)
+            return P(*lead, _batch_axes(mesh, shp[b_i]), seq_ax, head_ax, None)
+        if name == "h":                    # mamba (L, B, di, n)
+            return P(None, _batch_axes(mesh, shp[1]), _fit("model", shp[2], mesh), None)
+        if name == "wkv":                  # rwkv (L, B, H, dh, dh)
+            return P(None, _batch_axes(mesh, shp[1]), _fit("model", shp[2], mesh), None, None)
+        if name == "conv":                 # (L, B, k-1, di)
+            return P(None, _batch_axes(mesh, shp[1]), None, _fit("model", shp[3], mesh))
+        if name in ("shift_t", "shift_c"):
+            return P(None, _batch_axes(mesh, shp[1]), _fit("model", shp[2], mesh))
+        return P(*([None] * nd))
+
+    return jax.tree.map(one, _tree_paths(cache_tree), cache_tree)
+
+
+def named(_unused, mesh: Mesh, specs) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)

@@ -1,0 +1,3 @@
+from repro.train.step import TrainState, init_state, make_train_step, train_state_specs
+
+__all__ = ["TrainState", "init_state", "make_train_step", "train_state_specs"]

@@ -1,0 +1,100 @@
+"""Training step: loss + grad (with gradient-accumulation microbatching),
+global-norm clip, AdamW update, LR schedule.
+
+Gradient accumulation slices the *leading batch dim* into cfg.microbatch
+chunks and folds them with `lax.scan` — the per-microbatch backward then only
+holds activations for global_batch/microbatch sequences, which together with
+the two-level layer remat is what bounds llama3-405b train_4k memory
+(DESIGN.md §4.2/§4.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm, cosine_warmup
+
+__all__ = ["TrainState", "make_train_step", "train_state_specs"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda aux, ch: TrainState(*ch),
+)
+
+
+def init_state(model, key, run: RunConfig) -> TrainState:
+    params = model.init(key)
+    ocfg = AdamWConfig(b1=run.b1, b2=run.b2, weight_decay=run.weight_decay,
+                       moment_dtype=model.cfg.moment_dtype)
+    return TrainState(params=params, opt=adamw_init(params, ocfg), step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(model, run: RunConfig):
+    return jax.eval_shape(lambda: init_state(model, jax.random.PRNGKey(0), run))
+
+
+def _microbatches(batch: dict, n: int):
+    """Split leading batch dim into n chunks -> leaves (n, b/n, ...)."""
+
+    def split(x):
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (n,))
+        if x.shape[0] % n == 0 and x.ndim >= 1 and x.shape[0] >= n:
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+        # batch at dim 1 (pos_ids: (3, B, S))
+        return jnp.moveaxis(x.reshape(x.shape[0], n, x.shape[1] // n, *x.shape[2:]), 1, 0)
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model, run: RunConfig) -> Callable:
+    cfg: ModelConfig = model.cfg
+    ocfg = AdamWConfig(b1=run.b1, b2=run.b2, weight_decay=run.weight_decay,
+                       moment_dtype=cfg.moment_dtype)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        n = max(1, cfg.microbatch)
+        if n > 1:
+            mb = _microbatches(batch, n)
+
+            def acc(carry, mbatch):
+                gsum, lsum = carry
+                (loss, _), g = grad_fn(state.params, mbatch)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (gzero, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            loss = lsum / n
+        else:
+            (loss, _), grads = grad_fn(state.params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        lr = cosine_warmup(state.step, peak_lr=run.learning_rate,
+                           warmup_steps=run.warmup_steps, total_steps=run.total_steps)
+        new_params, new_opt = adamw_update(grads, state.opt, state.params, ocfg, lr)
+        new_state = TrainState(params=new_params, opt=new_opt, step=state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return train_step

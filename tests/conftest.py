@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# smoke tests and benches run on the single real CPU device; ONLY
+# launch/dryrun.py forces 512 placeholder devices (per assignment).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

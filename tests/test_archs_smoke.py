@@ -1,0 +1,90 @@
+"""Per-architecture smoke tests (assignment deliverable (f)).
+
+Each assigned arch instantiates its REDUCED same-family variant (<= 2 layers,
+d_model <= 512, <= 4 experts) and runs one forward/train step on CPU,
+asserting output shapes and no NaNs. Decode paths are exercised too.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import InputShape
+from repro.models import build_model
+
+TRAIN = InputShape("t", 64, 2, "train")
+PREFILL = InputShape("p", 64, 2, "prefill")
+DECODE = InputShape("d", 64, 2, "decode")
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch, smoke=True)
+            m = build_model(cfg)
+            cache[arch] = (m, m.init(jax.random.PRNGKey(0)))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_is_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    full = get_config(arch)
+    assert full.family == cfg.family  # same family
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_no_nans(arch, built):
+    model, params = built(arch)
+    batch = model.make_inputs(TRAIN)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == model.cfg.padded_vocab
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert not jnp.isnan(logits).any(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_optimizer_step_improves_or_moves(arch, built):
+    from repro.configs.base import RunConfig
+    from repro.train import init_state, make_train_step
+
+    model, _ = built(arch)
+    run = RunConfig(learning_rate=1e-3, warmup_steps=1, total_steps=10)
+    state = init_state(model, jax.random.PRNGKey(1), run)
+    step = jax.jit(make_train_step(model, run))
+    batch = model.make_inputs(TRAIN)
+    new_state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert jnp.isfinite(metrics["grad_norm"]), arch
+    assert int(new_state.step) == 1
+    # parameters actually moved
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                                            - b.astype(jnp.float32)))),
+                         state.params, new_state.params)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_and_decode(arch, built):
+    model, params = built(arch)
+    pb = model.make_inputs(PREFILL)
+    logits, cache = jax.jit(model.prefill)(params, pb)
+    assert logits.shape == (2, model.cfg.padded_vocab)
+    assert not jnp.isnan(logits).any(), arch
+
+    db = model.make_inputs(DECODE)
+    db["idx"] = jnp.array(5, jnp.int32)
+    cache0 = model.make_cache(DECODE)
+    logits2, cache2 = jax.jit(model.decode_step)(params, db, cache0)
+    assert logits2.shape == (2, model.cfg.padded_vocab)
+    assert not jnp.isnan(logits2).any(), arch
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(cache0) == jax.tree_util.tree_structure(cache2)

@@ -1,0 +1,67 @@
+"""Data layer: Friedman generators (paper Sec 3.2 properties), partitioning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.friedman import friedman1, friedman2, friedman3, make_dataset
+from repro.data.partition import column_mask, one_per_agent, round_robin, validate_partition
+
+
+@pytest.mark.parametrize("fn", [friedman1, friedman2, friedman3])
+def test_outcomes_normalised_to_unit_interval(fn):
+    x, y = fn(jax.random.PRNGKey(0), 500)
+    assert x.shape == (500, 5)
+    assert float(y.min()) >= 0.0 and float(y.max()) <= 1.0 + 1e-6
+
+
+def test_friedman2_covariate_ranges():
+    x, _ = friedman2(jax.random.PRNGKey(1), 2000)
+    assert 1.0 <= float(x[:, 0].min()) and float(x[:, 0].max()) <= 100.0
+    assert float(x[:, 1].min()) >= 40 * np.pi and float(x[:, 1].max()) <= 560 * np.pi
+    assert float(x[:, 3].min()) >= 1.0 and float(x[:, 3].max()) <= 11.0
+
+
+def test_nuisance_attribute_is_independent():
+    """X5 does not enter Friedman-2/3: permuting it leaves y unchanged."""
+    key = jax.random.PRNGKey(2)
+    x, y = friedman3(key, 100)
+    # regenerate outcome from formula with x5 shuffled -> same normalised y
+    x2 = x.at[:, 4].set(x[::-1, 4])
+    y2 = jnp.arctan((x2[:, 1] * x2[:, 2] - 1 / (x2[:, 1] * x2[:, 3])) / x2[:, 0])
+    y2 = (y2 - y2.min()) / (y2.max() - y2.min())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-4, atol=1e-5)
+
+
+def test_make_dataset_standardised():
+    xtr, ytr, xte, yte = make_dataset(2, n_train=1000, n_test=500)
+    np.testing.assert_allclose(np.asarray(xtr.mean(0)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(xtr.std(0)), 1.0, atol=1e-2)
+
+
+# ----------------------------------------------------------- partitioning
+
+
+def test_one_per_agent_covers_all():
+    g = one_per_agent(5)
+    validate_partition(g, 5)
+    mask = column_mask(g, 5)
+    np.testing.assert_array_equal(mask, np.eye(5, dtype=np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 12), d=st.integers(1, 12))
+def test_round_robin_partition_valid(m, d):
+    if d > m:
+        d = m  # no empty agents
+    g = round_robin(m, d)
+    validate_partition(g, m)
+    assert column_mask(g, m).sum() == m  # disjoint cover
+
+
+def test_validate_partition_rejects_gaps():
+    with pytest.raises(ValueError):
+        validate_partition([[0], [2]], 3)
+    with pytest.raises(ValueError):
+        validate_partition([[0], []], 1)

@@ -1,0 +1,44 @@
+"""shard_map distributed ICOA: needs 5 host devices, so it runs in a
+subprocess with its own XLA_FLAGS (the main test process keeps 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import jax, jax.numpy as jnp
+from repro.data.friedman import make_dataset
+from repro.data.partition import one_per_agent
+from repro.agents import PolynomialFamily
+from repro.core import icoa
+from repro.core.distributed import run_distributed
+
+assert len(jax.devices()) == 5, jax.devices()
+xtr, ytr, xte, yte = make_dataset(1, n_train=1000, n_test=1000, seed=0)
+xcols = jnp.stack([xtr[:, g] for g in one_per_agent(5)])
+xcols_te = jnp.stack([xte[:, g] for g in one_per_agent(5)])
+fam = PolynomialFamily(n_cols=1, degree=4)
+
+cfg = icoa.ICOAConfig(n_sweeps=6)
+params, w, hist = run_distributed(fam, cfg, xcols, ytr, xcols_te, yte)
+assert abs(float(jnp.sum(w)) - 1.0) < 1e-3, w
+assert hist["test_mse"][-1] < 0.5 * hist["test_mse"][0], hist["test_mse"]
+
+# compressed variant still converges with protection
+cfg2 = icoa.ICOAConfig(n_sweeps=6, alpha=20.0, delta=0.01)
+_, w2, hist2 = run_distributed(fam, cfg2, xcols, ytr, xcols_te, yte)
+assert hist2["test_mse"][-1] < hist2["test_mse"][0], hist2["test_mse"]
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_icoa_five_agents():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=5"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DISTRIBUTED_OK" in out.stdout

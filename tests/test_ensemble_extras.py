@@ -1,0 +1,68 @@
+"""RFF agent family + fault-tolerant ensemble re-weighting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agents import RFFFamily
+from repro.core import ensemble, icoa
+from repro.data.friedman import make_dataset
+from repro.data.partition import one_per_agent
+
+
+def test_rff_family_fits_nonlinear_target():
+    fam = RFFFamily(n_cols=1, n_features=64)
+    x = jnp.linspace(-2, 2, 200)[:, None]
+    y = jnp.sin(3 * x[:, 0]) + 0.3 * x[:, 0] ** 2
+    p = fam.fit(fam.init(None), x, y)
+    mse = float(jnp.mean((fam.predict(p, x) - y) ** 2))
+    assert mse < 0.01, mse
+
+
+def test_icoa_runs_with_rff_agents():
+    xtr, ytr, xte, yte = make_dataset(1, n_train=600, n_test=600, seed=0)
+    groups = one_per_agent(5)
+    xc = jnp.stack([xtr[:, g] for g in groups])
+    xct = jnp.stack([xte[:, g] for g in groups])
+    fam = RFFFamily(n_cols=1, n_features=32)
+    _, w, hist = icoa.run(fam, icoa.ICOAConfig(n_sweeps=5), xc, ytr, xct, yte)
+    assert hist["test_mse"][-1] < hist["test_mse"][0]
+    assert abs(float(jnp.sum(w)) - 1.0) < 1e-4
+
+
+def _rand_cov(seed, d):
+    m = jax.random.normal(jax.random.PRNGKey(seed), (d, 2 * d))
+    return m @ m.T / (2 * d) + 1e-3 * jnp.eye(d)
+
+
+def test_surviving_weights_match_submatrix_solution():
+    a = _rand_cov(1, 6)
+    alive = jnp.array([True, False, True, True, False, True])
+    w = ensemble.surviving_weights(a, alive)
+    assert abs(float(jnp.sum(w)) - 1.0) < 1e-5
+    np.testing.assert_allclose(np.asarray(w)[~np.asarray(alive)], 0.0, atol=1e-7)
+    # compare against explicitly solving the reduced problem
+    idx = np.where(np.asarray(alive))[0]
+    sub = np.asarray(a)[np.ix_(idx, idx)]
+    s = np.linalg.solve(sub, np.ones(len(idx)))
+    np.testing.assert_allclose(np.asarray(w)[idx], s / s.sum(), rtol=1e-4)
+
+
+def test_surviving_weights_all_alive_equals_optimal():
+    a = _rand_cov(2, 4)
+    w = ensemble.surviving_weights(a, jnp.ones(4, bool))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(ensemble.optimal_weights(a)),
+                               rtol=1e-4)
+
+
+def test_agent_failure_degrades_gracefully():
+    """Losing one agent raises the ensemble error but stays near the reduced
+    optimum — the production fault-tolerance story."""
+    a = _rand_cov(3, 5)
+    full = float(ensemble.eta(a))
+    for dead in range(5):
+        alive = jnp.ones(5, bool).at[dead].set(False)
+        w = ensemble.surviving_weights(a, alive)
+        v = float(w @ a @ w)
+        assert v >= full - 1e-6          # can't beat the full ensemble
+        assert v < 10 * full             # but no catastrophic blow-up

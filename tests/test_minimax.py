@@ -1,0 +1,92 @@
+"""Minimax Protection tests (paper Sec 4), incl. hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ensemble, minimax
+
+
+def _rand_cov(seed, d, scale=1.0):
+    m = jax.random.normal(jax.random.PRNGKey(seed), (d, 2 * d)) * scale
+    return m @ m.T / (2 * d) + 1e-4 * jnp.eye(d)
+
+
+# --------------------------------------------------- the inner max (eq. 22)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 6),
+       delta=st.floats(0.0, 0.5))
+def test_worst_case_objective_equals_box_maximum(seed, d, delta):
+    """eq. 23 equals brute-force maximization over the box corners."""
+    a0 = _rand_cov(seed, d)
+    a = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
+    a = a / jnp.sum(a)
+    zeta = float(minimax.robust_objective(a, a0, delta))
+    # adversary: A_ij = A0_ij + delta*sign(a_i a_j) off-diagonal (eq. 22)
+    sgn = jnp.sign(jnp.outer(a, a))
+    adv = a0 + delta * sgn * (1 - jnp.eye(d))
+    direct = float(a @ adv @ a)
+    assert abs(zeta - direct) < 1e-4 * max(1.0, abs(direct))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 6))
+def test_delta_zero_reduces_to_plain_objective(seed, d):
+    a0 = _rand_cov(seed, d)
+    a = jax.random.normal(jax.random.PRNGKey(seed + 2), (d,))
+    a = a / jnp.sum(a)
+    assert abs(float(minimax.robust_objective(a, a0, 0.0)) - float(a @ a0 @ a)) < 1e-5
+
+
+# ------------------------------------------------------- the robust weights
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 5),
+       delta=st.floats(0.001, 0.2))
+def test_robust_weights_feasible_and_no_worse_than_uniform(seed, d, delta):
+    a0 = _rand_cov(seed, d)
+    w = minimax.robust_weights(a0, delta, steps=200)
+    assert abs(float(jnp.sum(w)) - 1.0) < 1e-3
+    uni = jnp.ones((d,)) / d
+    assert (float(minimax.robust_objective(w, a0, delta))
+            <= float(minimax.robust_objective(uni, a0, delta)) + 1e-5)
+
+
+def test_robust_weights_match_closed_form_at_delta_zero():
+    a0 = _rand_cov(7, 5)
+    w = minimax.robust_weights(a0, 0.0, steps=800, lr=0.1)
+    w_star = ensemble.optimal_weights(a0)
+    v = float(minimax.robust_objective(w, a0, 0.0))
+    v_star = float(w_star @ a0 @ w_star)
+    assert v <= v_star * 1.05 + 1e-6
+
+
+def test_large_delta_concentrates_weights():
+    """As delta -> inf the cross penalty forces single-agent concentration."""
+    a0 = _rand_cov(8, 5)
+    w = minimax.robust_weights(a0, 100.0, steps=600, lr=0.05)
+    assert float(jnp.max(jnp.abs(w))) > 0.9
+
+
+# -------------------------------------------- delta_opt and the upper bound
+
+
+def test_delta_opt_monotone_in_alpha_and_capped():
+    n, s2 = 4000, 0.03
+    ds = [minimax.delta_opt(a, n, s2) for a in (1, 10, 100, 1000, 1e9)]
+    for x, ylarger in zip(ds, ds[1:]):
+        assert ylarger >= x - 1e-12
+    assert ds[-1] <= 2 * s2 + 1e-12  # eq. 27 cap
+
+
+def test_upper_bound_monotone_in_alpha():
+    a_ini = _rand_cov(9, 5, scale=0.2)
+    bounds = [minimax.upper_bound(a_ini, a, 4000) for a in (1, 10, 100, 800)]
+    for x, y in zip(bounds, bounds[1:]):
+        assert y >= x - 1e-4
+    # at any alpha the bound dominates the unprotected optimum
+    assert bounds[0] >= float(ensemble.eta(a_ini)) - 1e-5

@@ -1,0 +1,107 @@
+"""Correctness of the §Perf optimization variants: they must be exact
+(or tolerance-equal) re-implementations of the baselines they replace."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.models import build_model
+from repro.models import rwkv as R
+from repro.models.layers import attention_scores, chunked_attention
+
+
+# ------------------------------------------------------- chunked attention
+
+
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("qblock", [32, 64, 128])
+def test_chunked_attention_exact(window, qblock):
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 256, 6, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 256, 2, 32))
+    a = attention_scores(q, k, v, causal=True, window=window)
+    b = chunked_attention(q, k, v, causal=True, window=window, q_block=qblock)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-6)
+
+
+def test_chunked_attention_gradients_match():
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 128, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 128, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 128, 2, 16))
+
+    def loss_e(q):
+        return jnp.sum(attention_scores(q, k, v, causal=True) ** 2)
+
+    def loss_c(q):
+        return jnp.sum(chunked_attention(q, k, v, causal=True, q_block=32) ** 2)
+
+    ge, gc = jax.grad(loss_e)(q), jax.grad(loss_c)(q)
+    np.testing.assert_allclose(np.asarray(ge), np.asarray(gc), rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_model_forward_matches_eager():
+    cfg = get_config("granite-3-2b", smoke=True)
+    model_e = build_model(cfg)
+    model_c = build_model(dataclasses.replace(cfg, attn_impl="chunked", attn_q_block=16))
+    params = model_e.init(jax.random.PRNGKey(0))
+    batch = model_e.make_inputs(InputShape("t", 64, 2, "train"))
+    le, _ = model_e.loss(params, batch)
+    lc, _ = model_c.loss(params, batch)
+    assert abs(float(le) - float(lc)) < 1e-4
+
+
+# ------------------------------------------------------------ chunked WKV
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_wkv_chunked_matches_sequential(chunk):
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    p = R.rwkv_time_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, cfg.d_model))
+    seq = R.rwkv_time_apply(p, x, cfg)
+    chk = R.rwkv_time_apply(p, x, dataclasses.replace(cfg, rwkv_chunk=chunk))
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(chk), atol=1e-4, rtol=1e-4)
+
+
+def test_wkv_chunked_full_model_loss_matches():
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    model_s = build_model(cfg)
+    model_c = build_model(dataclasses.replace(cfg, rwkv_chunk=16))
+    params = model_s.init(jax.random.PRNGKey(0))
+    batch = model_s.make_inputs(InputShape("t", 64, 2, "train"))
+    ls, _ = model_s.loss(params, batch)
+    lc, _ = model_c.loss(params, batch)
+    assert abs(float(ls) - float(lc)) < 1e-3
+
+
+# ----------------------------------------------------- t-corrected delta
+
+
+def test_t_correction_dominates_asymptotic():
+    from repro.core.minimax import delta_opt
+
+    for alpha in (10, 100, 800):
+        plain = delta_opt(alpha, 4000, 0.03)
+        corrected = delta_opt(alpha, 4000, 0.03, t_correct=True)
+        assert corrected >= plain - 1e-12
+    # at tiny m the correction is material (m=5 -> t ~ 2.8 vs 1.96)
+    assert delta_opt(800, 4000, 0.03, t_correct=True) > 1.2 * delta_opt(800, 4000, 0.03)
+
+
+# ------------------------------------------------------ chunked mamba scan
+
+
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_mamba_chunked_matches_full_scan(chunk):
+    from repro.models import mamba as M
+
+    cfg = get_config("jamba-v0.1-52b", smoke=True)
+    p = M.mamba_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, cfg.d_model))
+    full = M.mamba_apply(p, x, cfg)
+    chk = M.mamba_apply(p, x, dataclasses.replace(cfg, mamba_chunk=chunk))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chk), atol=1e-5)

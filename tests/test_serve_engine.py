@@ -1,0 +1,57 @@
+"""ServeEngine behaviour: greedy determinism, temperature sampling, cache
+growth across prefill->generate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeEngine, greedy_sample
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-360m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    return model, params, {"tokens": toks}
+
+
+def test_greedy_generation_deterministic(setup):
+    model, params, prompt = setup
+    eng = ServeEngine(model)
+    out1, _ = eng.generate(params, prompt, max_new_tokens=6)
+    out2, _ = eng.generate(params, prompt, max_new_tokens=6)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 6)
+
+
+def test_temperature_sampling_varies_with_key(setup):
+    model, params, prompt = setup
+    eng = ServeEngine(model, temperature=1.5)
+    out1, _ = eng.generate(params, prompt, max_new_tokens=8, key=jax.random.PRNGKey(1))
+    out2, _ = eng.generate(params, prompt, max_new_tokens=8, key=jax.random.PRNGKey(2))
+    assert not np.array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_greedy_sample_shapes():
+    logits = jnp.array([[0.1, 2.0, -1.0], [3.0, 0.0, 0.0]])
+    out = greedy_sample(logits)
+    np.testing.assert_array_equal(np.asarray(out), [1, 0])
+
+
+def test_generate_matches_stepwise_forward(setup):
+    """Greedy generation must equal repeated full-forward argmax decoding."""
+    model, params, prompt = setup
+    eng = ServeEngine(model)
+    gen, _ = eng.generate(params, prompt, max_new_tokens=4)
+
+    toks = prompt["tokens"]
+    for t in range(4):
+        logits, _ = model.forward(params, {"tokens": toks})
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        np.testing.assert_array_equal(np.asarray(nxt[:, 0]), np.asarray(gen[:, t]),
+                                      err_msg=f"token {t}")
+        toks = jnp.concatenate([toks, nxt], axis=1)

@@ -1,0 +1,118 @@
+"""Sharding rules (divisibility invariants across every arch) and the HLO
+roofline walker (validated against hand-countable compiled modules)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models import build_model
+from repro.sharding import rules
+
+
+class _FakeMesh:
+    """Stand-in with the production mesh's names/sizes (no devices needed)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("meshdef", [{"data": 16, "model": 16},
+                                     {"pod": 2, "data": 16, "model": 16}])
+def test_param_specs_divisible_everywhere(arch, meshdef):
+    """Every assigned spec must evenly divide its dim (jit would reject it)."""
+    mesh = _FakeMesh(meshdef)
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    specs = rules.param_specs(model.param_specs(), mesh, cfg)
+
+    def check(leaf, spec):
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            prod = 1
+            for a in axes:
+                prod *= meshdef[a]
+            assert leaf.shape[i] % prod == 0, (arch, leaf.shape, spec)
+
+    jax.tree.map(check, model.param_specs(), specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "jamba-v0.1-52b", "rwkv6-1.6b",
+                                  "whisper-medium"])
+def test_cache_specs_divisible(arch):
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    for shape_name in ("decode_32k", "long_500k"):
+        from repro.models import shape_check
+        ok, _ = shape_check(cfg, INPUT_SHAPES[shape_name])
+        if not ok:
+            continue
+        cache = model.cache_specs(INPUT_SHAPES[shape_name])
+        specs = rules.cache_specs(cache, mesh, cfg)
+
+        def check(leaf, spec):
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axes = (ax,) if isinstance(ax, str) else ax
+                prod = 1
+                for a in axes:
+                    prod *= mesh.shape[a]
+                assert leaf.shape[i] % prod == 0, (arch, shape_name, leaf.shape, spec)
+
+        jax.tree.map(check, cache, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------- HLO walker
+
+
+def test_hlo_walker_counts_loop_flops_exactly():
+    """A scanned matmul's FLOPs must be multiplied by the trip count."""
+    x = jnp.ones((16, 64), jnp.float32)
+
+    def g(x):
+        def body(c, _):
+            return jnp.tanh(c @ jnp.ones((64, 64), jnp.float32)), None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return jnp.sum(c)
+
+    hlo = jax.jit(g).lower(x).compile().as_text()
+    st = analyze_hlo(hlo)
+    dot_flops = 7 * 2 * 16 * 64 * 64
+    assert dot_flops <= st.flops <= dot_flops * 1.2, st.flops
+
+
+def test_hlo_walker_dot_flops_no_loop():
+    a = jnp.ones((32, 128), jnp.float32)
+    b = jnp.ones((128, 64), jnp.float32)
+    hlo = jax.jit(lambda a, b: a @ b).lower(a, b).compile().as_text()
+    st = analyze_hlo(hlo)
+    assert abs(st.flops - 2 * 32 * 128 * 64) <= 1e-6 * st.flops
+
+
+def test_hlo_walker_nested_loops_multiply():
+    x = jnp.ones((8, 32), jnp.float32)
+
+    def g(x):
+        def inner(c, _):
+            return c @ jnp.ones((32, 32), jnp.float32), None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return jnp.sum(c)
+
+    hlo = jax.jit(g).lower(x).compile().as_text()
+    st = analyze_hlo(hlo)
+    dot = 15 * 2 * 8 * 32 * 32
+    assert dot <= st.flops <= dot * 1.3, st.flops

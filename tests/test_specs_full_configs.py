@@ -1,0 +1,65 @@
+"""Full-size config spec sanity (no allocation — ShapeDtypeStructs only).
+
+The 40 (arch x shape) dry-run pairs compile in launch/dryrun.py (512-device
+subprocess); here we cheaply verify every full config's specs are
+self-consistent on the 1-device test process: params eval_shape, input and
+cache specs, applicability matrix, and MODEL_FLOPS accounting.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.models import build_model, shape_check
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_specs(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    specs = model.param_specs()
+    n = sum(p.size for p in jax.tree.leaves(specs))
+    # published scale sanity (embedding included): within 3x of the name tag
+    expected = {"smollm-360m": 0.36e9, "granite-3-2b": 2.5e9, "whisper-medium": 0.76e9,
+                "mixtral-8x22b": 141e9, "jamba-v0.1-52b": 52e9, "llama3-405b": 405e9,
+                "rwkv6-1.6b": 1.6e9, "phi3.5-moe-42b-a6.6b": 42e9,
+                "qwen2-vl-7b": 7.6e9, "qwen1.5-4b": 4e9}[arch]
+    assert expected / 3 < n < expected * 3, (arch, n / 1e9)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_specs_consistent(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_check(cfg, shape)
+    if not ok:
+        assert why  # every skip carries a reason
+        return
+    model = build_model(cfg)
+    batch = model.input_specs(shape)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in jax.tree.leaves(batch))
+    if shape.mode == "train":
+        assert batch["labels"].shape[0] == shape.global_batch
+    if shape.mode == "decode":
+        assert batch["tokens"].shape == (shape.global_batch, 1)
+        cache = model.cache_specs(shape)
+        leaves = jax.tree.leaves(cache)
+        assert leaves, arch
+        # total cache bytes must fit the 256-chip pod HBM (16GB/chip)
+        total = sum(l.size * l.dtype.itemsize for l in leaves)
+        assert total < 256 * 16e9, (arch, shape_name, total / 1e12)
+
+
+def test_model_flops_scales():
+    from repro.launch import dryrun  # noqa: F401 — import works w/o 512 devices?
+    # (dryrun sets XLA_FLAGS at import; safe here since jax is already
+    #  initialised in this process — the env var has no further effect)
+    from repro.launch.dryrun import model_flops
+    cfg = get_config("llama3-405b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    dc = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr > pf > dc > 0
+    # 6*N*D with N~405e9, D=1M tokens -> ~2.4e18
+    assert 1e18 < tr < 4e18, tr

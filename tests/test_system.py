@@ -1,0 +1,66 @@
+"""End-to-end behaviour tests: the paper pipeline and the LM pipeline run
+together through their public APIs (deliverable (c) integration layer)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.agents import PolynomialFamily
+from repro.configs import get_config
+from repro.configs.base import InputShape, RunConfig
+from repro.core import icoa, minimax
+from repro.data.friedman import make_dataset
+from repro.data.lm import lm_batches
+from repro.data.partition import one_per_agent
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.train import init_state, make_train_step
+
+
+def test_paper_pipeline_end_to_end():
+    """Friedman-1 -> 5 attribute-sharded agents -> ICOA -> Minimax trade-off
+    -> upper bound. The full Section 3+4 story in one run."""
+    xtr, ytr, xte, yte = make_dataset(1, n_train=800, n_test=800, seed=0)
+    groups = one_per_agent(5)
+    xc = jnp.stack([xtr[:, g] for g in groups])
+    xct = jnp.stack([xte[:, g] for g in groups])
+    fam = PolynomialFamily(n_cols=1, degree=4)
+
+    # unprotected full-communication ICOA
+    _, w, hist = icoa.run(fam, icoa.ICOAConfig(n_sweeps=6), xc, ytr, xct, yte)
+    full_err = hist["test_mse"][-1]
+    assert full_err < 0.01
+
+    # compressed + protected: converges with bounded degradation
+    state0 = icoa.init_state(fam, jax.random.split(jax.random.PRNGKey(0), 5), xc, ytr)
+    r0 = ytr[None, :] - state0.f
+    a_ini = (r0 @ r0.T) / r0.shape[1]
+    alpha = 10.0
+    s2max = float(jnp.max(jnp.diag(a_ini)))
+    delta = minimax.delta_opt(alpha, ytr.shape[0], s2max)
+    _, w2, hist2 = icoa.run(fam, icoa.ICOAConfig(n_sweeps=8, alpha=alpha, delta=delta),
+                            xc, ytr, xct, yte)
+    bound = minimax.upper_bound(a_ini, alpha, ytr.shape[0])
+    assert min(hist2["test_mse"]) < 3 * bound  # high-probability bound, slack x3
+    assert hist2["test_mse"][-1] < hist2["test_mse"][0]
+
+
+def test_lm_pipeline_end_to_end():
+    """Train a reduced LM a few steps, checkpoint it, serve greedy tokens."""
+    cfg = get_config("granite-3-2b", smoke=True)
+    model = build_model(cfg)
+    run = RunConfig(learning_rate=1e-3, warmup_steps=2, total_steps=20)
+    state = init_state(model, jax.random.PRNGKey(0), run)
+    step = jax.jit(make_train_step(model, run))
+    it = lm_batches(model, seq=32, batch=4, seed=1)
+    first = None
+    for i in range(10):
+        state, met = step(state, next(it))
+        first = first if first is not None else float(met["loss"])
+    assert float(met["loss"]) < first
+
+    # serve with the trained params
+    engine = ServeEngine(model)
+    prompt = {"tokens": next(it)["tokens"][:2, :16]}
+    toks, _ = engine.generate(state.params, prompt, max_new_tokens=4)
+    assert toks.shape == (2, 4)
+    assert int(toks.max()) < cfg.padded_vocab

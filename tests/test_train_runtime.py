@@ -1,0 +1,126 @@
+"""Training runtime: optimizer correctness, grad-accum equivalence, schedule,
+clipping, checkpoint roundtrip, and a loss-goes-down integration run."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape, RunConfig
+from repro.data.lm import MarkovStream, lm_batches
+from repro.models import build_model
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_warmup, global_norm)
+from repro.train import init_state, make_train_step
+
+
+# ------------------------------------------------------------------ adamw
+
+
+def test_adamw_matches_manual_reference():
+    cfg = AdamWConfig(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    st = adamw_init(p, cfg)
+    new_p, st = adamw_update(g, st, p, cfg, lr=jnp.float32(0.1))
+    m = 0.1 * np.array([0.1, 0.2, -0.3])
+    v = 0.001 * np.array([0.1, 0.2, -0.3]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    ref = np.array([1.0, -2.0, 3.0]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref, rtol=1e-5)
+
+
+def test_weight_decay_shrinks_params():
+    cfg = AdamWConfig(weight_decay=0.1)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.zeros((4,))}
+    st = adamw_init(p, cfg)
+    new_p, _ = adamw_update(g, st, p, cfg, lr=jnp.float32(0.1))
+    assert float(new_p["w"][0]) < 1.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((3,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    gn = float(global_norm(tree))
+    clipped, gn2 = clip_by_global_norm(tree, 1.0)
+    assert abs(gn - float(gn2)) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_cosine_warmup_shape():
+    lrs = [float(cosine_warmup(jnp.array(s), peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) for s in range(0, 100, 5)]
+    assert 0.0 < lrs[0] <= 0.2          # step 0 trains (lr = peak/warmup)
+    assert abs(max(lrs) - 1.0) < 0.1
+    assert lrs[-1] < 0.6 and lrs[-1] >= 0.1 - 1e-6  # floor
+
+
+# -------------------------------------------------------------- grad accum
+
+
+def test_grad_accum_equivalence():
+    import dataclasses
+    cfg = get_config("smollm-360m", smoke=True)
+    shape = InputShape("t", 32, 4, "train")
+    run = RunConfig(learning_rate=1e-3, warmup_steps=1, total_steps=10)
+
+    m1 = build_model(dataclasses.replace(cfg, microbatch=1))
+    m2 = build_model(dataclasses.replace(cfg, microbatch=2))
+    state1 = init_state(m1, jax.random.PRNGKey(0), run)
+    state2 = init_state(m2, jax.random.PRNGKey(0), run)
+    batch = m1.make_inputs(shape)
+    s1, met1 = jax.jit(make_train_step(m1, run))(state1, batch)
+    s2, met2 = jax.jit(make_train_step(m2, run))(state2, batch)
+    assert abs(float(met1["loss"]) - float(met2["loss"])) < 1e-4
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                                        - b.astype(jnp.float32)))),
+                     s1.params, s2.params)
+    assert max(jax.tree.leaves(d)) < 5e-3  # same update modulo accumulation order
+
+
+# ---------------------------------------------------------- loss goes down
+
+
+def test_tiny_lm_loss_decreases():
+    cfg = get_config("smollm-360m", smoke=True)
+    model = build_model(cfg)
+    run = RunConfig(learning_rate=3e-3, warmup_steps=5, total_steps=60)
+    state = init_state(model, jax.random.PRNGKey(0), run)
+    step = jax.jit(make_train_step(model, run))
+    it = lm_batches(model, seq=64, batch=8, seed=0)
+    losses = []
+    for _ in range(40):
+        state, met = step(state, next(it))
+        losses.append(float(met["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+
+
+# --------------------------------------------------------------- markov
+
+
+def test_markov_stream_deterministic():
+    import numpy as np
+    s1 = MarkovStream(100, seed=3).sample(np.random.default_rng(1), 2, 16)
+    s2 = MarkovStream(100, seed=3).sample(np.random.default_rng(1), 2, 16)
+    np.testing.assert_array_equal(s1, s2)
+    assert s1.min() >= 0 and s1.max() < 100
+
+
+# -------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.array(3, jnp.int32)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = restore_checkpoint(str(tmp_path), 7, like)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                                            np.asarray(b, np.float32)),
+                 tree, out)
