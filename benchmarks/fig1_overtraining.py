@@ -1,4 +1,5 @@
-"""Paper Fig. 1: ICOA vs residual refitting convergence/overtraining.
+"""Paper Fig. 1: ICOA vs residual refitting convergence/overtraining,
+driven through repro.api.
 
 The paper's Fig. 1 used CART regression trees, which do not lower to XLA
 (DESIGN.md §3.3); we evaluate the claim with BOTH available families:
@@ -14,38 +15,32 @@ Derived values: final train;test;gap per algorithm per family + curves.
 """
 from __future__ import annotations
 
-from repro.core import baselines, icoa
-from benchmarks.common import load_friedman, mlp_family, poly_family, row, timed
+from repro import api
+from benchmarks.common import row, timed
+
+_FAMILIES = {
+    "poly": (api.AgentSpec(family="polynomial", options=(("degree", 4),)), 4000),
+    "mlp": (api.AgentSpec(family="mlp", options=(("hidden", 24), ("fit_steps", 120))), 600),
+}
 
 
-def _runs(fam, xc, y, xct, yt, cycles):
-    (_, _, rr), t_rr = timed(baselines.residual_refitting, fam, xc, y, xct, yt,
-                             n_cycles=cycles)
-    (_, _, hist), t_ic = timed(icoa.run, fam, icoa.ICOAConfig(n_sweeps=cycles),
-                               xc, y, xct, yt)
-    return rr, t_rr, hist, t_ic
-
-
-def run() -> list[str]:
+def run(cycles: int = 10) -> list[str]:
     out = []
-    for label, fam, n, noise, cycles in [
-        ("poly", poly_family(), 4000, 0.0, 10),
-        ("mlp", mlp_family(), 600, 0.0, 10),
-    ]:
-        from repro.data.friedman import make_dataset
-        from repro.data.partition import one_per_agent
-        import jax.numpy as jnp
-        xtr, ytr, xte, yte = make_dataset(1, n_train=n, n_test=n, seed=0, noise=noise)
-        groups = one_per_agent(5)
-        xc = jnp.stack([xtr[:, g] for g in groups])
-        xct = jnp.stack([xte[:, g] for g in groups])
-        rr, t_rr, hist, t_ic = _runs(fam, xc, ytr, xct, yte, cycles)
-        for alg, tr, te, t in (("refit", rr["train_mse"][-1], rr["test_mse"][-1], t_rr),
-                               ("icoa", hist["train_mse"][-1], hist["test_mse"][-1], t_ic)):
+    for label, (agent, n) in _FAMILIES.items():
+        base = api.ExperimentSpec(
+            data=api.DataSpec(n_train=n, n_test=n, seed=0),
+            agent=agent,
+            solver=api.SolverSpec(n_sweeps=cycles),
+        )
+        refit, t_rr = timed(api.fit, api.spec_with(base, "solver.name",
+                                                   "residual_refitting"))
+        res, t_ic = timed(api.fit, base)
+        for alg, r, t in (("refit", refit, t_rr), ("icoa", res, t_ic)):
+            tr, te = r.history.train_mse[-1], r.history.test_mse[-1]
             out.append(row(f"fig1/{label}/{alg}", t,
                            f"train={tr:.5f};test={te:.5f};gap={te / max(tr, 1e-9):.2f}"))
         out.append(row(f"fig1/{label}/icoa_test_curve", 0,
-                       ";".join(f"{v:.4f}" for v in hist["test_mse"])))
+                       ";".join(f"{v:.4f}" for v in res.history.test_mse)))
         out.append(row(f"fig1/{label}/refit_test_curve", 0,
-                       ";".join(f"{v:.4f}" for v in rr["test_mse"])))
+                       ";".join(f"{v:.4f}" for v in refit.history.test_mse)))
     return out

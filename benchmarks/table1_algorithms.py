@@ -1,5 +1,5 @@
 """Paper Table 1: test MSE of ICOA vs residual refitting vs averaging on
-Friedman-1/2/3 (5 single-attribute agents).
+Friedman-1/2/3 (5 single-attribute agents), driven through repro.api.
 
 Estimator substitution (DESIGN.md §3.3): degree-4 polynomial ridge agents
 instead of CART trees. The paper's qualitative ordering must hold:
@@ -7,21 +7,24 @@ ICOA <= refit << averaging.
 """
 from __future__ import annotations
 
-from repro.core import baselines, icoa
-from benchmarks.common import load_friedman, poly_family, row, timed
+from repro import api
+from benchmarks.common import row, timed
 
 
 def run(n: int = 4000, sweeps: int = 10) -> list[str]:
-    fam = poly_family()
+    base = api.ExperimentSpec(
+        data=api.DataSpec(n_train=n, n_test=n, seed=0),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),
+        solver=api.SolverSpec(n_sweeps=sweeps),
+    )
     out = []
-    for which in (1, 2, 3):
-        xc, y, xct, yt = load_friedman(which, n=n)
-        (_, avg), t_avg = timed(baselines.averaging, fam, xc, y, xct, yt)
-        (_, _, rr), t_rr = timed(baselines.residual_refitting, fam, xc, y, xct, yt,
-                                 n_cycles=sweeps)
-        (_, _, hist), t_ic = timed(icoa.run, fam, icoa.ICOAConfig(n_sweeps=sweeps),
-                                   xc, y, xct, yt)
-        out.append(row(f"table1/friedman{which}/averaging", t_avg, f"{avg['test_mse']:.4f}"))
-        out.append(row(f"table1/friedman{which}/refit", t_rr, f"{rr['test_mse'][-1]:.4f}"))
-        out.append(row(f"table1/friedman{which}/icoa", t_ic, f"{hist['test_mse'][-1]:.4f}"))
+    for spec in api.grid_specs(base, {
+        "data.source": ["friedman1", "friedman2", "friedman3"],
+        "solver.name": ["averaging", "residual_refitting", "icoa"],
+    }):
+        res, t = timed(api.fit, spec)
+        short = {"averaging": "averaging", "residual_refitting": "refit",
+                 "icoa": "icoa"}[spec.solver.name]
+        out.append(row(f"table1/{spec.data.source}/{short}", t,
+                       f"{res.test_mse:.4f}"))
     return out

@@ -1,5 +1,5 @@
 """Paper Table 2: ICOA + Minimax Protection on Friedman-1 over the
-(compression rate alpha) x (protection delta) grid.
+(compression rate alpha) x (protection delta) grid, driven through repro.api.
 
 delta values are scaled to the data (sigma^2_max of the initial residuals)
 because the paper's absolute deltas correspond to a different residual
@@ -14,31 +14,34 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import icoa
-from benchmarks.common import load_friedman, poly_family, row, timed
+from repro import api
+from benchmarks.common import row, timed
 
 
 def run(n: int = 4000, sweeps: int = 8) -> list[str]:
-    fam = poly_family()
-    xc, y, xct, yt = load_friedman(1, n=n)
-
-    # sigma^2_max of the initial (non-cooperative) residuals sets the scale
-    import jax
-    state0 = icoa.init_state(fam, jax.random.split(jax.random.PRNGKey(0), 5), xc, y)
-    s2max = float(jnp.max(jnp.mean((y[None] - state0.f) ** 2, axis=1)))
+    base = api.ExperimentSpec(
+        data=api.DataSpec(n_train=n, n_test=n, seed=0),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),
+        solver=api.SolverSpec(name="icoa", n_sweeps=sweeps),
+    )
+    # sigma^2_max of the initial (non-cooperative) residuals sets the delta
+    # scale; the averaging solver IS the non-cooperative init (same seed)
+    init = api.fit(api.spec_with(base, "solver.name", "averaging"))
+    s2max = float(jnp.max(jnp.mean((init.data.y[None, :] - init.f) ** 2, axis=1)))
 
     alphas = [1.0, 10.0, 50.0, 200.0, 800.0]
     deltas = [0.0, 0.1, 0.5, 1.0, 2.0]      # in units of sigma^2_max
     base_err = None
     out = [row("table2/sigma2_max", 0, f"{s2max:.4f}")]
     for delta_rel in deltas:
-        for alpha in alphas:
-            cfg = icoa.ICOAConfig(n_sweeps=sweeps, alpha=alpha,
-                                  delta=delta_rel * s2max)
-            (_, _, hist), t = timed(icoa.run, fam, cfg, xc, y, xct, yt)
-            err = hist["test_mse"][-1]
+        for spec in api.grid_specs(
+                api.spec_with(base, "solver.delta", delta_rel * s2max),
+                {"solver.alpha": alphas}):
+            res, t = timed(api.fit, spec)
+            err = res.test_mse
             if base_err is None:
                 base_err = err
             label = f"{err:.4f}" if err < 10 * base_err else f"DIVERGED({err:.2g})"
-            out.append(row(f"table2/alpha{alpha:g}/delta{delta_rel:g}", t, label))
+            out.append(row(f"table2/alpha{spec.solver.alpha:g}/delta{delta_rel:g}",
+                           t, label))
     return out

@@ -3,7 +3,8 @@
 Each agent owns its attribute columns on its own device; residual exchange
 is an `all_gather` over the "agents" mesh axis, with Minimax-Protection
 compression shrinking the payload alpha-fold — the paper's trade-off as a
-collective schedule.
+collective schedule. The ONLY change from the local quickstart is
+`backend=shard_map` in the spec.
 
     PYTHONPATH=src python examples/icoa_distributed.py
 (the XLA_FLAGS line below must run before jax initialises)
@@ -13,31 +14,32 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=5")
 
 import jax                                            # noqa: E402
-import jax.numpy as jnp                               # noqa: E402
 
-from repro.agents import PolynomialFamily             # noqa: E402
-from repro.core import icoa                           # noqa: E402
-from repro.core.distributed import run_distributed    # noqa: E402
-from repro.data.friedman import make_dataset          # noqa: E402
-from repro.data.partition import one_per_agent        # noqa: E402
+from repro import api                                 # noqa: E402
+
+BASE = api.ExperimentSpec(
+    data=api.DataSpec(source="friedman1", n_train=2000, n_test=2000, seed=0),
+    agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),
+    solver=api.SolverSpec(name="icoa", n_sweeps=8),
+    backend=api.BackendSpec(name="shard_map"),
+)
 
 
 def main():
     print(f"devices: {jax.devices()}")
-    xtr, ytr, xte, yte = make_dataset(1, n_train=2000, n_test=2000, seed=0)
-    groups = one_per_agent(5)
-    xc = jnp.stack([xtr[:, g] for g in groups])
-    xct = jnp.stack([xte[:, g] for g in groups])
-    fam = PolynomialFamily(n_cols=1, degree=4)
-
-    for alpha, delta, label in [
-        (1.0, 0.0, "full residual exchange (O(N D^2) per sweep)"),
-        (20.0, 0.01, "5% exchange + Minimax Protection"),
-        (100.0, 0.02, "1% exchange + Minimax Protection"),
-    ]:
-        cfg = icoa.ICOAConfig(n_sweeps=8, alpha=alpha, delta=delta)
-        _, w, hist = run_distributed(fam, cfg, xc, ytr, xct, yte)
-        print(f"{label:52} test MSE {hist['test_mse'][0]:.4f} -> {hist['test_mse'][-1]:.4f}")
+    results = api.sweep(BASE, {
+        "solver.alpha": [1.0, 20.0, 100.0],
+        "solver.delta": [0.0, 0.01, 0.02],
+    }, paired=True)
+    labels = [
+        "full residual exchange (O(N D^2) per sweep)",
+        "5% exchange + Minimax Protection",
+        "1% exchange + Minimax Protection",
+    ]
+    for label, r in zip(labels, results):
+        tm = r.history.test_mse
+        print(f"{label:52} test MSE {tm[0]:.4f} -> {tm[-1]:.4f}"
+              f"   wire {r.history.total_bytes / 1e6:.2f} MB")
 
 
 if __name__ == "__main__":

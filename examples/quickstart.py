@@ -1,42 +1,39 @@
-"""Quickstart: the paper in 40 lines.
+"""Quickstart: the paper in 30 lines, via the declarative experiment API.
 
 Five agents each see ONE attribute of Friedman-1; they cooperate through
 residual exchange only (ICOA) and we compare against the paper's baselines.
+Every run is one `ExperimentSpec` handed to `api.fit` — swap the solver,
+backend, or protection level without changing any wiring.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
+from repro import api
 
-from repro.agents import PolynomialFamily
-from repro.core import baselines, icoa
-from repro.data.friedman import make_dataset
-from repro.data.partition import one_per_agent
+BASE = api.ExperimentSpec(
+    # Friedman-1: y = 10 sin(pi x1 x2) + 20 (x3-.5)^2 + 10 x4 + 5 x5
+    data=api.DataSpec(source="friedman1", n_train=2000, n_test=2000, seed=0),
+    agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),  # H_i: quartic ridge
+    solver=api.SolverSpec(name="icoa", n_sweeps=10),
+)
 
 
 def main():
-    # Friedman-1: y = 10 sin(pi x1 x2) + 20 (x3-.5)^2 + 10 x4 + 5 x5
-    xtr, ytr, xte, yte = make_dataset(1, n_train=2000, n_test=2000, seed=0)
-    groups = one_per_agent(5)                       # agent i sees attribute i
-    xc = jnp.stack([xtr[:, g] for g in groups])     # (D, N, 1)
-    xct = jnp.stack([xte[:, g] for g in groups])
-    family = PolynomialFamily(n_cols=1, degree=4)   # H_i: quartic ridge
+    avg = api.fit(api.spec_with(BASE, "solver.name", "averaging"))
+    print(f"averaging   test MSE: {avg.test_mse:.4f}   (paper: .0277)")
 
-    _, avg = baselines.averaging(family, xc, ytr, xct, yte)
-    print(f"averaging   test MSE: {avg['test_mse']:.4f}   (paper: .0277)")
+    refit = api.fit(api.spec_with(BASE, "solver.name", "residual_refitting"))
+    print(f"refit       test MSE: {refit.test_mse:.4f}   (paper: .0047)")
 
-    _, _, rr = baselines.residual_refitting(family, xc, ytr, xct, yte, n_cycles=10)
-    print(f"refit       test MSE: {rr['test_mse'][-1]:.4f}   (paper: .0047)")
-
-    cfg = icoa.ICOAConfig(n_sweeps=10)
-    _, weights, hist = icoa.run(family, cfg, xc, ytr, xct, yte)
-    print(f"ICOA        test MSE: {hist['test_mse'][-1]:.4f}   (paper: .0047)")
-    print(f"ICOA weights (sum=1): {[round(float(w), 3) for w in weights]}")
+    res = api.fit(BASE)
+    print(f"ICOA        test MSE: {res.test_mse:.4f}   (paper: .0047)")
+    print(f"ICOA weights (sum=1): {[round(float(w), 3) for w in res.weights]}")
 
     # the trade-off: transmit 1% of residuals, protect with delta
-    cfg_mm = icoa.ICOAConfig(n_sweeps=10, alpha=100.0, delta=0.01)
-    _, _, hist_mm = icoa.run(family, cfg_mm, xc, ytr, xct, yte)
-    print(f"ICOA+MM(alpha=100) test MSE: {hist_mm['test_mse'][-1]:.4f} "
-          f"with 1% of the residual traffic")
+    mm = api.fit(api.replace(BASE, solver=api.replace(
+        BASE.solver, alpha=100.0, delta=0.01)))
+    saved = 1.0 - mm.history.total_bytes / res.history.total_bytes
+    print(f"ICOA+MM(alpha=100) test MSE: {mm.test_mse:.4f} "
+          f"with {saved:.0%} less residual traffic")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,50 @@
+"""repro.api — one declarative entry point for every solver, backend and
+protection level (DESIGN: the facade over core/).
+
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        data=api.DataSpec(source="friedman1", n_train=2000, n_test=2000),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),
+        solver=api.SolverSpec(name="icoa", n_sweeps=10, alpha=100.0, delta=0.01),
+        backend=api.BackendSpec(name="local"),
+    )
+    result = api.fit(spec)
+    result.test_mse, result.history.eta, result.history.total_bytes
+
+Swap `solver.name` for "averaging" / "residual_refitting", or `backend.name`
+for "shard_map" (one device per agent), without touching anything else.
+`api.sweep(spec, {"solver.alpha": [1, 10, 100]})` runs trade-off grids;
+`result.save(dir)` / `api.load(dir)` persist through checkpoint.io.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.api.io import load_result as load
+from repro.api.io import save_result
+from repro.api.result import History, Result
+from repro.api.solvers import (SOLVERS, Solver, comm_floats_per_sweep,
+                               register_solver, run_solver)
+from repro.api.specs import (AgentSpec, BackendSpec, DataSpec, Dataset,
+                             ExperimentSpec, SolverSpec, SpecError,
+                             spec_from_dict, spec_to_dict)
+from repro.api.sweep import grid_specs, spec_with, sweep, zip_specs
+
+__all__ = [
+    "AgentSpec", "BackendSpec", "DataSpec", "Dataset", "ExperimentSpec",
+    "History", "Result", "Solver", "SOLVERS", "SpecError",
+    "comm_floats_per_sweep", "fit", "grid_specs", "load", "register_solver",
+    "replace", "save_result", "spec_from_dict", "spec_to_dict", "spec_with",
+    "sweep", "zip_specs",
+]
+
+
+def fit(spec: ExperimentSpec) -> Result:
+    """Run one experiment end-to-end: build data, resolve the agent family,
+    dispatch to the registered solver on the requested backend, and return
+    the standardised Result."""
+    spec.validate()
+    data = spec.data.build()
+    family = spec.agent.resolve(n_cols=data.xcols.shape[-1])
+    return run_solver(spec, data, family)

@@ -1,0 +1,67 @@
+"""Result persistence on top of checkpoint.io (host-gather npz, no deps).
+
+Layout of a saved result directory:
+
+    result.json        spec (JSON round-trip of the dataclass tree) + history
+    ckpt_00000000.npz  params / weights / f  (flattened pytree, compressed)
+    ckpt_00000000.json checkpoint manifest (written by checkpoint.io)
+
+`load` rebuilds the param-tree STRUCTURE from the spec alone (family.init is
+deterministic and shape-complete), so a result restores without touching the
+training data; the in-memory `Dataset` is rebuilt lazily only because
+`Result.data` consumers (upper bounds) ask for it.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckpt_io
+
+from repro.api.result import History, Result
+from repro.api.specs import ExperimentSpec, spec_from_dict, spec_to_dict
+
+__all__ = ["save_result", "load_result"]
+
+_META = "result.json"
+
+
+def save_result(directory: str, result: Result) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tree = {"params": result.params,
+            "weights": result.weights,
+            "f": result.f}
+    ckpt_io.save_checkpoint(directory, 0, tree)
+    with open(os.path.join(directory, _META), "w") as fh:
+        json.dump({"spec": spec_to_dict(result.spec),
+                   "history": result.history.as_dict()}, fh, indent=1)
+    return directory
+
+
+def load_result(directory: str, with_data: bool = True) -> Result:
+    """Restore a saved Result. `with_data=True` re-materialises the Dataset
+    from the spec (deterministic), enabling predict-on-train diagnostics and
+    `minimax_upper_bound`; pass False to skip data generation."""
+    with open(os.path.join(directory, _META)) as fh:
+        meta = json.load(fh)
+    spec: ExperimentSpec = spec_from_dict(meta["spec"])
+    spec.validate()
+
+    data = spec.data.build() if with_data else None
+    groups = spec.data.groups
+    d, n_cols = len(groups), len(groups[0])
+    family = spec.agent.resolve(n_cols)
+
+    keys = jax.random.split(jax.random.PRNGKey(spec.seed), d)
+    like = {
+        "params": jax.vmap(family.init)(keys),
+        "weights": jnp.zeros((d,), jnp.float32),
+        "f": jnp.zeros((d, spec.data.n_train), jnp.float32),
+    }
+    tree = ckpt_io.restore_checkpoint(directory, 0, like)
+    return Result(spec=spec, family=family, params=tree["params"],
+                  weights=tree["weights"], f=tree["f"],
+                  history=History.from_dict(meta["history"]), data=data)

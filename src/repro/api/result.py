@@ -1,0 +1,106 @@
+"""Standardised run output: every solver/backend combination returns the same
+`Result`, so examples and benchmarks never touch solver-specific tuples again.
+
+`History` is uniform across solvers: per-record `train_mse` / `test_mse` /
+`eta` / `bytes_transmitted`. `eta` is always the MSE an optimally re-weighted
+ensemble of the current agents would achieve (paper eq. 11) — for averaging
+and residual refitting this is a diagnostic (they combine uniformly / by
+summation), for ICOA it is the objective itself. `bytes_transmitted` is the
+analytic wire cost of the sweep that produced the record (record 0 — the
+non-cooperative init — is always 0), giving the paper's transmission /
+performance trade-off directly as `(cumulative_bytes, test_mse)` pairs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov
+from repro.core import ensemble, icoa, minimax
+
+from repro.api.specs import Dataset, ExperimentSpec
+
+__all__ = ["History", "Result"]
+
+
+@dataclasses.dataclass
+class History:
+    train_mse: List[float] = dataclasses.field(default_factory=list)
+    test_mse: List[float] = dataclasses.field(default_factory=list)
+    eta: List[float] = dataclasses.field(default_factory=list)
+    bytes_transmitted: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_transmitted))
+
+    def as_dict(self) -> Dict[str, List[float]]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, List[float]]) -> "History":
+        return cls(**{f.name: list(d.get(f.name, [])) for f in dataclasses.fields(cls)})
+
+
+@dataclasses.dataclass
+class Result:
+    spec: ExperimentSpec
+    family: Any               # resolved agent family (static dataclass)
+    params: Any               # stacked agent params, leading dim D
+    weights: jnp.ndarray      # (D,) combination weights (sum-combining solvers
+    #                           use literal ones, so `weights @ f` is uniform)
+    f: jnp.ndarray            # (D, N_train) final per-agent train predictions
+    history: History
+    data: Optional[Dataset] = None   # in-memory only; never serialised
+
+    # ------------------------------------------------------------- evaluate
+
+    @property
+    def groups(self) -> List[List[int]]:
+        return self.spec.data.groups
+
+    @property
+    def train_mse(self) -> float:
+        return self.history.train_mse[-1]
+
+    @property
+    def test_mse(self) -> Optional[float]:
+        return self.history.test_mse[-1] if self.history.test_mse else None
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Ensemble prediction for a full (N, M) covariate matrix: slice each
+        agent's columns, predict per agent, combine with the run's weights."""
+        xcols = jnp.stack([x[:, g] for g in self.groups])
+        preds = jax.vmap(self.family.predict)(self.params, xcols)
+        return ensemble.combine(self.weights, preds)
+
+    def mse(self, x: jnp.ndarray, y: jnp.ndarray) -> float:
+        return float(jnp.mean((y - self.predict(x)) ** 2))
+
+    def minimax_upper_bound(self, alpha: Optional[float] = None) -> float:
+        """Paper eq. 28: the high-probability test-error upper bound at
+        compression rate `alpha` (default: the rate this run used), computed
+        from the PRE-cooperation residual covariance — every ICOA sweep only
+        improves on it w.h.p."""
+        if self.data is None:
+            raise ValueError("minimax_upper_bound needs the in-memory Dataset "
+                             "(loaded results drop it; re-run spec.data.build())")
+        if alpha is None:
+            alpha = self.spec.solver.alpha
+        d = self.data.xcols.shape[0]
+        keys = jax.random.split(jax.random.PRNGKey(self.spec.seed), d)
+        state0 = icoa.init_state(self.family, keys, self.data.xcols, self.data.y)
+        a_ini = cov.gram(self.data.y[None, :] - state0.f)
+        return minimax.upper_bound(a_ini, alpha, self.data.y.shape[0])
+
+    # ---------------------------------------------------------- persistence
+
+    def save(self, directory: str) -> str:
+        """Checkpoint params/weights/f + the full spec and history as JSON.
+        Restore with `repro.api.load(directory)`."""
+        from repro.api import io  # local import: io imports Result
+
+        return io.save_result(directory, self)

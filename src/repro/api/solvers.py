@@ -1,0 +1,175 @@
+"""Solver protocol + registry: one `fit(spec) -> Result` for every algorithm.
+
+Each registered solver wraps an existing core implementation — nothing here
+re-derives math. A solver receives the full spec plus the materialised
+`Dataset` and resolved family, dispatches on `spec.backend`, and returns the
+standardised `Result` (uniform History incl. analytic wire bytes).
+
+Third-party solvers can join the registry via `@register_solver("name")`;
+`repro.api.fit` resolves `spec.solver.name` here.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, distributed, ensemble, icoa
+from repro.core import covariance as cov
+
+from repro.api.result import History, Result
+from repro.api.specs import Dataset, ExperimentSpec, SolverSpec, SpecError
+
+__all__ = ["Solver", "SOLVERS", "register_solver", "comm_floats_per_sweep", "run_solver"]
+
+
+class Solver(Protocol):
+    """fit(spec, data, family) -> Result. Must honour spec.backend."""
+
+    def __call__(self, spec: ExperimentSpec, data: Dataset, family) -> Result: ...
+
+
+SOLVERS: Dict[str, Solver] = {}
+
+
+def register_solver(name: str) -> Callable[[Solver], Solver]:
+    def deco(fn: Solver) -> Solver:
+        SOLVERS[name] = fn
+        return fn
+
+    return deco
+
+
+def run_solver(spec: ExperimentSpec, data: Dataset, family) -> Result:
+    if spec.solver.name not in SOLVERS:
+        raise SpecError(f"unknown solver {spec.solver.name!r}; "
+                        f"registered: {sorted(SOLVERS)}")
+    return SOLVERS[spec.solver.name](spec, data, family)
+
+
+# --------------------------------------------------------------- wire bytes
+
+
+def comm_floats_per_sweep(solver: SolverSpec, d: int, n: int) -> int:
+    """Analytic residual-transmission cost of ONE sweep/cycle (floats).
+
+    Matches the O(.) table of the paper's Fig. 2 discussion and the collective
+    schedules in core.distributed:
+      averaging          0          (non-cooperative)
+      residual refit     N*D        (ring: one psum'd ensemble sum per update)
+      icoa               m*D^2      (all-gather per agent update, m = N/alpha)
+      icoa row_broadcast 2*m*D      (one gather + one row broadcast per update)
+    Diagonal variance scalars under compression (alpha > 1) ride along.
+    m comes from cov.subsample_size — the same function that sizes the actual
+    transmitted index set, so reported bytes can never drift from the math.
+    """
+    if solver.name == "averaging":
+        return 0
+    if solver.name == "residual_refitting":
+        return n * d
+    m = cov.subsample_size(n, solver.alpha) if solver.alpha > 1.0 else n
+    diag = (d * d if not solver.row_broadcast else 2 * d) if solver.alpha > 1.0 else 0
+    if solver.row_broadcast:
+        return 2 * m * d + diag
+    return m * d * d + diag
+
+
+def _bytes_history(solver: SolverSpec, d: int, n: int, n_records: int,
+                   initial_record: bool = True) -> list:
+    per_sweep = 4.0 * comm_floats_per_sweep(solver, d, n)
+    if initial_record:
+        return [0.0] + [per_sweep] * max(0, n_records - 1)
+    return [per_sweep] * n_records
+
+
+def _eta_of(f: jnp.ndarray, y: jnp.ndarray) -> float:
+    return float(ensemble.eta(cov.gram(y[None, :] - f)))
+
+
+def _mesh(spec: ExperimentSpec, d: int):
+    # every core.distributed body assumes EXACTLY one agent per mesh device
+    # (axis_index == agent id); any other mesh size returns silently wrong
+    # results, so reject it here rather than validate shapes downstream
+    if spec.backend.n_devices not in (None, d):
+        raise SpecError(
+            f"shard_map runs one agent per device: n_devices must be {d} "
+            f"(the agent count) or None, got {spec.backend.n_devices}")
+    return distributed.make_agent_mesh(d)
+
+
+# ------------------------------------------------------------------- solvers
+
+
+@register_solver("icoa")
+def _fit_icoa(spec: ExperimentSpec, data: Dataset, family) -> Result:
+    cfg = spec.solver.icoa_config()
+    d, n = data.xcols.shape[0], data.y.shape[0]
+    if spec.backend.name == "shard_map":
+        params, weights, hist = distributed.run_distributed(
+            family, cfg, data.xcols, data.y, data.xcols_test, data.y_test,
+            mesh=_mesh(spec, d), seed=spec.seed)
+        f = jax.vmap(family.predict)(params, data.xcols)
+    else:
+        state, weights, hist = icoa.run(
+            family, cfg, data.xcols, data.y, data.xcols_test, data.y_test,
+            seed=spec.seed)
+        params, f = state.params, state.f
+    history = History(
+        train_mse=hist["train_mse"], test_mse=hist.get("test_mse", []),
+        eta=hist["eta"],
+        bytes_transmitted=_bytes_history(spec.solver, d, n, len(hist["train_mse"])))
+    return Result(spec=spec, family=family, params=params, weights=weights,
+                  f=f, history=history, data=data)
+
+
+@register_solver("averaging")
+def _fit_averaging(spec: ExperimentSpec, data: Dataset, family) -> Result:
+    d = data.xcols.shape[0]
+    if spec.backend.name == "shard_map":
+        params, f = distributed.run_averaging_distributed(
+            family, data.xcols, data.y, mesh=_mesh(spec, d), seed=spec.seed)
+        weights = jnp.ones((d,)) / d
+        train_mse = float(jnp.mean((data.y - weights @ f) ** 2))
+        test_mse = None
+        if data.y_test.shape[0]:
+            ft = jax.vmap(family.predict)(params, data.xcols_test)
+            test_mse = float(jnp.mean((data.y_test - weights @ ft) ** 2))
+    else:
+        params, out = baselines.averaging(
+            family, data.xcols, data.y, data.xcols_test, data.y_test,
+            seed=spec.seed)
+        f = jax.vmap(family.predict)(params, data.xcols)
+        weights = jnp.ones((d,)) / d
+        train_mse, test_mse = out["train_mse"], out.get("test_mse")
+    history = History(train_mse=[train_mse], eta=[_eta_of(f, data.y)],
+                      bytes_transmitted=[0.0])
+    if test_mse is not None:
+        history.test_mse.append(test_mse)
+    return Result(spec=spec, family=family, params=params, weights=weights,
+                  f=f, history=history, data=data)
+
+
+@register_solver("residual_refitting")
+def _fit_refit(spec: ExperimentSpec, data: Dataset, family) -> Result:
+    d, n = data.xcols.shape[0], data.y.shape[0]
+    if spec.backend.name == "shard_map":
+        params, f, hist = distributed.run_refit_distributed(
+            family, data.xcols, data.y, data.xcols_test, data.y_test,
+            n_cycles=spec.solver.n_sweeps, mesh=_mesh(spec, d), seed=spec.seed)
+    else:
+        params_list, f, hist = baselines.residual_refitting(
+            family, data.xcols, data.y, data.xcols_test, data.y_test,
+            n_cycles=spec.solver.n_sweeps, seed=spec.seed)
+        params = jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+    history = History(
+        train_mse=hist["train_mse"], test_mse=hist.get("test_mse", []),
+        eta=hist["eta"],
+        bytes_transmitted=_bytes_history(spec.solver, d, n,
+                                         len(hist["train_mse"]),
+                                         initial_record=False))
+    # the ring ensemble is the SUM of agents: literal ones keep `weights @ f`
+    # the uniform combination rule across every solver
+    weights = jnp.ones((d,))
+    return Result(spec=spec, family=family, params=params, weights=weights,
+                  f=f, history=history, data=data)

@@ -1,0 +1,213 @@
+"""The declarative experiment description (DESIGN: one spec == one run).
+
+Every knob of the paper's trade-off surface — solver x protection (alpha,
+delta) x communication schedule x backend — is a field of the frozen
+`ExperimentSpec` dataclass tree:
+
+    DataSpec      which Friedman problem, sizes, noise, attribute partition
+    AgentSpec     hypothesis-space family (resolves the agents.FAMILIES registry)
+    SolverSpec    icoa | averaging | residual_refitting + every ICOA knob
+    BackendSpec   local (vmap, single process) | shard_map (one device/agent)
+
+Specs are plain data: hashable, `dataclasses.replace`-able (how `sweep()`
+builds grids) and JSON round-trippable (`to_dict` / `from_dict`), so a run is
+reproducible from its saved spec alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.agents import FAMILIES
+from repro.core.icoa import ICOAConfig
+from repro.data import friedman
+from repro.data.partition import one_per_agent, round_robin, validate_partition
+
+__all__ = [
+    "DataSpec", "AgentSpec", "SolverSpec", "BackendSpec", "ExperimentSpec",
+    "Dataset", "SpecError", "spec_to_dict", "spec_from_dict",
+]
+
+_SOURCES = ("friedman1", "friedman2", "friedman3")
+_PARTITIONS = ("one_per_agent", "round_robin")
+_SOLVERS = ("icoa", "averaging", "residual_refitting")
+_BACKENDS = ("local", "shard_map")
+_N_ATTRS = 5  # every Friedman problem has 5 covariates (paper Sec 3.2)
+
+
+class SpecError(ValueError):
+    """A spec field refers to an unknown registry entry or is inconsistent."""
+
+
+class Dataset(NamedTuple):
+    """Materialised data, already partitioned into per-agent column stacks."""
+
+    xcols: jnp.ndarray        # (D, N_train, C) agent column views
+    y: jnp.ndarray            # (N_train,)
+    xcols_test: jnp.ndarray   # (D, N_test, C)
+    y_test: jnp.ndarray       # (N_test,)
+    groups: List[List[int]]   # attribute partition (agent i -> column indices)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    source: str = "friedman1"          # friedman1 | friedman2 | friedman3
+    n_train: int = 2000
+    n_test: int = 2000
+    noise: float = 0.0
+    seed: int = 0
+    partition: str = "one_per_agent"   # one_per_agent | round_robin
+    n_agents: Optional[int] = None     # round_robin only; must divide 5
+
+    def validate(self) -> None:
+        if self.source not in _SOURCES:
+            raise SpecError(f"unknown data source {self.source!r}; pick one of {_SOURCES}")
+        if self.partition not in _PARTITIONS:
+            raise SpecError(f"unknown partition {self.partition!r}; pick one of {_PARTITIONS}")
+        if self.n_train < 2 or self.n_test < 1:
+            raise SpecError("need n_train >= 2 and n_test >= 1 (the Friedman "
+                            "generator cannot produce an empty split)")
+        if self.partition == "round_robin":
+            d = self.n_agents or _N_ATTRS
+            if not (1 <= d <= _N_ATTRS) or _N_ATTRS % d != 0:
+                raise SpecError(
+                    f"round_robin n_agents must divide {_N_ATTRS} (equal column "
+                    f"counts per agent), got {self.n_agents}")
+        elif self.n_agents not in (None, _N_ATTRS):
+            raise SpecError(f"one_per_agent fixes n_agents = {_N_ATTRS}, got {self.n_agents}")
+
+    @property
+    def groups(self) -> List[List[int]]:
+        if self.partition == "one_per_agent":
+            return one_per_agent(_N_ATTRS)
+        return round_robin(_N_ATTRS, self.n_agents or _N_ATTRS)
+
+    def build(self) -> Dataset:
+        """Generate + standardise + partition (deterministic in `seed`).
+
+        Memoised on the (frozen, hashable) spec: a sweep over solver knobs
+        re-uses one materialised Dataset instead of regenerating it per fit.
+        """
+        self.validate()
+        return _build_dataset(self)
+
+
+@functools.lru_cache(maxsize=8)
+def _build_dataset(spec: DataSpec) -> Dataset:
+    which = int(spec.source[-1])
+    xtr, ytr, xte, yte = friedman.make_dataset(
+        which, n_train=spec.n_train, n_test=spec.n_test,
+        seed=spec.seed, noise=spec.noise)
+    groups = spec.groups
+    validate_partition(groups, _N_ATTRS)
+    xcols = jnp.stack([xtr[:, g] for g in groups])
+    xcols_test = jnp.stack([xte[:, g] for g in groups])
+    return Dataset(xcols, ytr, xcols_test, yte, groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentSpec:
+    family: str = "polynomial"                       # key into agents.FAMILIES
+    options: Tuple[Tuple[str, Any], ...] = ()        # family kwargs, e.g. (("degree", 4),)
+
+    def validate(self) -> None:
+        if self.family not in FAMILIES:
+            raise SpecError(
+                f"unknown agent family {self.family!r}; registered: {sorted(FAMILIES)}")
+        fields = {f.name for f in dataclasses.fields(FAMILIES[self.family])} - {"n_cols"}
+        for name, _ in self.options:
+            if name not in fields:
+                raise SpecError(
+                    f"family {self.family!r} has no option {name!r}; valid: {sorted(fields)}")
+
+    def resolve(self, n_cols: int):
+        """Instantiate the (frozen, hashable) family for `n_cols` columns."""
+        self.validate()
+        return FAMILIES[self.family](n_cols=n_cols, **dict(self.options))
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    name: str = "icoa"          # icoa | averaging | residual_refitting
+    n_sweeps: int = 10          # outer sweeps (icoa) / ring cycles (refit)
+    eps: float = 1e-7           # early-stopping tolerance on successive eta
+    alpha: float = 1.0          # compression rate (1 = full residual exchange)
+    delta: float = 0.0          # Minimax Protection box half-width (0 = off)
+    row_broadcast: bool = False  # O(N*D)/sweep collective schedule (§Perf C)
+    use_kernel: bool = False    # route Gram products through the Pallas kernel
+    accept_reject: bool = True  # reject projections that worsen the objective
+    step0: float = 1.0
+    backtrack: float = 0.5
+    max_probes: int = 16
+    minimax_steps: int = 300
+    minimax_lr: float = 0.05
+
+    def validate(self) -> None:
+        if self.name not in _SOLVERS:
+            raise SpecError(f"unknown solver {self.name!r}; pick one of {_SOLVERS}")
+        if self.alpha < 1.0:
+            raise SpecError(f"alpha is a compression RATE, must be >= 1 (got {self.alpha})")
+        if self.delta < 0.0:
+            raise SpecError(f"delta must be >= 0 (got {self.delta})")
+        if self.n_sweeps < 1:
+            raise SpecError("need n_sweeps >= 1")
+        if self.name != "icoa" and (self.alpha != 1.0 or self.delta != 0.0):
+            raise SpecError(
+                f"alpha/delta implement ICOA's Minimax Protection; solver "
+                f"{self.name!r} has no residual-compression knob")
+
+    def icoa_config(self) -> ICOAConfig:
+        return ICOAConfig(
+            n_sweeps=self.n_sweeps, eps=self.eps, step0=self.step0,
+            backtrack=self.backtrack, max_probes=self.max_probes,
+            alpha=self.alpha, delta=self.delta, minimax_steps=self.minimax_steps,
+            minimax_lr=self.minimax_lr, use_kernel=self.use_kernel,
+            accept_reject=self.accept_reject, row_broadcast=self.row_broadcast)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str = "local"             # local | shard_map
+    n_devices: Optional[int] = None  # shard_map: devices to mesh (default = D)
+
+    def validate(self) -> None:
+        if self.name not in _BACKENDS:
+            raise SpecError(f"unknown backend {self.name!r}; pick one of {_BACKENDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    data: DataSpec = DataSpec()
+    agent: AgentSpec = AgentSpec()
+    solver: SolverSpec = SolverSpec()
+    backend: BackendSpec = BackendSpec()
+    seed: int = 0                   # solver seed (init + subsample streams)
+
+    def validate(self) -> None:
+        self.data.validate()
+        self.agent.validate()
+        self.solver.validate()
+        self.backend.validate()
+
+
+# ------------------------------------------------------------- serialisation
+
+
+def spec_to_dict(spec: ExperimentSpec) -> Dict[str, Any]:
+    return dataclasses.asdict(spec)
+
+
+def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
+    agent = dict(d.get("agent", {}))
+    # JSON turns the options tuple-of-pairs into list-of-lists; restore it
+    agent["options"] = tuple((str(k), v) for k, v in agent.get("options", ()))
+    return ExperimentSpec(
+        data=DataSpec(**d.get("data", {})),
+        agent=AgentSpec(**agent),
+        solver=SolverSpec(**d.get("solver", {})),
+        backend=BackendSpec(**d.get("backend", {})),
+        seed=d.get("seed", 0),
+    )

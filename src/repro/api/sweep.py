@@ -1,0 +1,69 @@
+"""Grid sweeps over ExperimentSpecs — the paper's trade-off curves in one call.
+
+A grid maps dotted spec paths to value lists:
+
+    sweep(base, {"solver.alpha": [1, 10, 100], "solver.delta": [0.0, 0.01]})
+
+runs the 6-point product grid and returns one Result per spec (in product
+order, last axis fastest). `grid_specs` exposes the spec enumeration alone so
+callers that need per-run timing or custom scheduling can drive `fit`
+themselves. `zip_specs` varies several fields TOGETHER (paired, not crossed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Iterator, List, Mapping, Sequence
+
+from repro.api.specs import ExperimentSpec, SpecError
+
+__all__ = ["spec_with", "grid_specs", "zip_specs", "sweep"]
+
+
+def spec_with(spec: ExperimentSpec, path: str, value: Any) -> ExperimentSpec:
+    """Functional update of one dotted field, e.g. ("solver.alpha", 20.0)."""
+    head, _, rest = path.partition(".")
+    if not hasattr(spec, head):
+        raise SpecError(f"spec has no field {head!r} (path {path!r})")
+    if not rest:
+        return dataclasses.replace(spec, **{head: value})
+    return dataclasses.replace(spec, **{head: spec_with(getattr(spec, head), rest, value)})
+
+
+def grid_specs(base: ExperimentSpec,
+               grid: Mapping[str, Sequence[Any]]) -> Iterator[ExperimentSpec]:
+    """Product grid: every combination of the listed values, last key fastest."""
+    paths = list(grid)
+    for combo in itertools.product(*(grid[p] for p in paths)):
+        spec = base
+        for path, value in zip(paths, combo):
+            spec = spec_with(spec, path, value)
+        yield spec
+
+
+def zip_specs(base: ExperimentSpec,
+              grid: Mapping[str, Sequence[Any]]) -> Iterator[ExperimentSpec]:
+    """Paired sweep: i-th spec takes the i-th value of EVERY list."""
+    paths = list(grid)
+    lengths = {len(grid[p]) for p in paths}
+    if len(lengths) > 1:
+        raise SpecError(f"zip_specs needs equal-length value lists, got "
+                        f"{ {p: len(grid[p]) for p in paths} }")
+    for combo in zip(*(grid[p] for p in paths)):
+        spec = base
+        for path, value in zip(paths, combo):
+            spec = spec_with(spec, path, value)
+        yield spec
+
+
+def sweep(base: ExperimentSpec, grid: Mapping[str, Sequence[Any]],
+          paired: bool = False) -> List["Result"]:
+    """Fit every spec in the grid; returns Results in enumeration order.
+    Each Result carries its spec, so trade-off curves are one comprehension:
+
+        [(r.spec.solver.alpha, r.history.total_bytes, r.test_mse) for r in rs]
+    """
+    from repro.api import fit  # local import: api.__init__ imports this module
+
+    specs = zip_specs(base, grid) if paired else grid_specs(base, grid)
+    return [fit(spec) for spec in specs]

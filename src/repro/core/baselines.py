@@ -16,6 +16,9 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import covariance as cov
+from repro.core import ensemble
+
 __all__ = ["averaging", "residual_refitting"]
 
 
@@ -44,13 +47,16 @@ def residual_refitting(family, xcols: jnp.ndarray, y: jnp.ndarray,
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
     params = [family.init(k) for k in keys]
     f = jnp.zeros((d, xcols.shape[1]))
-    hist = {"train_mse": [], "test_mse": []}
+    hist = {"train_mse": [], "test_mse": [], "eta": []}
 
     def record(params, f):
         hist["train_mse"].append(float(jnp.mean((y - f.sum(axis=0)) ** 2)))
         if xcols_test is not None:
             ft = jnp.stack([family.predict(p, xt) for p, xt in zip(params, xcols_test)])
             hist["test_mse"].append(float(jnp.mean((y_test - ft.sum(axis=0)) ** 2)))
+        # diagnostic parity with icoa.run: the MSE an OPTIMAL re-weighting of
+        # these agents would achieve (refit itself combines by summation)
+        hist["eta"].append(float(ensemble.eta(cov.gram(y[None, :] - f))))
 
     for _ in range(n_cycles):
         for i in range(d):

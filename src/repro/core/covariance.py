@@ -22,7 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gram", "residual_covariance", "subsample_indices", "subsampled_covariance"]
+__all__ = ["gram", "residual_covariance", "subsample_size", "subsample_indices",
+           "subsampled_gram", "subsampled_covariance"]
 
 
 def gram(r: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
@@ -39,10 +40,29 @@ def residual_covariance(residuals: jnp.ndarray, use_kernel: bool = False) -> jnp
     return gram(residuals, use_kernel=use_kernel)
 
 
+def subsample_size(n: int, alpha: float) -> int:
+    """ceil(N / alpha), floored at 2 so a covariance is defined. The single
+    source of truth for how many instances rate alpha transmits (the api
+    layer's wire-byte accounting uses the same function)."""
+    return max(2, int(-(-n // alpha)))
+
+
 def subsample_indices(key: jax.Array, n: int, alpha: float) -> jnp.ndarray:
     """Randomly sample ceil(N / alpha) instance indices (without replacement)."""
-    m = max(2, int(-(-n // alpha)))  # ceil, >= 2 so a covariance is defined
-    return jax.random.permutation(key, n)[:m]
+    return jax.random.permutation(key, n)[: subsample_size(n, alpha)]
+
+
+def subsampled_gram(residuals: jnp.ndarray, idx: Optional[jnp.ndarray],
+                    use_kernel: bool = False) -> jnp.ndarray:
+    """A0 from given subsample indices: off-diagonals estimated from the
+    subsample, diagonal (local, free) kept exact — the paper's delta_ii = 0
+    assumption (Sec 4.1). `idx is None` means full transmission: exact A."""
+    if idx is None:
+        return gram(residuals, use_kernel=use_kernel)
+    sub = residuals[:, idx]
+    a0 = gram(sub, use_kernel=use_kernel)
+    exact_diag = jnp.sum(residuals * residuals, axis=1) / residuals.shape[1]
+    return a0 - jnp.diag(jnp.diag(a0)) + jnp.diag(exact_diag)
 
 
 def subsampled_covariance(
@@ -58,10 +78,6 @@ def subsampled_covariance(
     each agent transmits only the subsampled slice of its residual vector
     (N/alpha numbers instead of N), shrinking the all-gather payload by alpha.
     """
-    d, n = residuals.shape
     if idx is None:
-        idx = subsample_indices(key, n, alpha)
-    sub = residuals[:, idx]
-    a0 = gram(sub, use_kernel=use_kernel)
-    exact_diag = jnp.sum(residuals * residuals, axis=1) / n
-    return a0 - jnp.diag(jnp.diag(a0)) + jnp.diag(exact_diag)
+        idx = subsample_indices(key, residuals.shape[1], alpha)
+    return subsampled_gram(residuals, idx, use_kernel=use_kernel)

@@ -32,7 +32,21 @@ from repro.core import covariance as cov
 from repro.core import ensemble, minimax
 from repro.core.icoa import ICOAConfig
 
-__all__ = ["make_agent_mesh", "distributed_sweep", "run_distributed"]
+__all__ = ["make_agent_mesh", "distributed_sweep", "run_distributed",
+           "run_averaging_distributed", "run_refit_distributed"]
+
+
+def _shmap(body, mesh: Mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions: the top-level binding (with
+    check_vma) landed after 0.4.x; fall back to jax.experimental.shard_map
+    (check_rep) on older runtimes."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def make_agent_mesh(n_agents: int) -> Mesh:
@@ -161,11 +175,10 @@ def _sweep_body(cfg: ICOAConfig, family, xcol, y, f_local, params_local, key):
 def distributed_sweep(mesh: Mesh, cfg: ICOAConfig, family):
     """Compiled shard_map sweep: (xcols, y, f, params, key) -> (f, params, w)."""
     body = partial(_sweep_body, cfg, family)
-    return jax.jit(jax.shard_map(
-        body, mesh=mesh,
+    return jax.jit(_shmap(
+        body, mesh,
         in_specs=(P("agents"), P(), P("agents"), P("agents"), P()),
         out_specs=(P("agents"), P("agents"), P()),
-        check_vma=False,
     ))
 
 
@@ -173,7 +186,9 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
                     xcols_test: Optional[jnp.ndarray] = None,
                     y_test: Optional[jnp.ndarray] = None,
                     mesh: Optional[Mesh] = None, seed: int = 0):
-    """Full distributed ICOA run; mirrors core.icoa.run's return contract."""
+    """Full distributed ICOA run; mirrors core.icoa.run's return contract —
+    same history keys (train_mse / test_mse / eta) and the same eps
+    early-stopping rule on successive eta values."""
     d = xcols.shape[0]
     mesh = mesh or make_agent_mesh(d)
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
@@ -181,7 +196,7 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     f = jax.vmap(family.predict)(params, xcols)
 
     sweep_fn = distributed_sweep(mesh, cfg, family)
-    hist = {"train_mse": [], "test_mse": []}
+    hist = {"train_mse": [], "test_mse": [], "eta": []}
     key = jax.random.PRNGKey(seed + 1)
     w = jnp.ones((d,)) / d
 
@@ -190,10 +205,100 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
         if xcols_test is not None:
             preds = jax.vmap(family.predict)(params, xcols_test)
             hist["test_mse"].append(float(jnp.mean((y_test - w @ preds) ** 2)))
+        # same definition as core.icoa.run: eta of the optimally-weighted
+        # ensemble on the FULL residual covariance (diagnostic, not traffic)
+        hist["eta"].append(float(ensemble.eta(
+            cov.gram(y[None, :] - f, use_kernel=cfg.use_kernel))))
 
     record(params, f, w)
+    eta_prev = float("inf")   # same rule as core.icoa.run: compare post-sweep etas
     for _ in range(cfg.n_sweeps):
         key, k1 = jax.random.split(key)
         f, params, w = sweep_fn(xcols, y, f, params, k1)
         record(params, f, w)
+        eta_now = hist["eta"][-1]
+        if abs(eta_prev - eta_now) < cfg.eps:
+            break
+        eta_prev = eta_now
     return params, w, hist
+
+
+# --------------------------------------------------------------------------
+# The paper's comparison algorithms as collective schedules, so the api layer
+# can run every solver on either backend. Both keep the attribute-sharding
+# guarantee: xcols stays on its agent's device, only predictions move.
+
+
+def run_averaging_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
+                              mesh: Optional[Mesh] = None, seed: int = 0):
+    """Non-cooperative averaging under shard_map: every agent fits y on its own
+    device; no inter-agent traffic at all (the paper's O(1) row of Fig. 2).
+    Returns (params, f) with the same stacked layout as the local path."""
+    d = xcols.shape[0]
+    mesh = mesh or make_agent_mesh(d)
+    keys = jax.random.split(jax.random.PRNGKey(seed), d)
+
+    def body(xcol, y, key):
+        p = family.fit(family.init(key[0]), xcol[0], y)
+        f = family.predict(p, xcol[0])
+        return jax.tree.map(lambda t: t[None], p), f[None]
+
+    fn = jax.jit(_shmap(
+        body, mesh,
+        in_specs=(P("agents"), P(), P("agents")),
+        out_specs=(P("agents"), P("agents")),
+    ))
+    return fn(xcols, y, keys)
+
+
+def run_refit_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
+                          xcols_test: Optional[jnp.ndarray] = None,
+                          y_test: Optional[jnp.ndarray] = None,
+                          n_cycles: int = 30, mesh: Optional[Mesh] = None,
+                          seed: int = 0):
+    """Residual refitting (ICEA ring) under shard_map: one cycle = one
+    round-robin pass; the updating agent needs only the ensemble SUM, so each
+    update is a single psum of one (N,) vector — O(N*D) wire bytes per cycle,
+    the ring cost of Fig. 2 and exactly what the api layer's byte accounting
+    charges. Mirrors baselines.residual_refitting's (params, f, hist) return
+    contract (params stacked over agents; ensemble prediction = sum of f)."""
+    d = xcols.shape[0]
+    mesh = mesh or make_agent_mesh(d)
+    keys = jax.random.split(jax.random.PRNGKey(seed), d)
+
+    def cycle(xcol, y, f_local, params_local):
+        dd = jax.lax.psum(1, "agents")
+        me = jax.lax.axis_index("agents")
+
+        def agent_update(i, carry):
+            f_local, params_local = carry
+            f_sum = jax.lax.psum(f_local[0], "agents")                # (N,)
+            residual = y - f_sum + f_local[0]                         # leave-me-out
+            new_p = family.fit(jax.tree.map(lambda t: t[0], params_local),
+                               xcol[0], residual)
+            new_f = family.predict(new_p, xcol[0])
+            is_me = (me == i)
+            params_local = jax.tree.map(
+                lambda old, new: jnp.where(is_me, new[None], old), params_local, new_p)
+            f_local = jnp.where(is_me, new_f[None], f_local)
+            return f_local, params_local
+
+        return jax.lax.fori_loop(0, dd, agent_update, (f_local, params_local))
+
+    cycle_fn = jax.jit(_shmap(
+        cycle, mesh,
+        in_specs=(P("agents"), P(), P("agents"), P("agents")),
+        out_specs=(P("agents"), P("agents")),
+    ))
+
+    params = jax.vmap(lambda k: family.init(k))(keys)
+    f = jnp.zeros((d, y.shape[0]), dtype=y.dtype)
+    hist = {"train_mse": [], "test_mse": [], "eta": []}
+    for _ in range(n_cycles):
+        f, params = cycle_fn(xcols, y, f, params)
+        hist["train_mse"].append(float(jnp.mean((y - f.sum(axis=0)) ** 2)))
+        if xcols_test is not None:
+            ft = jax.vmap(family.predict)(params, xcols_test)
+            hist["test_mse"].append(float(jnp.mean((y_test - ft.sum(axis=0)) ** 2)))
+        hist["eta"].append(float(ensemble.eta(cov.gram(y[None, :] - f))))
+    return params, f, hist

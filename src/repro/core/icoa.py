@@ -63,6 +63,12 @@ class ICOAState:
     key: jax.Array
 
 
+def _subsampled_a0(f: jnp.ndarray, y: jnp.ndarray, idx: Optional[jnp.ndarray],
+                   cfg: ICOAConfig) -> jnp.ndarray:
+    """A0 from the transmitted subsample (exact local diagonal, Sec 4.1)."""
+    return cov.subsampled_gram(y[None, :] - f, idx, use_kernel=cfg.use_kernel)
+
+
 def _eta_tilde_sub(f: jnp.ndarray, y: jnp.ndarray, idx: Optional[jnp.ndarray],
                    cfg: ICOAConfig) -> jnp.ndarray:
     """Objective from the covariance the agents can actually see.
@@ -70,15 +76,7 @@ def _eta_tilde_sub(f: jnp.ndarray, y: jnp.ndarray, idx: Optional[jnp.ndarray],
     alpha == 1: exact A.  alpha > 1: off-diagonals from the idx subsample,
     exact local diagonal (paper Sec 4.1, delta_ii = 0).
     """
-    r = y[None, :] - f
-    if idx is None:
-        a_mat = cov.gram(r, use_kernel=cfg.use_kernel)
-    else:
-        sub = r[:, idx]
-        a_mat = cov.gram(sub, use_kernel=cfg.use_kernel)
-        exact_diag = jnp.sum(r * r, axis=1) / r.shape[1]
-        a_mat = a_mat - jnp.diag(jnp.diag(a_mat)) + jnp.diag(exact_diag)
-    return ensemble.eta_tilde(a_mat)
+    return ensemble.eta_tilde(_subsampled_a0(f, y, idx, cfg))
 
 
 def init_state(family, keys: jax.Array, xcols: jnp.ndarray, y: jnp.ndarray) -> ICOAState:
@@ -87,18 +85,6 @@ def init_state(family, keys: jax.Array, xcols: jnp.ndarray, y: jnp.ndarray) -> I
     params = fit0(keys, xcols)
     f = jax.vmap(family.predict)(params, xcols)
     return ICOAState(params=params, f=f, key=keys[0])
-
-
-def _subsampled_a0(f: jnp.ndarray, y: jnp.ndarray, idx: Optional[jnp.ndarray],
-                   cfg: ICOAConfig) -> jnp.ndarray:
-    """A0 from the transmitted subsample (exact local diagonal, Sec 4.1)."""
-    r = y[None, :] - f
-    if idx is None:
-        return cov.gram(r, use_kernel=cfg.use_kernel)
-    sub = r[:, idx]
-    a_mat = cov.gram(sub, use_kernel=cfg.use_kernel)
-    exact_diag = jnp.sum(r * r, axis=1) / r.shape[1]
-    return a_mat - jnp.diag(jnp.diag(a_mat)) + jnp.diag(exact_diag)
 
 
 @partial(jax.jit, static_argnames=("family", "cfg"))

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypcompat import HAVE_HYPOTHESIS, given, settings, st
 
 from repro.data.friedman import friedman1, friedman2, friedman3, make_dataset
 from repro.data.partition import column_mask, one_per_agent, round_robin, validate_partition
@@ -50,14 +51,24 @@ def test_one_per_agent_covers_all():
     np.testing.assert_array_equal(mask, np.eye(5, dtype=np.float32))
 
 
-@settings(max_examples=20, deadline=None)
-@given(m=st.integers(1, 12), d=st.integers(1, 12))
-def test_round_robin_partition_valid(m, d):
-    if d > m:
-        d = m  # no empty agents
-    g = round_robin(m, d)
-    validate_partition(g, m)
-    assert column_mask(g, m).sum() == m  # disjoint cover
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 12), d=st.integers(1, 12))
+    def test_round_robin_partition_valid(m, d):
+        if d > m:
+            d = m  # no empty agents
+        g = round_robin(m, d)
+        validate_partition(g, m)
+        assert column_mask(g, m).sum() == m  # disjoint cover
+
+else:
+
+    @pytest.mark.parametrize("m,d", [(1, 1), (5, 3), (12, 12), (7, 2)])
+    def test_round_robin_partition_valid(m, d):
+        g = round_robin(m, d)
+        validate_partition(g, m)
+        assert column_mask(g, m).sum() == m  # disjoint cover
 
 
 def test_validate_partition_rejects_gaps():
