@@ -27,12 +27,16 @@ D, N = 5, 4000
 fam = PolynomialFamily(n_cols=1, degree=4)
 mesh = make_agent_mesh(D)
 res = {}
-for name, alpha, rb in (("icoa_full", 1.0, False),
-                        ("icoa_mm100", 100.0, False),
-                        ("icoa_rowbcast", 1.0, True),
-                        ("icoa_rowbcast_mm100", 100.0, True)):
+# dense engine pins the schedule under measurement (the incremental engine's
+# carried CovState always has row-broadcast traffic, DESIGN.md SS5)
+for name, alpha, rb, eng in (("icoa_full", 1.0, False, "dense"),
+                             ("icoa_mm100", 100.0, False, "dense"),
+                             ("icoa_rowbcast", 1.0, True, "dense"),
+                             ("icoa_rowbcast_mm100", 100.0, True, "dense"),
+                             ("icoa_incremental", 1.0, False, "incremental"),
+                             ("icoa_incremental_mm100", 100.0, False, "incremental")):
     cfg = icoa.ICOAConfig(n_sweeps=1, alpha=alpha, delta=0.0 if alpha == 1 else 0.01,
-                          row_broadcast=rb)
+                          row_broadcast=rb, engine=eng)
     fn = distributed_sweep(mesh, cfg, fam)
     args = (
         jax.ShapeDtypeStruct((D, N, 1), jnp.float32),
@@ -68,7 +72,8 @@ def run(n: int = 4000, d: int = 5) -> list[str]:
             for name, v in res.items():
                 out.append(row(f"comm/{name}_measured_collective_bytes_per_sweep", 0, f"{v:.3e}"))
             full = res.get("icoa_full", 0.0)
-            for name in ("icoa_mm100", "icoa_rowbcast", "icoa_rowbcast_mm100"):
+            for name in ("icoa_mm100", "icoa_rowbcast", "icoa_rowbcast_mm100",
+                         "icoa_incremental", "icoa_incremental_mm100"):
                 if res.get(name):
                     out.append(row(f"comm/reduction_vs_paper_{name}", 0,
                                    f"{full / res[name]:.1f}x"))

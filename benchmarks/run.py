@@ -12,7 +12,7 @@ import traceback
 
 from benchmarks import (comm_cost, fig1_overtraining, fig3_divergence,
                         fig5_upper_bound, kernels_bench, roofline,
-                        table1_algorithms, table2_minimax)
+                        sweep_engines, table1_algorithms, table2_minimax)
 
 SUITES = {
     "table1": table1_algorithms.run,     # paper Table 1
@@ -23,6 +23,8 @@ SUITES = {
     "comm": comm_cost.run,               # paper Fig. 2 / Sec 4 cost table
     "kernels": kernels_bench.run,        # kernel micro-bench
     "roofline": roofline.run,            # dry-run roofline table (Sec e/g)
+    "sweep": sweep_engines.run,          # dense vs incremental engine curve
+                                         # (writes BENCH_sweep.json)
 }
 
 

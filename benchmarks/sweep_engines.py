@@ -1,0 +1,74 @@
+"""Per-sweep wall time vs ensemble size D for both covariance engines.
+
+The engine trade the repo is built on (DESIGN.md §5): the dense oracle pays
+O(N*D^2 + D^3) per objective probe, the incremental CovState engine
+O(N*D + D^2).  This suite times ONE compiled `icoa.sweep` per (D, engine) on
+synthetic attribute-split data (LinearFamily agents, so projection cost is
+negligible and the covariance algebra dominates) and records the curve in
+``BENCH_sweep.json`` at the repo root — the file CI and future PRs diff to
+keep the perf trajectory honest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.agents import LinearFamily
+from repro.core import icoa
+
+__all__ = ["run"]
+
+_DS = (5, 25, 50, 100)
+_N = 2000
+_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
+
+
+def _synthetic(d: int, n: int):
+    key = jax.random.PRNGKey(d)
+    kx, ke = jax.random.split(key)
+    xcols = jax.random.normal(kx, (d, n, 1))
+    y = jnp.sum(xcols[:, :, 0], axis=0) / jnp.sqrt(float(d)) \
+        + 0.3 * jax.random.normal(ke, (n,))
+    return xcols, y
+
+
+def _time_sweep(cfg, fam, params, f, xcols, y, reps: int = 2) -> float:
+    key = jax.random.PRNGKey(1)
+    out = icoa.sweep(fam, cfg, params, f, xcols, y, key)   # compile + warm
+    jax.block_until_ready(out[1])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = icoa.sweep(fam, cfg, params, f, xcols, y, key)
+        jax.block_until_ready(out[1])
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    fam = LinearFamily(n_cols=1)
+    results = []
+    for d in _DS:
+        xcols, y = _synthetic(d, _N)
+        keys = jax.random.split(jax.random.PRNGKey(0), d)
+        state = icoa.init_state(fam, keys, xcols, y)
+        per_engine = {}
+        for engine in ("incremental", "dense"):
+            cfg = icoa.ICOAConfig(engine=engine, n_sweeps=1)
+            us = _time_sweep(cfg, fam, state.params, state.f, xcols, y)
+            per_engine[engine] = us
+            results.append({"d": d, "n": _N, "engine": engine,
+                            "us_per_sweep": round(us, 1)})
+            yield row(f"sweep_{engine}_d{d}", us, f"n={_N}")
+        speedup = per_engine["dense"] / per_engine["incremental"]
+        results.append({"d": d, "n": _N,
+                        "incremental_speedup_over_dense": round(speedup, 2)})
+        yield row(f"sweep_speedup_d{d}", 0, f"{speedup:.2f}x")
+    with open(_OUT, "w") as fh:
+        json.dump({"n": _N, "backend": jax.default_backend(),
+                   "unit": "us_per_sweep", "results": results}, fh, indent=2)
+        fh.write("\n")
+    yield row("sweep_json", 0, os.path.basename(_OUT))

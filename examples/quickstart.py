@@ -35,6 +35,14 @@ def main():
     print(f"ICOA+MM(alpha=100) test MSE: {mm.test_mse:.4f} "
           f"with {saved:.0%} less residual traffic")
 
+    # engine="dense" is the recompute-everything parity oracle for the default
+    # rank-2 incremental covariance engine (DESIGN.md §5) — same history to
+    # 1e-5, O(N*D^2 + D^3) per probe instead of O(N*D + D^2)
+    oracle = api.fit(api.spec_with(BASE, "solver.engine", "dense"))
+    drift = abs(oracle.test_mse - res.test_mse) / res.test_mse
+    print(f"dense-oracle test MSE: {oracle.test_mse:.4f} "
+          f"(engine parity drift {drift:.2e})")
+
 
 if __name__ == "__main__":
     main()

@@ -58,8 +58,12 @@ def comm_floats_per_sweep(solver: SolverSpec, d: int, n: int) -> int:
     schedules in core.distributed:
       averaging          0          (non-cooperative)
       residual refit     N*D        (ring: one psum'd ensemble sum per update)
-      icoa               m*D^2      (all-gather per agent update, m = N/alpha)
-      icoa row_broadcast 2*m*D      (one gather + one row broadcast per update)
+      icoa dense         m*D^2      (all-gather per agent update, m = N/alpha)
+      icoa row-wise      2*m*D      (one gather per sweep + one row broadcast
+                                     per update — the row_broadcast schedule,
+                                     and equally the incremental engine, whose
+                                     carried CovState needs only the candidate
+                                     row on the wire; DESIGN.md §5)
     Diagonal variance scalars under compression (alpha > 1) ride along.
     m comes from cov.subsample_size — the same function that sizes the actual
     transmitted index set, so reported bytes can never drift from the math.
@@ -68,9 +72,10 @@ def comm_floats_per_sweep(solver: SolverSpec, d: int, n: int) -> int:
         return 0
     if solver.name == "residual_refitting":
         return n * d
+    row_wise = solver.row_broadcast or solver.engine == "incremental"
     m = cov.subsample_size(n, solver.alpha) if solver.alpha > 1.0 else n
-    diag = (d * d if not solver.row_broadcast else 2 * d) if solver.alpha > 1.0 else 0
-    if solver.row_broadcast:
+    diag = (2 * d if row_wise else d * d) if solver.alpha > 1.0 else 0
+    if row_wise:
         return 2 * m * d + diag
     return m * d * d + diag
 

@@ -136,6 +136,10 @@ class SolverSpec:
     eps: float = 1e-7           # early-stopping tolerance on successive eta
     alpha: float = 1.0          # compression rate (1 = full residual exchange)
     delta: float = 0.0          # Minimax Protection box half-width (0 = off)
+    engine: str = "incremental"  # covariance engine: "incremental" carries a
+                                # rank-2 updated CovState (O(N*D + D^2) per
+                                # probe); "dense" recomputes every probe from
+                                # scratch — the parity oracle (DESIGN.md §5)
     row_broadcast: bool = False  # O(N*D)/sweep collective schedule (§Perf C)
     use_kernel: bool = False    # route Gram products through the Pallas kernel
     accept_reject: bool = True  # reject projections that worsen the objective
@@ -154,10 +158,17 @@ class SolverSpec:
             raise SpecError(f"delta must be >= 0 (got {self.delta})")
         if self.n_sweeps < 1:
             raise SpecError("need n_sweeps >= 1")
+        if self.engine not in ("dense", "incremental"):
+            raise SpecError(
+                f"unknown engine {self.engine!r}; pick 'dense' or 'incremental'")
         if self.name != "icoa" and (self.alpha != 1.0 or self.delta != 0.0):
             raise SpecError(
                 f"alpha/delta implement ICOA's Minimax Protection; solver "
                 f"{self.name!r} has no residual-compression knob")
+        if self.name != "icoa" and self.engine != "incremental":
+            raise SpecError(
+                f"engine selects ICOA's covariance path; solver "
+                f"{self.name!r} has no per-probe covariance to cache")
 
     def icoa_config(self) -> ICOAConfig:
         return ICOAConfig(
@@ -165,7 +176,8 @@ class SolverSpec:
             backtrack=self.backtrack, max_probes=self.max_probes,
             alpha=self.alpha, delta=self.delta, minimax_steps=self.minimax_steps,
             minimax_lr=self.minimax_lr, use_kernel=self.use_kernel,
-            accept_reject=self.accept_reject, row_broadcast=self.row_broadcast)
+            accept_reject=self.accept_reject, row_broadcast=self.row_broadcast,
+            engine=self.engine)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -2,8 +2,10 @@
 
 See DESIGN.md §2. Public API:
 
-    from repro.core import icoa, minimax, ensemble, covariance, baselines
+    from repro.core import icoa, minimax, ensemble, covariance, covstate, baselines
 """
-from repro.core import baselines, covariance, ensemble, gradient, icoa, minimax
+from repro.core import (baselines, covariance, covstate, ensemble, gradient,
+                        icoa, minimax)
 
-__all__ = ["baselines", "covariance", "ensemble", "gradient", "icoa", "minimax"]
+__all__ = ["baselines", "covariance", "covstate", "ensemble", "gradient",
+           "icoa", "minimax"]

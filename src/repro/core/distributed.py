@@ -17,6 +17,13 @@ This is the paper's system realised as a collective schedule (DESIGN.md §3.1):
 
 The gradient uses the closed form (core/gradient.py) — cheap and local once
 residuals are gathered.
+
+`cfg.engine` picks the replicated D x D compute path (DESIGN.md §5):
+"incremental" (default) carries a core.covstate.CovState through the agent
+loop — one residual gather at sweep start, one candidate-row broadcast per
+update, rank-2 SMW algebra everywhere (so its wire traffic IS the
+row_broadcast schedule's 2*m*D per sweep); "dense" is the paper-faithful
+recompute-everything oracle above.
 """
 from __future__ import annotations
 
@@ -29,7 +36,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import covariance as cov
-from repro.core import ensemble, minimax
+from repro.core import covstate
+from repro.core import ensemble, gradient, minimax
 from repro.core.icoa import ICOAConfig
 
 __all__ = ["make_agent_mesh", "distributed_sweep", "run_distributed",
@@ -172,9 +180,144 @@ def _sweep_body(cfg: ICOAConfig, family, xcol, y, f_local, params_local, key):
     return f_local, params_local, w
 
 
+def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
+                            params_local, key):
+    """Runs INSIDE shard_map: the rank-2 CovState engine.
+
+    Identical math to `_sweep_body` (same gradient via the cached closed form,
+    same back-search, same accept rule, same final weights), but the D x D
+    algebra is carried: the full-residual gather happens ONCE per sweep (that
+    rebuild is the drift-bounding refresh) and each update moves only the
+    candidate row — one masked psum of N/alpha floats plus one variance
+    scalar.  Probes are O(D^2) SMW evaluations off the carried state instead
+    of O(m*D^2) Gram rebuilds + O(D^3) solves.
+    """
+    d = jax.lax.psum(1, "agents")
+    me = jax.lax.axis_index("agents")
+    n = y.shape[0]
+
+    if cfg.alpha > 1.0:
+        key, ksub = jax.random.split(key)
+        idx = cov.subsample_indices(ksub, n, cfg.alpha)   # same key everywhere
+    else:
+        idx = jnp.arange(n)
+    m = idx.shape[0]
+    split = cfg.alpha > 1.0          # Sec 4.1 exact-local-diagonal split
+    protected = cfg.delta > 0.0
+    uk = cfg.use_kernel
+
+    # the engine's ONLY full gather: residual rows + local variances, once
+    f_sub_all = jax.lax.all_gather(f_local[0][idx], "agents")       # (D, m)
+    r_sub0 = y[idx][None, :] - f_sub_all
+    if split:
+        diag0 = jax.lax.all_gather(jnp.mean((y - f_local[0]) ** 2), "agents")
+        cs0 = covstate.build(r_sub0, exact_diag=diag0, use_kernel=uk)
+    else:
+        cs0 = covstate.build(r_sub0, use_kernel=uk)
+
+    def robust_probe(cs, i, u):
+        return covstate.robust_eta_probe(cs, i, u, cfg.delta,
+                                         cfg.minimax_steps, cfg.minimax_lr)
+
+    def agent_update(i, carry):
+        f_local, params_local, cs = carry
+
+        if protected:
+            v = minimax.robust_weights(cs.a0, cfg.delta, steps=cfg.minimax_steps,
+                                       lr=cfg.minimax_lr,
+                                       a_init=cs.s / jnp.sum(cs.s))
+            eta0 = -minimax.robust_objective(v, cs.a0, cfg.delta)
+        else:
+            v = cs.s
+            eta0 = cs.eta_tilde
+
+        # closed-form gradient w.r.t. agent i's subsampled predictions off the
+        # cached solve (the dense body's autodiff holds diag_all fixed under
+        # the split, hence exclude_self there)
+        g_sub = gradient.cached_row_gradient(v, cs.r_sub, i, exclude_self=split)
+        gnorm = jnp.linalg.norm(g_sub) + 1e-30
+        g_unit = g_sub / gnorm
+
+        p = covstate.row_product(g_unit, cs.r_sub, use_kernel=uk) / m
+
+        def u_of(step):
+            w = -step * p
+            if split:
+                return w.at[i].set(0.0)    # probes hold the exact diag fixed
+            return w.at[i].add(step * step / (2.0 * m))   # ||g_unit|| = 1
+
+        def probe_obj(step):
+            u = u_of(step)
+            if protected:
+                return robust_probe(cs, i, u)
+            return covstate.eta_probe(cs, i, u)
+
+        def cond(state):
+            step, probes = state
+            return jnp.logical_and(~(probe_obj(step) > eta0),
+                                   probes < cfg.max_probes)
+
+        step0 = cfg.step0 * jnp.sqrt(jnp.asarray(m, jnp.float32))
+        step, probes = jax.lax.while_loop(
+            cond, lambda s: (s[0] * cfg.backtrack, s[1] + 1), (step0, 0))
+        step = jnp.where(probes >= cfg.max_probes, 0.0, step)
+
+        # scatter the step to full-length targets; projection runs everywhere,
+        # only the owner keeps it (no attribute data moved)
+        f_hat_full = f_local[0].at[idx].add(step * g_unit)
+        new_p = family.fit(jax.tree.map(lambda t: t[0], params_local),
+                           xcol[0], f_hat_full)
+        new_f = family.predict(new_p, xcol[0])
+
+        # broadcast the CANDIDATE row + its variance: the per-update traffic
+        cand_sub = jax.lax.psum(
+            jnp.where(me == i, new_f[idx], jnp.zeros_like(new_f[idx])), "agents")
+        cand_diag = jax.lax.psum(
+            jnp.where(me == i, jnp.mean((y - new_f) ** 2), 0.0), "agents")
+        r_cand = y[idx] - cand_sub
+        delta_sub = r_cand - cs.r_sub[i]
+        # accept is judged with the diag held fixed (exactly as the dense body
+        # scores eta_post against the OLD diag_all); the commit then moves it
+        u_eval = covstate.row_update_vector(
+            cs, i, delta_sub, ddiag=jnp.asarray(0.0) if split else None,
+            use_kernel=uk)
+        obj_post = robust_probe(cs, i, u_eval) if protected \
+            else covstate.eta_probe(cs, i, u_eval)
+        accept = obj_post > eta0
+
+        new_p = jax.tree.map(lambda new, old: jnp.where(accept, new, old[0]),
+                             new_p, params_local)
+        new_f = jnp.where(accept, new_f, f_local[0])
+        is_me = (me == i)
+        params_local = jax.tree.map(
+            lambda old, new: jnp.where(is_me, new[None], old), params_local, new_p)
+        f_local = jnp.where(is_me, new_f[None], f_local)
+
+        if split:
+            u_commit = u_eval.at[i].set(0.5 * (cand_diag - cs.a0[i, i]))
+        else:
+            u_commit = u_eval
+        cs_next = covstate.apply_row_update(cs, i, r_cand, u_commit)
+        cs = jax.tree.map(lambda a, b: jnp.where(accept, a, b), cs_next, cs)
+        return f_local, params_local, cs
+
+    f_local, params_local, cs = jax.lax.fori_loop(
+        0, d, agent_update, (f_local, params_local, cs0))
+
+    # final weights from the carried covariance — no re-gather needed
+    if protected:
+        w = minimax.robust_weights(cs.a0, cfg.delta, steps=cfg.minimax_steps,
+                                   lr=cfg.minimax_lr)
+    else:
+        w = ensemble.optimal_weights(cs.a0)
+    return f_local, params_local, w
+
+
 def distributed_sweep(mesh: Mesh, cfg: ICOAConfig, family):
     """Compiled shard_map sweep: (xcols, y, f, params, key) -> (f, params, w)."""
-    body = partial(_sweep_body, cfg, family)
+    body_fn = (_sweep_body_incremental if cfg.engine == "incremental"
+               else _sweep_body)
+    body = partial(body_fn, cfg, family)
     return jax.jit(_shmap(
         body, mesh,
         in_specs=(P("agents"), P(), P("agents"), P("agents"), P()),

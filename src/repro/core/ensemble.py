@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["optimal_weights", "eta", "eta_tilde", "eta_tilde_from_predictions", "combine"]
+__all__ = ["optimal_weights", "eta", "eta_tilde", "eta_tilde_from_predictions",
+           "combine", "surviving_weights"]
 
 _JITTER = 1e-10
 

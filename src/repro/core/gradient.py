@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 from repro.core.ensemble import eta_tilde_from_predictions
 
-__all__ = ["agent_gradient", "all_agent_gradients", "closed_form_gradient"]
+__all__ = ["agent_gradient", "all_agent_gradients", "closed_form_gradient",
+           "cached_row_gradient"]
 
 
 def agent_gradient(f: jnp.ndarray, y: jnp.ndarray, i: int) -> jnp.ndarray:
@@ -51,3 +52,26 @@ def closed_form_gradient(f: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     s = jnp.linalg.solve(a_mat + 1e-10 * jnp.eye(d, dtype=a_mat.dtype), jnp.ones((d,), a_mat.dtype))
     # d eta / d r_i = -2/N * s_i * (s^T R);  d r_i / d f_i = -1  => sign cancels
     return (2.0 / n) * s[:, None] * (s @ r)[None, :]
+
+
+def cached_row_gradient(v: jnp.ndarray, r_sub: jnp.ndarray, i,
+                        exclude_self: bool = False) -> jnp.ndarray:
+    """Closed-form probe gradient off a CACHED inverse action (no solve).
+
+    The incremental engine's form of the gradient above: v is the cached
+    s = (A0 + jitter I)^{-1} 1 carried by core.covstate.CovState (or the
+    robust weights a* under Minimax Protection — the Danskin term has the
+    same shape with s -> a*), and r_sub the (D, m) transmitted residual rows.
+    Returns d obj / d f_i over the transmitted positions,
+
+        grad_i = (2/m) * v_i * (v^T R_sub),
+
+    with `exclude_self=True` dropping the k = i term — required when the
+    diagonal of A0 is maintained exactly from the full residuals (Sec 4.1
+    split), because then A0_ii does not depend on the transmitted subsample
+    and the caller adds the exact-diagonal term (2/N) v_i^2 r_i separately.
+    """
+    cross = v @ r_sub
+    if exclude_self:
+        cross = cross - v[i] * r_sub[i]
+    return (2.0 / r_sub.shape[1]) * v[i] * cross

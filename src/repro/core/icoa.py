@@ -17,6 +17,17 @@ Minimax Protection (Sec 4.2) changes two things, both handled here via
 N/alpha subsample (fresh each sweep — the paper re-transmits a new random
 subsample every iteration), and the reported weights come from the robust
 minimax solver instead of the closed form.
+
+Two engines compute the same sweep (DESIGN.md §5):
+
+  * "incremental" (default): carries a core.covstate.CovState through the
+    agent loop — closed-form gradient off the cached (A0+jitter)^{-1} 1,
+    O(D^2) rank-2 SMW probes in the back-search, one fused row-Gram product
+    per accept/commit.  O(N*D + D^2) per objective probe.
+  * "dense": the parity oracle — rebuilds the D x D Gram and re-solves
+    A^{-1} 1 from scratch at every probe, O(N*D^2 + D^3) each.  Retained
+    because every incremental answer must match it (tests enforce 1e-5
+    relative history parity).
 """
 from __future__ import annotations
 
@@ -28,7 +39,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import covariance as cov
+from repro.core import covstate
 from repro.core import ensemble
+from repro.core import gradient
 from repro.core import minimax
 
 __all__ = ["ICOAConfig", "ICOAState", "init_state", "sweep", "run", "ensemble_predict"]
@@ -54,6 +67,8 @@ class ICOAConfig:
                                # the updated agent's row after each update —
                                # O(N*D) traffic/sweep instead of the paper's
                                # O(N*D^2), with identical math (§Perf C)
+    engine: str = "incremental"  # "incremental" (rank-2 CovState updates) |
+                               # "dense" (recompute-from-scratch parity oracle)
 
 
 @dataclasses.dataclass
@@ -100,12 +115,28 @@ def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
     zeta(f') <= g(a*, f') < g(a*, f) = zeta(f), an improvement in the
     surrogate is an improvement in the true worst-case objective — this is the
     numerically-stable realisation of the paper's "perturb (25)" remark.
+
+    cfg.engine picks the covariance engine: "incremental" carries a rank-2
+    updated CovState, "dense" recomputes every probe from scratch (oracle).
     """
     d, n = f.shape
     idx = None
     if cfg.alpha > 1.0:
         key, sub = jax.random.split(key)
         idx = cov.subsample_indices(sub, n, cfg.alpha)
+
+    if cfg.engine == "incremental":
+        params, f = _sweep_incremental(family, cfg, params, f, xcols, y, idx)
+    else:
+        params, f = _sweep_dense(family, cfg, params, f, xcols, y, idx)
+    return params, f, key
+
+
+def _sweep_dense(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
+                 xcols: jnp.ndarray, y: jnp.ndarray, idx: Optional[jnp.ndarray]):
+    """Recompute-from-scratch engine: every objective probe pays the full
+    O(N*D^2) Gram + O(D^3) solve.  The parity oracle for the engine below."""
+    d, n = f.shape
 
     if cfg.delta > 0.0:
         def obj(ff):
@@ -154,7 +185,127 @@ def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
         return params, f.at[i].set(f_i)
 
     params, f = jax.lax.fori_loop(0, d, update_agent, (params, f))
-    return params, f, key
+    return params, f
+
+
+def _sweep_incremental(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
+                       xcols: jnp.ndarray, y: jnp.ndarray,
+                       idx: Optional[jnp.ndarray]):
+    """Rank-2 CovState engine: O(N*D + D^2) per objective probe.
+
+    The CovState is rebuilt from f at sweep start — that full solve IS the
+    once-per-sweep refresh bounding SMW drift; every in-sweep probe/commit is
+    a rank-2 update.  Math is identical to `_sweep_dense` (same gradient, via
+    the closed form of core.gradient applied to the cached inverse action;
+    same back-search; same accept/reject), so histories agree to fp accuracy.
+    """
+    d, n = f.shape
+    m = n if idx is None else idx.shape[0]
+    uk = cfg.use_kernel
+    protected = cfg.delta > 0.0
+
+    r0 = y[None, :] - f
+    if idx is None:
+        cs0 = covstate.build(r0, use_kernel=uk)
+    else:
+        cs0 = covstate.build(r0[:, idx], exact_diag=jnp.sum(r0 * r0, axis=1) / n,
+                             use_kernel=uk)
+
+    def robust_probe(cs, i, u):
+        return covstate.robust_eta_probe(cs, i, u, cfg.delta,
+                                         cfg.minimax_steps, cfg.minimax_lr)
+
+    def update_agent(i, carry):
+        params, f, cs = carry
+        r_i = y - f[i]
+
+        if protected:
+            v = minimax.robust_weights(cs.a0, cfg.delta, steps=cfg.minimax_steps,
+                                       lr=cfg.minimax_lr,
+                                       a_init=cs.s / jnp.sum(cs.s))
+            eta0 = -minimax.robust_objective(v, cs.a0, cfg.delta)
+        else:
+            v = cs.s
+            eta0 = cs.eta_tilde
+
+        # closed-form gradient off the cached solve state (core.gradient)
+        if idx is None:
+            g = gradient.cached_row_gradient(v, cs.r_sub, i)
+        else:
+            # Sec 4.1 split: subsampled off-diagonals + exact local diagonal
+            g = (2.0 / n) * (v[i] * v[i]) * r_i
+            g = g.at[idx].add(
+                gradient.cached_row_gradient(v, cs.r_sub, i, exclude_self=True))
+        gnorm = jnp.linalg.norm(g) + 1e-30
+        g_unit = g / gnorm
+
+        # back-search: one row-Gram product, then O(D^2) SMW probes.  The
+        # probe direction is fixed, so u(step) assembles from precomputed
+        # pieces — the residual delta of probing step is -step * g_unit.
+        g_sub = g_unit if idx is None else g_unit[idx]
+        p = covstate.row_product(g_sub, cs.r_sub, use_kernel=uk) / m
+        gg = jnp.vdot(g_sub, g_sub)
+        c1 = jnp.vdot(r_i, g_unit)              # exact-diagonal cross term
+
+        def u_of(step):
+            w = -step * p
+            if idx is None:
+                return w.at[i].add(step * step * gg / (2.0 * m))
+            ddiag = (step * step - 2.0 * step * c1) / n   # ||g_unit|| = 1
+            return w.at[i].set(0.5 * ddiag)
+
+        def probe_obj(step):
+            u = u_of(step)
+            if protected:
+                return robust_probe(cs, i, u)
+            return covstate.eta_probe(cs, i, u)
+
+        def cond(state):
+            step, probes = state
+            improved = probe_obj(step) > eta0
+            return jnp.logical_and(~improved, probes < cfg.max_probes)
+
+        def body(state):
+            step, probes = state
+            return step * cfg.backtrack, probes + 1
+
+        step0 = cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype))  # scale-free start
+        step, probes = jax.lax.while_loop(cond, body, (step0, 0))
+        step = jnp.where(probes >= cfg.max_probes, 0.0, step)
+
+        f_hat = f[i] + step * g_unit
+        p_old = jax.tree.map(lambda t: t[i], params)
+        p_new = family.fit(p_old, xcols[i], f_hat)
+        f_new = family.predict(p_new, xcols[i])
+
+        # accept/reject AND commit share one rank-2 row update (the projected
+        # row is an arbitrary delta, so this is the second row-Gram product)
+        r_new = y - f_new
+        r_new_sub = r_new if idx is None else r_new[idx]
+        if idx is None:
+            ddiag_acc = None
+        else:
+            ddiag_acc = jnp.vdot(r_new, r_new) / n - cs.a0[i, i]
+        u_acc = covstate.row_update_vector(cs, i, r_new_sub - cs.r_sub[i],
+                                           ddiag=ddiag_acc, use_kernel=uk)
+        if cfg.accept_reject:
+            obj_post = (robust_probe(cs, i, u_acc) if protected
+                        else covstate.eta_probe(cs, i, u_acc))
+            accept = obj_post > eta0
+        else:
+            accept = jnp.bool_(True)
+
+        p_i = jax.tree.map(lambda new, old: jnp.where(accept, new, old), p_new, p_old)
+        f_i = jnp.where(accept, f_new, f[i])
+        params = jax.tree.map(lambda t, u_: t.at[i].set(u_), params, p_i)
+        f = f.at[i].set(f_i)
+
+        cs_next = covstate.apply_row_update(cs, i, r_new_sub, u_acc)
+        cs = jax.tree.map(lambda a, b: jnp.where(accept, a, b), cs_next, cs)
+        return params, f, cs
+
+    params, f, _ = jax.lax.fori_loop(0, d, update_agent, (params, f, cs0))
+    return params, f
 
 
 def _weights(f: jnp.ndarray, y: jnp.ndarray, cfg: ICOAConfig, key: jax.Array) -> jnp.ndarray:

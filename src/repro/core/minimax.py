@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import covariance as cov
 from repro.core import ensemble
 
 __all__ = ["robust_objective", "robust_weights", "delta_opt", "upper_bound"]
@@ -29,15 +30,20 @@ def robust_objective(a: jnp.ndarray, a0: jnp.ndarray, delta: float) -> jnp.ndarr
     return quad - delta * jnp.sum(a * a) + delta * l1 * l1
 
 
-def robust_weights(a0: jnp.ndarray, delta: float, steps: int = 300, lr: float = 0.05) -> jnp.ndarray:
+def robust_weights(a0: jnp.ndarray, delta: float, steps: int = 300, lr: float = 0.05,
+                   a_init: jnp.ndarray = None) -> jnp.ndarray:
     """Projected (sub)gradient descent on eq. 24 with 1^T a = 1.
 
     Init at the unprotected closed form a*(A0); project each iterate back onto
     the constraint plane. Uses the best-iterate rule (subgradient descent on the
-    |a| terms is not monotone).
+    |a| terms is not monotone).  `a_init` overrides the closed-form start —
+    the incremental covariance engine passes its cached (A0 + jitter I)^{-1} 1
+    normalised, saving the O(D^3) solve per probe; the same wildness guard
+    applies either way.
     """
     d = a0.shape[0]
-    a_init = ensemble.optimal_weights(a0)
+    if a_init is None:
+        a_init = ensemble.optimal_weights(a0)
     # guard: if A0 is an indefinite subsampled estimate, the closed form can be
     # wild — fall back to uniform init in that case
     a_init = jnp.where(jnp.all(jnp.isfinite(a_init)) & (jnp.max(jnp.abs(a_init)) < 1e3),
@@ -76,8 +82,13 @@ def delta_opt(alpha: float, n: int, sigma_max_sq: float, t_correct: bool = False
     m = N/alpha is tiny (m=5 at the paper's alpha=800) and the asymptotic
     1.96 quantile under-covers — we substitute the exact t_{m-2} quantile,
     which is what the paper's own pivot statistic (eq. 26) actually implies.
+
+    m comes from covariance.subsample_size — the same ceil + floor-at-2 rule
+    that sizes the actually-transmitted index set and the api layer's wire-byte
+    accounting, so the eq. 27 box, the bytes on the wire and the sampler agree
+    at extreme compression (alpha=800, N=4000 => m=5, not the raw 5.0 float).
     """
-    m = n / alpha
+    m = cov.subsample_size(n, alpha)
     factor = _t975(m - 2) if t_correct else 1.96
     return float(min(factor * sigma_max_sq / m ** 0.5, 2.0 * sigma_max_sq))
 

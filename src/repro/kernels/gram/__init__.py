@@ -1,3 +1,3 @@
-from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ops import gram, row_gram
 
-__all__ = ["gram"]
+__all__ = ["gram", "row_gram"]

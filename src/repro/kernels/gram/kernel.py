@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gram_pallas"]
+__all__ = ["gram_pallas", "row_gram_pallas"]
 
 
 def _gram_kernel(r_ref, out_ref, acc_ref, *, nk: int):
@@ -56,3 +56,49 @@ def gram_pallas(r: jnp.ndarray, *, block_n: int = 2048, interpret: bool = True) 
         scratch_shapes=[pltpu.VMEM((dp, dp), jnp.float32)],
         interpret=interpret,
     )(r)
+
+
+def _row_gram_kernel(r_ref, v_ref, out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = r_ref[...].astype(jnp.float32)         # (Dp, BN)
+    vec = v_ref[...].astype(jnp.float32)         # (8, BN); row 0 is the payload
+    acc_ref[...] += jax.lax.dot_general(
+        blk, vec, (((1,), (1,)), ((), ())),      # R_blk @ v_blk^T -> (Dp, 8)
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def row_gram_pallas(r: jnp.ndarray, v: jnp.ndarray, *, block_n: int = 2048,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Fused row-Gram r_i @ R^T: the one unavoidable O(N*D) product of the
+    incremental covariance engine's rank-2 row update (DESIGN.md §5).
+
+    r: (Dp, Np), v: (8, Np) with the probe row in v[0] and zero padding below
+    (8 = fp32 sublane width); Np a multiple of block_n. Returns fp32 (Dp, 8)
+    whose column 0 is R @ v[0]. Same blocked N-grid + VMEM fp32 accumulator
+    as `gram_pallas`; the (Dp, BN) x (BN, 8) product rides the MXU with the
+    vector broadcast across sublanes.
+    """
+    dp, np_ = r.shape
+    assert np_ % block_n == 0, (np_, block_n)
+    assert v.shape == (8, np_), (v.shape, np_)
+    nk = np_ // block_n
+    return pl.pallas_call(
+        functools.partial(_row_gram_kernel, nk=nk),
+        grid=(nk,),
+        in_specs=[pl.BlockSpec((dp, block_n), lambda k: (0, k)),
+                  pl.BlockSpec((8, block_n), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((dp, 8), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((dp, 8), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dp, 8), jnp.float32)],
+        interpret=interpret,
+    )(r, v)

@@ -10,10 +10,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram.kernel import gram_pallas
-from repro.kernels.gram.ref import gram_ref
+from repro.kernels.gram.kernel import gram_pallas, row_gram_pallas
+from repro.kernels.gram.ref import gram_ref, row_gram_ref
 
-__all__ = ["gram"]
+__all__ = ["gram", "row_gram"]
 
 _LANE = 128
 
@@ -39,3 +39,25 @@ def gram(r: jnp.ndarray, use_pallas: bool = False, interpret: bool = True,
     rp = jnp.zeros((dp, np_), r.dtype).at[:d, :n].set(r)
     out = gram_pallas(rp, block_n=bn, interpret=interpret)
     return out[:d, :d]
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_n"))
+def row_gram(v: jnp.ndarray, r: jnp.ndarray, use_pallas: bool = False,
+             interpret: bool = True, block_n: int = 2048) -> jnp.ndarray:
+    """(N,), (D, N) -> (D,) = R @ v with fp32 accumulation.
+
+    The incremental covariance engine's hot product: one residual-row delta
+    against every agent's transmitted residuals (the rank-2 update of
+    core.covstate). Padding/fallback mirror `gram`: `use_pallas=True` routes
+    through the TPU kernel (interpret=True executes on CPU for validation).
+    """
+    d, n = r.shape
+    if not use_pallas:
+        return row_gram_ref(v, r)
+    bn = min(block_n, _pad_to(n, _LANE))
+    dp = _pad_to(d, _LANE)
+    np_ = _pad_to(n, bn)
+    rp = jnp.zeros((dp, np_), r.dtype).at[:d, :n].set(r)
+    vp = jnp.zeros((8, np_), v.dtype).at[0, :n].set(v)
+    out = row_gram_pallas(rp, vp, block_n=bn, interpret=interpret)
+    return out[:d, 0]

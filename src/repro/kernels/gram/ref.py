@@ -3,10 +3,15 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["gram_ref"]
+__all__ = ["gram_ref", "row_gram_ref"]
 
 
 def gram_ref(r: jnp.ndarray) -> jnp.ndarray:
     """(D, N) -> (D, D) = R @ R.T, fp32 accumulation."""
     r32 = r.astype(jnp.float32)
     return r32 @ r32.T
+
+
+def row_gram_ref(v: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """(N,), (D, N) -> (D,) = R @ v, fp32 accumulation."""
+    return r.astype(jnp.float32) @ v.astype(jnp.float32)

@@ -132,6 +132,31 @@ def test_linear_agents_cannot_beat_linear_regression(friedman1_small):
     assert hist["train_mse"][-1] >= ls_mse - 1e-5
 
 
+@pytest.mark.parametrize("alpha,delta", [(1.0, 0.0), (20.0, 0.0), (1.0, 0.02),
+                                         (20.0, 0.01)])
+def test_incremental_engine_matches_dense_history(friedman1_small, alpha, delta):
+    """The rank-2 CovState engine must reproduce the dense oracle's per-sweep
+    history (train/test MSE, eta) and final weights across every protection
+    setting — 1e-5 relative, the repo's engine-parity contract (in float64 the
+    two paths agree to machine precision; see test_covstate.py)."""
+    xc, y, xct, yt = friedman1_small
+    fam = PolynomialFamily(n_cols=1, degree=4)
+    kw = dict(n_sweeps=4, alpha=alpha, delta=delta, minimax_steps=80)
+    _, w_d, h_d = icoa.run(fam, icoa.ICOAConfig(engine="dense", **kw),
+                           xc, y, xct, yt)
+    _, w_i, h_i = icoa.run(fam, icoa.ICOAConfig(engine="incremental", **kw),
+                           xc, y, xct, yt)
+    for k in ("train_mse", "test_mse", "eta"):
+        np.testing.assert_allclose(h_i[k], h_d[k], rtol=1e-5, atol=1e-8,
+                                   err_msg=f"history key {k}")
+    np.testing.assert_allclose(np.asarray(w_i), np.asarray(w_d),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_engine_default_is_incremental():
+    assert icoa.ICOAConfig().engine == "incremental"
+
+
 def test_residual_refitting_is_greedier_on_train_error(friedman1_small):
     """Paper Fig. 1 mechanism: refit greedily minimises TRAIN error (so its
     train error undercuts ICOA's), while ICOA's test error stays competitive.

@@ -32,13 +32,57 @@ assert hist2["test_mse"][-1] < hist2["test_mse"][0], hist2["test_mse"]
 print("DISTRIBUTED_OK")
 """
 
+# dense-vs-incremental engine parity under shard_map, in float64 so the only
+# admissible difference is the algorithm itself (the two engines are
+# mathematically identical; fp32 accumulation noise would obscure that)
+_PARITY_SCRIPT = r"""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.data.friedman import make_dataset
+from repro.data.partition import one_per_agent
+from repro.agents import PolynomialFamily
+from repro.core import icoa
+from repro.core.distributed import run_distributed
 
-@pytest.mark.slow
-def test_distributed_icoa_five_agents():
+assert len(jax.devices()) == 5, jax.devices()
+xtr, ytr, xte, yte = make_dataset(1, n_train=600, n_test=600, seed=0)
+xcols = jnp.stack([xtr[:, g] for g in one_per_agent(5)])
+xcols_te = jnp.stack([xte[:, g] for g in one_per_agent(5)])
+fam = PolynomialFamily(n_cols=1, degree=4)
+
+for alpha, delta in [(1.0, 0.0), (20.0, 0.0), (1.0, 0.02), (20.0, 0.01)]:
+    kw = dict(n_sweeps=3, alpha=alpha, delta=delta, minimax_steps=60)
+    _, w_d, h_d = run_distributed(fam, icoa.ICOAConfig(engine="dense", **kw),
+                                  xcols, ytr, xcols_te, yte)
+    _, w_i, h_i = run_distributed(fam, icoa.ICOAConfig(engine="incremental", **kw),
+                                  xcols, ytr, xcols_te, yte)
+    for k in ("train_mse", "test_mse", "eta"):
+        np.testing.assert_allclose(h_i[k], h_d[k], rtol=1e-5, atol=1e-12,
+                                   err_msg=f"alpha={alpha} delta={delta} {k}")
+    np.testing.assert_allclose(np.asarray(w_i), np.asarray(w_d), rtol=1e-5,
+                               err_msg=f"alpha={alpha} delta={delta} weights")
+print("ENGINE_PARITY_OK")
+"""
+
+
+def _run_in_subprocess(script, extra_env=()):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=5"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900)
+    env.update(extra_env)
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=900)
+
+
+@pytest.mark.slow
+def test_distributed_icoa_five_agents():
+    out = _run_in_subprocess(_SCRIPT)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "DISTRIBUTED_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_distributed_engine_parity_all_protection_settings():
+    out = _run_in_subprocess(_PARITY_SCRIPT, extra_env=(("JAX_ENABLE_X64", "1"),))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ENGINE_PARITY_OK" in out.stdout

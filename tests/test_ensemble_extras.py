@@ -66,3 +66,11 @@ def test_agent_failure_degrades_gracefully():
         v = float(w @ a @ w)
         assert v >= full - 1e-6          # can't beat the full ensemble
         assert v < 10 * full             # but no catastrophic blow-up
+
+
+def test_surviving_weights_is_exported():
+    """`surviving_weights` must be visible to star-imports / API docs."""
+    assert "surviving_weights" in ensemble.__all__
+    ns = {}
+    exec("from repro.core.ensemble import *", ns)
+    assert "surviving_weights" in ns

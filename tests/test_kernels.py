@@ -10,8 +10,8 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.flash_decode.ref import decode_ref
-from repro.kernels.gram.ops import gram
-from repro.kernels.gram.ref import gram_ref
+from repro.kernels.gram.ops import gram, row_gram
+from repro.kernels.gram.ref import gram_ref, row_gram_ref
 
 
 def _tol(dt):
@@ -39,6 +39,32 @@ def test_gram_paper_shape():
     r = jax.random.normal(jax.random.PRNGKey(0), (5, 4000))
     np.testing.assert_allclose(np.asarray(gram(r, use_pallas=True)),
                                np.asarray(gram_ref(r)), rtol=1e-4, atol=1e-2)
+
+
+# ---------------------------------------------------------------- row gram
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(2, 40), n=st.integers(3, 700),
+       dt=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       block=st.sampled_from([128, 256]))
+def test_row_gram_matches_ref(d, n, dt, block):
+    r = (jax.random.normal(jax.random.PRNGKey(d * 991 + n), (d, n))).astype(dt)
+    v = (jax.random.normal(jax.random.PRNGKey(n * 7 + d), (n,))).astype(dt)
+    out = row_gram(v, r, use_pallas=True, block_n=block)
+    ref = row_gram_ref(v, r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3 if dt == jnp.float32 else 2e-2,
+                               atol=1e-2 * n ** 0.5)
+
+
+def test_row_gram_is_one_gram_row():
+    """row_gram(r_i, R) is exactly row i of the full Gram — the fused product
+    the incremental engine's rank-2 update is built on."""
+    r = jax.random.normal(jax.random.PRNGKey(1), (7, 2048))
+    full = gram_ref(r)
+    np.testing.assert_allclose(np.asarray(row_gram(r[3], r, use_pallas=True)),
+                               np.asarray(full[3]), rtol=1e-4, atol=1e-2)
 
 
 # -------------------------------------------------------------- flash attn
