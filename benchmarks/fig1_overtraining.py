@@ -1,5 +1,5 @@
 """Paper Fig. 1: ICOA vs residual refitting convergence/overtraining,
-driven through repro.api.
+driven through the compiled Monte-Carlo layer (api.batch_fit).
 
 The paper's Fig. 1 used CART regression trees, which do not lower to XLA
 (DESIGN.md §3.3); we evaluate the claim with BOTH available families:
@@ -11,7 +11,10 @@ The paper's Fig. 1 used CART regression trees, which do not lower to XLA
     overtraining depends on the hypothesis space — recorded as-is in
     EXPERIMENTS.md (the tree-specific divergence is NOT claimed).
 
-Derived values: final train;test;gap per algorithm per family + curves.
+Every cell is a Monte-Carlo mean over `trials` independent trials (fresh
+data + solver streams), executed as ONE jitted vmap per algorithm.
+Derived values: final train;test(±std);gap per algorithm per family +
+mean test curves.
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ _FAMILIES = {
 }
 
 
-def run(cycles: int = 10) -> list[str]:
+def run(cycles: int = 10, trials: int = 3) -> list[str]:
     out = []
     for label, (agent, n) in _FAMILIES.items():
         base = api.ExperimentSpec(
@@ -32,15 +35,18 @@ def run(cycles: int = 10) -> list[str]:
             agent=agent,
             solver=api.SolverSpec(n_sweeps=cycles),
         )
-        refit, t_rr = timed(api.fit, api.spec_with(base, "solver.name",
-                                                   "residual_refitting"))
-        res, t_ic = timed(api.fit, base)
-        for alg, r, t in (("refit", refit, t_rr), ("icoa", res, t_ic)):
-            tr, te = r.history.train_mse[-1], r.history.test_mse[-1]
+        refit, t_rr = timed(api.batch_fit,
+                            api.spec_with(base, "solver.name",
+                                          "residual_refitting"), trials)
+        res, t_ic = timed(api.batch_fit, base, trials)
+        for alg, rs, t in (("refit", refit, t_rr), ("icoa", res, t_ic)):
+            tr = rs.mean("train_mse")[-1]
+            te, ts = rs.mean("test_mse")[-1], rs.std("test_mse")[-1]
             out.append(row(f"fig1/{label}/{alg}", t,
-                           f"train={tr:.5f};test={te:.5f};gap={te / max(tr, 1e-9):.2f}"))
+                           f"train={tr:.5f};test={te:.5f}±{ts:.5f};"
+                           f"gap={te / max(tr, 1e-9):.2f}"))
         out.append(row(f"fig1/{label}/icoa_test_curve", 0,
-                       ";".join(f"{v:.4f}" for v in res.history.test_mse)))
+                       ";".join(f"{v:.4f}" for v in res.mean("test_mse"))))
         out.append(row(f"fig1/{label}/refit_test_curve", 0,
-                       ";".join(f"{v:.4f}" for v in refit.history.test_mse)))
+                       ";".join(f"{v:.4f}" for v in refit.mean("test_mse"))))
     return out

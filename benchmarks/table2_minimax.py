@@ -1,5 +1,6 @@
 """Paper Table 2: ICOA + Minimax Protection on Friedman-1 over the
-(compression rate alpha) x (protection delta) grid, driven through repro.api.
+(compression rate alpha) x (protection delta) grid, driven through the
+compiled Monte-Carlo layer (api.batch_fit).
 
 delta values are scaled to the data (sigma^2_max of the initial residuals)
 because the paper's absolute deltas correspond to a different residual
@@ -7,8 +8,9 @@ normalisation (DESIGN.md §3.3); the phenomena to reproduce are:
   * delta = 0 and alpha >> 1 -> divergence ("NaN" cells in the paper),
   * sufficient delta stabilises every alpha,
   * once converged, the error depends weakly on alpha.
-A cell is reported DIVERGED when the final test error exceeds 10x the
-unprotected full-communication optimum.
+Each cell is a Monte-Carlo mean over `trials` trials; a cell is reported
+DIVERGED when the mean final test error exceeds 10x the unprotected
+full-communication optimum.
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ from repro import api
 from benchmarks.common import row, timed
 
 
-def run(n: int = 4000, sweeps: int = 8) -> list[str]:
+def run(n: int = 4000, sweeps: int = 8, trials: int = 2) -> list[str]:
     base = api.ExperimentSpec(
         data=api.DataSpec(n_train=n, n_test=n, seed=0),
         agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),
@@ -37,11 +39,12 @@ def run(n: int = 4000, sweeps: int = 8) -> list[str]:
         for spec in api.grid_specs(
                 api.spec_with(base, "solver.delta", delta_rel * s2max),
                 {"solver.alpha": alphas}):
-            res, t = timed(api.fit, spec)
-            err = res.test_mse
+            rs, t = timed(api.batch_fit, spec, trials)
+            err = rs.test_mse_mean
             if base_err is None:
                 base_err = err
-            label = f"{err:.4f}" if err < 10 * base_err else f"DIVERGED({err:.2g})"
+            label = (f"{err:.4f}±{rs.test_mse_std:.4f}"
+                     if err < 10 * base_err else f"DIVERGED({err:.2g})")
             out.append(row(f"table2/alpha{spec.solver.alpha:g}/delta{delta_rel:g}",
                            t, label))
     return out

@@ -4,7 +4,10 @@ Each agent owns its attribute columns on its own device; residual exchange
 is an `all_gather` over the "agents" mesh axis, with Minimax-Protection
 compression shrinking the payload alpha-fold — the paper's trade-off as a
 collective schedule. The ONLY change from the local quickstart is
-`backend=shard_map` in the spec.
+`backend=shard_map` in the spec.  `trials=2` makes every point a small
+Monte-Carlo mean: on shard_map `batch_fit` transparently falls back to
+serial per-trial fits (the collectives are one-agent-per-device, so the
+compiled vmap path is local-backend only).
 
     PYTHONPATH=src python examples/icoa_distributed.py
 (the XLA_FLAGS line below must run before jax initialises)
@@ -27,19 +30,19 @@ BASE = api.ExperimentSpec(
 
 def main():
     print(f"devices: {jax.devices()}")
-    results = api.sweep(BASE, {
+    result_sets = api.sweep(BASE, {
         "solver.alpha": [1.0, 20.0, 100.0],
         "solver.delta": [0.0, 0.01, 0.02],
-    }, paired=True)
+    }, paired=True, trials=2)
     labels = [
         "full residual exchange (O(N D^2) per sweep)",
         "5% exchange + Minimax Protection",
         "1% exchange + Minimax Protection",
     ]
-    for label, r in zip(labels, results):
-        tm = r.history.test_mse
-        print(f"{label:52} test MSE {tm[0]:.4f} -> {tm[-1]:.4f}"
-              f"   wire {r.history.total_bytes / 1e6:.2f} MB")
+    for label, rs in zip(labels, result_sets):
+        tm, ts = rs.mean("test_mse"), rs.std("test_mse")
+        print(f"{label:52} test MSE {tm[0]:.4f} -> {tm[-1]:.4f} ± {ts[-1]:.4f}"
+              f"   wire {rs.cumulative_bytes[-1] / 1e6:.2f} MB")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
-"""repro.api — one declarative entry point for every solver, backend and
-protection level (DESIGN: the facade over core/).
+"""repro.api — one declarative entry point for every scenario, solver,
+backend and protection level (DESIGN: the facade over core/ and data/).
 
     from repro import api
 
@@ -14,29 +14,42 @@ protection level (DESIGN: the facade over core/).
 
 Swap `solver.name` for "averaging" / "residual_refitting", or `backend.name`
 for "shard_map" (one device per agent), without touching anything else.
-`api.sweep(spec, {"solver.alpha": [1, 10, 100]})` runs trade-off grids;
-`result.save(dir)` / `api.load(dir)` persist through checkpoint.io.
+Scenarios are open registries (api v2, DESIGN.md §6): `data.SOURCES` /
+`@register_source` for generators (`DataSpec.n_attrs` is free), and
+`partition.PARTITIONS` / `@register_partition` for attribute assignments.
+
+Monte Carlo is compiled: `api.batch_fit(spec, n_trials=32)` runs every trial
+— data generation included — as ONE jitted vmap and returns a `ResultSet`
+with mean/std trade-off curves; `api.sweep(spec, grid, trials=8)` does that
+per grid point.  `result.save(dir)` / `api.load(dir)` persist through
+checkpoint.io.
 """
 from __future__ import annotations
 
 from dataclasses import replace
 
+from repro.data.partition import PARTITIONS, register_partition
+from repro.data.sources import SOURCES, register_source
+
 from repro.api.io import load_result as load
 from repro.api.io import save_result
-from repro.api.result import History, Result
+from repro.api.result import History, Result, ResultSet
+from repro.api.runner import batch_fit, build_runner, trial_spec
 from repro.api.solvers import (SOLVERS, Solver, comm_floats_per_sweep,
                                register_solver, run_solver)
 from repro.api.specs import (AgentSpec, BackendSpec, DataSpec, Dataset,
                              ExperimentSpec, SolverSpec, SpecError,
-                             spec_from_dict, spec_to_dict)
+                             clear_dataset_cache, spec_from_dict, spec_to_dict)
 from repro.api.sweep import grid_specs, spec_with, sweep, zip_specs
 
 __all__ = [
     "AgentSpec", "BackendSpec", "DataSpec", "Dataset", "ExperimentSpec",
-    "History", "Result", "Solver", "SOLVERS", "SpecError",
-    "comm_floats_per_sweep", "fit", "grid_specs", "load", "register_solver",
-    "replace", "save_result", "spec_from_dict", "spec_to_dict", "spec_with",
-    "sweep", "zip_specs",
+    "History", "PARTITIONS", "Result", "ResultSet", "SOLVERS", "SOURCES",
+    "Solver", "SpecError", "batch_fit", "build_runner", "clear_dataset_cache",
+    "comm_floats_per_sweep", "fit", "grid_specs", "load", "register_partition",
+    "register_solver", "register_source", "replace", "save_result",
+    "spec_from_dict", "spec_to_dict", "spec_with", "sweep", "trial_spec",
+    "zip_specs",
 ]
 
 

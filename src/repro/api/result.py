@@ -13,17 +13,18 @@ performance trade-off directly as `(cumulative_bytes, test_mse)` pairs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import covariance as cov
 from repro.core import ensemble, icoa, minimax
 
 from repro.api.specs import Dataset, ExperimentSpec
 
-__all__ = ["History", "Result"]
+__all__ = ["History", "Result", "ResultSet"]
 
 
 @dataclasses.dataclass
@@ -104,3 +105,64 @@ class Result:
         from repro.api import io  # local import: io imports Result
 
         return io.save_result(directory, self)
+
+
+@dataclasses.dataclass
+class ResultSet:
+    """Monte-Carlo aggregate: every trial of ONE spec (api.batch_fit).
+
+    Each element is a full per-trial `Result` whose spec carries that trial's
+    seeds (trial t offsets both `seed` and `data.seed` by t).  Aggregates are
+    computed over the trial axis; histories are truncated to the shortest
+    trial before stacking (serial-fallback trials may early-stop on eps — the
+    compiled batch runner always records the full static schedule).
+
+    The paper's figures are one call:
+
+        bytes, mean, std = rs.curve("test_mse")   # trade-off curve ± std
+    """
+
+    spec: ExperimentSpec          # the base spec (trial 0 runs it verbatim)
+    results: List[Result]
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, i: int) -> Result:
+        return self.results[i]
+
+    @property
+    def n_records(self) -> int:
+        return min(len(r.history.train_mse) for r in self.results)
+
+    def stack(self, field: str = "test_mse") -> np.ndarray:
+        """(n_trials, n_records) history matrix for one History field."""
+        t = self.n_records
+        return np.asarray([getattr(r.history, field)[:t] for r in self.results])
+
+    def mean(self, field: str = "test_mse") -> np.ndarray:
+        return self.stack(field).mean(axis=0)
+
+    def std(self, field: str = "test_mse") -> np.ndarray:
+        return self.stack(field).std(axis=0)
+
+    @property
+    def cumulative_bytes(self) -> np.ndarray:
+        """Analytic cumulative wire bytes per record (identical across trials
+        — the cost model is spec-static, not data-dependent)."""
+        return np.cumsum(self.stack("bytes_transmitted")[0])
+
+    def curve(self, field: str = "test_mse") -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The paper's trade-off curve: (cumulative_bytes, mean, std)."""
+        return self.cumulative_bytes, self.mean(field), self.std(field)
+
+    @property
+    def test_mse_mean(self) -> float:
+        return float(self.mean("test_mse")[-1])
+
+    @property
+    def test_mse_std(self) -> float:
+        return float(self.std("test_mse")[-1])

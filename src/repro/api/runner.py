@@ -1,0 +1,163 @@
+"""Compiled Monte-Carlo execution (api v2): one program, many trials.
+
+Every figure in the paper is an average over independent trials of one
+scenario.  `fit` runs one trial eagerly; this module splits the work along
+the static/dynamic line instead:
+
+    run_fn = build_runner(spec)      # spec-static structure closed over
+    out    = run_fn(trial)           # ONLY the trial index / PRNG seeds trace
+
+Everything decidable from the spec — array shapes, the resolved agent
+family, the partition, the solver schedule, the covariance engine — is
+closed over at build time; the returned `run_fn` takes a (traced) trial
+offset, regenerates that trial's dataset INSIDE the trace (sources.
+make_dataset is seed-traceable), and runs the solver's `*_scan` variant.
+`batch_fit` then executes all trials as one `jit(vmap(run_fn))` on the
+local backend — no Python loop, one XLA program — and falls back to serial
+`fit` calls where vmap cannot reach (shard_map collectives, Pallas-kernel
+Gram paths).
+
+Trial t of a spec is exactly `fit(trial_spec(spec, t))`: both the data seed
+and the solver seed are offset by t, so compiled histories are checked
+against serial runs to machine precision (tests/test_api_v2.py).  The one
+semantic difference: the compiled schedule is static, so `solver.eps`
+early-stopping does not apply (a data-dependent break cannot be staged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, icoa
+from repro.data import sources as data_sources
+
+from repro.api.result import History, Result, ResultSet
+from repro.api.solvers import _bytes_history
+from repro.api.specs import ExperimentSpec, SpecError
+
+__all__ = ["build_runner", "batch_fit", "trial_spec"]
+
+
+def trial_spec(spec: ExperimentSpec, trial: int) -> ExperimentSpec:
+    """The spec of Monte-Carlo trial `trial`: fresh data AND solver streams
+    (both seeds offset by the trial index; trial 0 is the spec verbatim)."""
+    if trial == 0:
+        return spec
+    return dataclasses.replace(
+        spec, seed=spec.seed + trial,
+        data=dataclasses.replace(spec.data, seed=spec.data.seed + trial))
+
+
+def build_runner(spec: ExperimentSpec) -> Callable[[Any], Dict[str, Any]]:
+    """Close over the spec-static structure; return `run_fn(trial)`.
+
+    `run_fn` is pure and fully traceable: `trial` may be a traced int32, so
+    `jax.vmap(run_fn)(jnp.arange(k))` stages k independent trials into one
+    program.  It returns a dict of jnp values:
+
+        params    stacked agent params, leading dim D
+        weights   (D,) combination weights
+        f         (D, N_train) final per-agent train predictions
+        train_mse / test_mse / eta   history arrays (records axis)
+    """
+    spec.validate()
+    if spec.backend.name != "local":
+        raise SpecError(
+            "build_runner compiles the local backend only; shard_map runs "
+            "one-agent-per-device collectives that vmap cannot batch — "
+            "batch_fit falls back to serial fit() there")
+    dspec = spec.data
+    groups = dspec.groups
+    family = spec.agent.resolve(n_cols=len(groups[0]))
+    solver = spec.solver
+
+    def run_fn(trial) -> Dict[str, Any]:
+        xtr, ytr, xte, yte = data_sources.make_dataset(
+            dspec.source, n_train=dspec.n_train, n_test=dspec.n_test,
+            seed=dspec.seed + trial, noise=dspec.noise,
+            n_attrs=dspec.n_attrs, options=dspec.source_options)
+        xcols = jnp.stack([xtr[:, g] for g in groups])
+        xcols_test = jnp.stack([xte[:, g] for g in groups])
+        seed = spec.seed + trial
+        d = len(groups)
+
+        if solver.name == "icoa":
+            params, f, weights, hist = icoa.run_scan(
+                family, solver.icoa_config(), xcols, ytr, xcols_test, yte,
+                seed)
+        elif solver.name == "averaging":
+            params, f, hist = baselines.averaging_scan(
+                family, xcols, ytr, xcols_test, yte, seed)
+            weights = jnp.ones((d,), f.dtype) / d
+        elif solver.name == "residual_refitting":
+            params, f, hist = baselines.residual_refitting_scan(
+                family, xcols, ytr, xcols_test, yte, solver.n_sweeps, seed)
+            # the ring ensemble is the SUM of agents (see api.solvers)
+            weights = jnp.ones((d,), f.dtype)
+        else:
+            raise SpecError(
+                f"no compiled runner for solver {solver.name!r}; registered "
+                f"third-party solvers run through fit()/the serial fallback")
+        return {"params": params, "weights": weights, "f": f, **hist}
+
+    return run_fn
+
+
+def _can_compile(spec: ExperimentSpec) -> bool:
+    # Pallas Gram kernels do not batch under vmap; shard_map is per-device
+    return (spec.backend.name == "local" and not spec.solver.use_kernel
+            and spec.solver.name in ("icoa", "averaging", "residual_refitting"))
+
+
+def batch_fit(spec: ExperimentSpec, n_trials: int, *,
+              compiled: Optional[bool] = None) -> ResultSet:
+    """Run `n_trials` independent Monte-Carlo trials of one spec.
+
+    Local backend: one jitted `vmap` over the trial axis — a single compiled
+    program generates every trial's data and runs every solve.  `compiled=
+    False` forces the serial path (k `fit()` calls — what shard_map, Pallas
+    kernels, and third-party solvers always use); `compiled=True` errors if
+    the spec cannot compile.  Per-trial histories of the two paths agree to
+    machine precision; the compiled path ignores `solver.eps` (static
+    schedule).
+    """
+    spec.validate()
+    if n_trials < 1:
+        raise SpecError(f"need n_trials >= 1, got {n_trials}")
+    if compiled is None:
+        compiled = _can_compile(spec)
+    if not compiled:
+        from repro.api import fit  # local import: api.__init__ imports this module
+
+        return ResultSet(spec, [fit(trial_spec(spec, t)) for t in range(n_trials)])
+
+    run_fn = build_runner(spec)
+    out = jax.jit(jax.vmap(run_fn))(jnp.arange(n_trials))
+
+    groups = spec.data.groups
+    family = spec.agent.resolve(n_cols=len(groups[0]))
+    d, n = len(groups), spec.data.n_train
+    n_records = out["train_mse"].shape[1]
+    bytes_hist = _bytes_history(
+        spec.solver, d, n, n_records,
+        initial_record=spec.solver.name != "residual_refitting")
+
+    # one bulk device-to-host transfer per history field, not one per scalar
+    host = {k: np.asarray(out[k]) for k in ("train_mse", "test_mse", "eta")}
+    results = []
+    for t in range(n_trials):
+        take = lambda tree: jax.tree.map(lambda a: a[t], tree)
+        history = History(
+            train_mse=[float(v) for v in host["train_mse"][t]],
+            test_mse=[float(v) for v in host["test_mse"][t]],
+            eta=[float(v) for v in host["eta"][t]],
+            bytes_transmitted=list(bytes_hist))
+        results.append(Result(
+            spec=trial_spec(spec, t), family=family,
+            params=take(out["params"]), weights=out["weights"][t],
+            f=out["f"][t], history=history, data=None))
+    return ResultSet(spec, results)

@@ -1,17 +1,18 @@
 """The declarative experiment description (DESIGN: one spec == one run).
 
-Every knob of the paper's trade-off surface — solver x protection (alpha,
-delta) x communication schedule x backend — is a field of the frozen
+Every knob of the paper's trade-off surface — scenario x solver x protection
+(alpha, delta) x communication schedule x backend — is a field of the frozen
 `ExperimentSpec` dataclass tree:
 
-    DataSpec      which Friedman problem, sizes, noise, attribute partition
+    DataSpec      which scenario (data.SOURCES registry), sizes, noise,
+                  attribute count, and partition (partition.PARTITIONS)
     AgentSpec     hypothesis-space family (resolves the agents.FAMILIES registry)
     SolverSpec    icoa | averaging | residual_refitting + every ICOA knob
     BackendSpec   local (vmap, single process) | shard_map (one device/agent)
 
 Specs are plain data: hashable, `dataclasses.replace`-able (how `sweep()`
-builds grids) and JSON round-trippable (`to_dict` / `from_dict`), so a run is
-reproducible from its saved spec alone.
+builds grids) and JSON round-trippable (`to_dict` / `from_dict`, strict on
+unknown keys), so a run is reproducible from its saved spec alone.
 """
 from __future__ import annotations
 
@@ -23,19 +24,23 @@ import jax.numpy as jnp
 
 from repro.agents import FAMILIES
 from repro.core.icoa import ICOAConfig
-from repro.data import friedman
-from repro.data.partition import one_per_agent, round_robin, validate_partition
+from repro.data import sources as data_sources
+from repro.data.partition import PARTITIONS, make_groups, validate_partition
+from repro.data.sources import SOURCES
 
 __all__ = [
     "DataSpec", "AgentSpec", "SolverSpec", "BackendSpec", "ExperimentSpec",
     "Dataset", "SpecError", "spec_to_dict", "spec_from_dict",
+    "clear_dataset_cache",
 ]
 
-_SOURCES = ("friedman1", "friedman2", "friedman3")
-_PARTITIONS = ("one_per_agent", "round_robin")
 _SOLVERS = ("icoa", "averaging", "residual_refitting")
 _BACKENDS = ("local", "shard_map")
-_N_ATTRS = 5  # every Friedman problem has 5 covariates (paper Sec 3.2)
+
+# the ONE place the dataset memo is sized: large-n_trials sweeps re-use the
+# base datasets but must not pin every per-trial device array (the compiled
+# batch runner never touches this cache — it generates data inside the trace)
+_DATASET_CACHE_SIZE = 8
 
 
 class SpecError(ValueError):
@@ -54,36 +59,75 @@ class Dataset(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class DataSpec:
-    source: str = "friedman1"          # friedman1 | friedman2 | friedman3
+    source: str = "friedman1"          # key into data.SOURCES
     n_train: int = 2000
     n_test: int = 2000
     noise: float = 0.0
     seed: int = 0
-    partition: str = "one_per_agent"   # one_per_agent | round_robin
-    n_agents: Optional[int] = None     # round_robin only; must divide 5
+    n_attrs: Optional[int] = None      # None = source default (Friedman: 5)
+    source_options: Tuple[Tuple[str, Any], ...] = ()   # e.g. (("rho", 0.9),)
+    partition: str = "one_per_agent"   # key into partition.PARTITIONS
+    n_agents: Optional[int] = None     # None = one agent per attribute
+    partition_options: Tuple[Tuple[str, Any], ...] = ()  # e.g. (("overlap", 2),)
+
+    @property
+    def resolved_n_attrs(self) -> int:
+        src = SOURCES.get(self.source)
+        if src is None:
+            raise SpecError(f"unknown data source {self.source!r}; "
+                            f"registered: {sorted(SOURCES)}")
+        try:
+            return src.resolve_n_attrs(self.n_attrs)
+        except ValueError as e:
+            raise SpecError(str(e)) from None
+
+    @property
+    def resolved_n_agents(self) -> int:
+        return self.resolved_n_attrs if self.n_agents is None else self.n_agents
 
     def validate(self) -> None:
-        if self.source not in _SOURCES:
-            raise SpecError(f"unknown data source {self.source!r}; pick one of {_SOURCES}")
-        if self.partition not in _PARTITIONS:
-            raise SpecError(f"unknown partition {self.partition!r}; pick one of {_PARTITIONS}")
+        src = SOURCES.get(self.source)
+        if src is None:
+            raise SpecError(f"unknown data source {self.source!r}; "
+                            f"registered: {sorted(SOURCES)}")
+        if self.partition not in PARTITIONS:
+            raise SpecError(f"unknown partition {self.partition!r}; "
+                            f"registered: {sorted(PARTITIONS)}")
+        for label, opts, known in (
+                ("source", self.source_options, src.options),
+                ("partition", self.partition_options,
+                 PARTITIONS[self.partition].options)):
+            for name, _ in opts:
+                if name not in known:
+                    raise SpecError(
+                        f"{label} {getattr(self, label)!r} has no option "
+                        f"{name!r}; valid: {sorted(known)}")
         if self.n_train < 2 or self.n_test < 1:
-            raise SpecError("need n_train >= 2 and n_test >= 1 (the Friedman "
-                            "generator cannot produce an empty split)")
-        if self.partition == "round_robin":
-            d = self.n_agents or _N_ATTRS
-            if not (1 <= d <= _N_ATTRS) or _N_ATTRS % d != 0:
-                raise SpecError(
-                    f"round_robin n_agents must divide {_N_ATTRS} (equal column "
-                    f"counts per agent), got {self.n_agents}")
-        elif self.n_agents not in (None, _N_ATTRS):
-            raise SpecError(f"one_per_agent fixes n_agents = {_N_ATTRS}, got {self.n_agents}")
+            raise SpecError("need n_train >= 2 and n_test >= 1 (no generator "
+                            "can produce an empty split)")
+        groups = self.groups                      # raises SpecError on its own
+        if len({len(g) for g in groups}) > 1:
+            raise SpecError(
+                f"partition {self.partition!r} with n_attrs="
+                f"{self.resolved_n_attrs}, n_agents={self.resolved_n_agents} "
+                f"gives unequal group sizes { [len(g) for g in groups] }; the "
+                f"stacked runtime (vmapped agents) needs every agent to hold "
+                f"the same number of columns — pick n_agents dividing n_attrs")
+        try:
+            validate_partition(groups, self.resolved_n_attrs)
+        except ValueError as e:
+            raise SpecError(str(e)) from None
 
     @property
     def groups(self) -> List[List[int]]:
-        if self.partition == "one_per_agent":
-            return one_per_agent(_N_ATTRS)
-        return round_robin(_N_ATTRS, self.n_agents or _N_ATTRS)
+        try:
+            return make_groups(self.partition, self.resolved_n_attrs,
+                               self.resolved_n_agents,
+                               options=self.partition_options)
+        except (TypeError, ValueError) as e:
+            # TypeError covers wrong-typed option VALUES (names are checked
+            # in validate); both must surface as the spec-layer error
+            raise SpecError(f"partition {self.partition!r}: {e}") from None
 
     def build(self) -> Dataset:
         """Generate + standardise + partition (deterministic in `seed`).
@@ -95,17 +139,26 @@ class DataSpec:
         return _build_dataset(self)
 
 
-@functools.lru_cache(maxsize=8)
+@functools.lru_cache(maxsize=_DATASET_CACHE_SIZE)
 def _build_dataset(spec: DataSpec) -> Dataset:
-    which = int(spec.source[-1])
-    xtr, ytr, xte, yte = friedman.make_dataset(
-        which, n_train=spec.n_train, n_test=spec.n_test,
-        seed=spec.seed, noise=spec.noise)
+    xtr, ytr, xte, yte = data_sources.make_dataset(
+        spec.source, n_train=spec.n_train, n_test=spec.n_test,
+        seed=spec.seed, noise=spec.noise, n_attrs=spec.n_attrs,
+        options=spec.source_options)
     groups = spec.groups
-    validate_partition(groups, _N_ATTRS)
+    validate_partition(groups, spec.resolved_n_attrs)
     xcols = jnp.stack([xtr[:, g] for g in groups])
     xcols_test = jnp.stack([xte[:, g] for g in groups])
     return Dataset(xcols, ytr, xcols_test, yte, groups)
+
+
+def clear_dataset_cache() -> None:
+    """Drop every memoised Dataset (frees the pinned device arrays).
+
+    Long sessions that sweep many DataSpecs — or flip `jax_enable_x64` —
+    should call this; the memo otherwise holds up to `_DATASET_CACHE_SIZE`
+    materialised datasets alive."""
+    _build_dataset.cache_clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -212,14 +265,39 @@ def spec_to_dict(spec: ExperimentSpec) -> Dict[str, Any]:
     return dataclasses.asdict(spec)
 
 
+def _checked_fields(cls, d: Dict[str, Any], where: str) -> Dict[str, Any]:
+    """Reject unknown/typo'd keys instead of silently dropping them."""
+    allowed = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - allowed)
+    if unknown:
+        raise SpecError(
+            f"unrecognised field(s) in {where}: {unknown}; "
+            f"valid fields: {sorted(allowed)}")
+    return dict(d)
+
+
+def _pairs(value) -> Tuple[Tuple[str, Any], ...]:
+    # JSON turns tuple-of-pairs into list-of-lists; restore it
+    return tuple((str(k), v) for k, v in value)
+
+
 def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
-    agent = dict(d.get("agent", {}))
-    # JSON turns the options tuple-of-pairs into list-of-lists; restore it
-    agent["options"] = tuple((str(k), v) for k, v in agent.get("options", ()))
+    top_unknown = sorted(set(d) - {"data", "agent", "solver", "backend", "seed"})
+    if top_unknown:
+        raise SpecError(
+            f"unrecognised section(s) in spec dict: {top_unknown}; "
+            f"valid: ['agent', 'backend', 'data', 'seed', 'solver']")
+    data = _checked_fields(DataSpec, d.get("data", {}), "spec['data']")
+    for key in ("source_options", "partition_options"):
+        data[key] = _pairs(data.get(key, ()))
+    agent = _checked_fields(AgentSpec, d.get("agent", {}), "spec['agent']")
+    agent["options"] = _pairs(agent.get("options", ()))
     return ExperimentSpec(
-        data=DataSpec(**d.get("data", {})),
+        data=DataSpec(**data),
         agent=AgentSpec(**agent),
-        solver=SolverSpec(**d.get("solver", {})),
-        backend=BackendSpec(**d.get("backend", {})),
+        solver=SolverSpec(**_checked_fields(SolverSpec, d.get("solver", {}),
+                                            "spec['solver']")),
+        backend=BackendSpec(**_checked_fields(BackendSpec, d.get("backend", {}),
+                                              "spec['backend']")),
         seed=d.get("seed", 0),
     )

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Iterator, List, Mapping, Sequence
+from typing import Any, Iterator, List, Mapping, Optional, Sequence
 
 from repro.api.specs import ExperimentSpec, SpecError
 
@@ -57,13 +57,23 @@ def zip_specs(base: ExperimentSpec,
 
 
 def sweep(base: ExperimentSpec, grid: Mapping[str, Sequence[Any]],
-          paired: bool = False) -> List["Result"]:
-    """Fit every spec in the grid; returns Results in enumeration order.
+          paired: bool = False, trials: Optional[int] = None) -> List[Any]:
+    """Fit every spec in the grid; returns results in enumeration order.
+
+    `trials=None` (default): one eager `fit` per spec — a list of `Result`s.
     Each Result carries its spec, so trade-off curves are one comprehension:
 
         [(r.spec.solver.alpha, r.history.total_bytes, r.test_mse) for r in rs]
+
+    `trials=k`: every grid point becomes k Monte-Carlo trials through
+    `batch_fit` (one compiled program per spec on the local backend) — a list
+    of `ResultSet`s exposing mean/std trade-off curves:
+
+        [(rs.spec.solver.alpha, *rs.curve()) for rs in sweep(..., trials=8)]
     """
-    from repro.api import fit  # local import: api.__init__ imports this module
+    from repro.api import batch_fit, fit  # local import: api.__init__ imports this module
 
     specs = zip_specs(base, grid) if paired else grid_specs(base, grid)
-    return [fit(spec) for spec in specs]
+    if trials is None:
+        return [fit(spec) for spec in specs]
+    return [batch_fit(spec, trials) for spec in specs]

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from repro.core import covariance as cov
 from repro.core import ensemble
 
-__all__ = ["averaging", "residual_refitting"]
+__all__ = ["averaging", "residual_refitting", "averaging_scan",
+           "residual_refitting_scan"]
 
 
 def averaging(family, xcols: jnp.ndarray, y: jnp.ndarray,
@@ -64,4 +65,60 @@ def residual_refitting(family, xcols: jnp.ndarray, y: jnp.ndarray,
             params[i] = family.fit(params[i], xcols[i], residual)
             f = f.at[i].set(family.predict(params[i], xcols[i]))
         record(params, f)
+    return params, f, hist
+
+
+# ---------------------------------------------------------------------------
+# Traceable variants: identical math with a static schedule and jnp-array
+# histories, so `jax.vmap` over a traced seed executes a whole batch of
+# Monte-Carlo trials as one compiled program (api.batch_fit; DESIGN.md §6).
+
+
+def averaging_scan(family, xcols: jnp.ndarray, y: jnp.ndarray,
+                   xcols_test: jnp.ndarray, y_test: jnp.ndarray, seed):
+    """Traceable `averaging`: returns (params, f, hist) with scalar-array
+    single-record histories (plus the eta diagnostic of the api layer)."""
+    d = xcols.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(jnp.asarray(seed)), d)
+    params = jax.vmap(lambda k, x: family.fit(family.init(k), x, y))(keys, xcols)
+    f = jax.vmap(family.predict)(params, xcols)
+    train = jnp.mean((y - f.mean(axis=0)) ** 2)
+    ft = jax.vmap(family.predict)(params, xcols_test)
+    test = jnp.mean((y_test - ft.mean(axis=0)) ** 2)
+    eta = ensemble.eta(cov.gram(y[None, :] - f))
+    hist = {"train_mse": train[None], "test_mse": test[None], "eta": eta[None]}
+    return params, f, hist
+
+
+def residual_refitting_scan(family, xcols: jnp.ndarray, y: jnp.ndarray,
+                            xcols_test: jnp.ndarray, y_test: jnp.ndarray,
+                            n_cycles: int, seed):
+    """Traceable `residual_refitting`: ring cycles as a lax.scan, the inner
+    agent pass a lax.fori_loop over stacked params (same update order and
+    leave-me-out residuals as the Python-loop original)."""
+    d = xcols.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(jnp.asarray(seed)), d)
+    params = jax.vmap(family.init)(keys)
+    f = jnp.zeros((d, xcols.shape[1]))
+
+    def agent_update(i, carry):
+        params, f = carry
+        residual = y - f.sum(axis=0) + f[i]      # leave-agent-i-out residual
+        p_new = family.fit(jax.tree.map(lambda t: t[i], params), xcols[i], residual)
+        f = f.at[i].set(family.predict(p_new, xcols[i]))
+        params = jax.tree.map(lambda t, u: t.at[i].set(u), params, p_new)
+        return params, f
+
+    def cycle(carry, _):
+        params, f = carry
+        params, f = jax.lax.fori_loop(0, d, agent_update, (params, f))
+        train = jnp.mean((y - f.sum(axis=0)) ** 2)
+        ft = jax.vmap(family.predict)(params, xcols_test)
+        test = jnp.mean((y_test - ft.sum(axis=0)) ** 2)
+        eta = ensemble.eta(cov.gram(y[None, :] - f))
+        return (params, f), (train, test, eta)
+
+    (params, f), (trs, tes, ets) = jax.lax.scan(
+        cycle, (params, f), None, length=n_cycles)
+    hist = {"train_mse": trs, "test_mse": tes, "eta": ets}
     return params, f, hist

@@ -44,7 +44,8 @@ from repro.core import ensemble
 from repro.core import gradient
 from repro.core import minimax
 
-__all__ = ["ICOAConfig", "ICOAState", "init_state", "sweep", "run", "ensemble_predict"]
+__all__ = ["ICOAConfig", "ICOAState", "init_state", "sweep", "run", "run_scan",
+           "ensemble_predict"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -323,6 +324,54 @@ def _weights(f: jnp.ndarray, y: jnp.ndarray, cfg: ICOAConfig, key: jax.Array) ->
 def ensemble_predict(family, params: Any, weights: jnp.ndarray, xcols: jnp.ndarray) -> jnp.ndarray:
     preds = jax.vmap(family.predict)(params, xcols)
     return ensemble.combine(weights, preds)
+
+
+def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
+             xcols_test: jnp.ndarray, y_test: jnp.ndarray, seed):
+    """Fully-traceable ICOA run: the Monte-Carlo building block.
+
+    Same math and key discipline as `run` — init from PRNGKey(seed), record,
+    then per sweep `key, k1, k2 = split(key, 3)`, sweep with k1, record with
+    k2 — but the outer loop is a static `lax.scan` over cfg.n_sweeps (no eps
+    early exit: a data-dependent break cannot be staged) and every recorded
+    quantity stays a jnp array.  `seed` may be a traced integer, so
+    `jax.vmap(run_scan, ...)` executes a whole batch of independent trials as
+    ONE compiled program (api.batch_fit; DESIGN.md §6).
+
+    Returns (params, f, weights, hist) with hist arrays of length
+    cfg.n_sweeps + 1 (record 0 = the non-cooperative init, like `run`).
+    """
+    d = xcols.shape[0]
+    seed = jnp.asarray(seed)
+    keys = jax.random.split(jax.random.PRNGKey(seed), d)
+    state0 = init_state(family, keys, xcols, y)
+
+    def record(params, f, k):
+        w = _weights(f, y, cfg, k)
+        train = jnp.mean((y - ensemble.combine(w, f)) ** 2)
+        pred = ensemble_predict(family, params, w, xcols_test)
+        test = jnp.mean((y_test - pred) ** 2)
+        eta = 1.0 / _eta_tilde_sub(f, y, None, cfg)
+        return w, train, test, eta
+
+    key0 = jax.random.PRNGKey(seed + 1)
+    w0, tr0, te0, et0 = record(state0.params, state0.f, key0)
+
+    def step(carry, _):
+        params, f, key = carry
+        key, k1, k2 = jax.random.split(key, 3)
+        params, f, _ = sweep(family, cfg, params, f, xcols, y, k1)
+        w, tr, te, et = record(params, f, k2)
+        return (params, f, key), (w, tr, te, et)
+
+    (params, f, _), (ws, trs, tes, ets) = jax.lax.scan(
+        step, (state0.params, state0.f, key0), None, length=cfg.n_sweeps)
+    hist = {
+        "train_mse": jnp.concatenate([tr0[None], trs]),
+        "test_mse": jnp.concatenate([te0[None], tes]),
+        "eta": jnp.concatenate([et0[None], ets]),
+    }
+    return params, f, ws[-1], hist
 
 
 def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,

@@ -1,3 +1,6 @@
-from repro.data import friedman, partition
+from repro.data import friedman, partition, sources
+from repro.data.partition import PARTITIONS, register_partition
+from repro.data.sources import SOURCES, register_source
 
-__all__ = ["friedman", "partition"]
+__all__ = ["friedman", "partition", "sources",
+           "SOURCES", "register_source", "PARTITIONS", "register_partition"]

@@ -1,16 +1,31 @@
 """Attribute partitioning: assign covariate columns to agents.
 
 The paper's setup (Sec 3.2) is 5 agents, agent i observing attribute X_i
-exclusively. We generalise to arbitrary disjoint / overlapping assignments so
-the framework supports D != M.
+exclusively.  We generalise to arbitrary disjoint / overlapping assignments
+so the framework supports D != M, and expose them through `PARTITIONS` — a
+registry mirroring `data.SOURCES`: every entry maps
+`(n_attrs, n_agents, **options) -> groups` and new schemes join via
+`@register_partition`.  `make_groups` is the one resolution point the spec
+layer calls.
+
+The stacked runtime (`Dataset.xcols : (D, N, C)` and the vmapped agent
+families) needs every agent to hold the SAME number of columns; partitions
+may produce unequal groups (they stay useful for non-stacked consumers) and
+the spec layer rejects them with a clear error.
 """
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+import inspect
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["one_per_agent", "round_robin", "validate_partition", "column_mask"]
+__all__ = [
+    "one_per_agent", "round_robin", "contiguous_blocks", "overlapping_blocks",
+    "random_partition", "validate_partition", "column_mask",
+    "Partition", "PARTITIONS", "register_partition", "make_groups",
+]
 
 
 def one_per_agent(n_attrs: int) -> list[list[int]]:
@@ -20,10 +35,58 @@ def one_per_agent(n_attrs: int) -> list[list[int]]:
 
 def round_robin(n_attrs: int, n_agents: int) -> list[list[int]]:
     """Deal attributes to agents round-robin (covers D < M)."""
+    if n_agents < 1:
+        raise ValueError(f"need n_agents >= 1, got {n_agents}")
+    if n_agents > n_attrs:
+        raise ValueError(
+            f"round_robin with n_agents={n_agents} > n_attrs={n_attrs} would "
+            f"leave {n_agents - n_attrs} agent(s) with no attributes — every "
+            f"agent needs at least one column")
     groups: list[list[int]] = [[] for _ in range(n_agents)]
     for j in range(n_attrs):
         groups[j % n_agents].append(j)
     return [g for g in groups]
+
+
+def contiguous_blocks(n_attrs: int, n_agents: int) -> list[list[int]]:
+    """Contiguous column blocks: agent i gets columns [b_i, b_{i+1}).
+
+    Block sizes differ by at most one; they are equal iff n_agents divides
+    n_attrs (what the stacked runtime needs).
+    """
+    if n_agents < 1:
+        raise ValueError(f"need n_agents >= 1, got {n_agents}")
+    if n_agents > n_attrs:
+        raise ValueError(
+            f"contiguous blocks need n_agents <= n_attrs, got "
+            f"{n_agents} > {n_attrs}")
+    bounds = [round(i * n_attrs / n_agents) for i in range(n_agents + 1)]
+    return [list(range(bounds[i], bounds[i + 1])) for i in range(n_agents)]
+
+
+def overlapping_blocks(n_attrs: int, n_agents: int,
+                       overlap: int = 1) -> list[list[int]]:
+    """Contiguous blocks plus `overlap` shared columns past each block end
+    (cyclic), so neighbouring agents observe common attributes — the paper's
+    disjointness assumption relaxed into a redundancy knob."""
+    if overlap < 0:
+        raise ValueError(f"need overlap >= 0, got {overlap}")
+    base = contiguous_blocks(n_attrs, n_agents)
+    if overlap > n_attrs - max(len(g) for g in base):
+        raise ValueError(
+            f"overlap={overlap} would wrap a group onto its own columns "
+            f"(n_attrs={n_attrs}, largest block {max(len(g) for g in base)})")
+    return [g + [(g[-1] + k) % n_attrs for k in range(1, overlap + 1)]
+            for g in base]
+
+
+def random_partition(n_attrs: int, n_agents: int, seed: int = 0) -> list[list[int]]:
+    """Seeded uniform-random disjoint assignment: permute the columns, then
+    deal them out as contiguous blocks of the permutation (sorted per agent
+    for stable output)."""
+    perm = np.random.RandomState(seed).permutation(n_attrs)
+    blocks = contiguous_blocks(n_attrs, n_agents)
+    return [sorted(int(perm[j]) for j in g) for g in blocks]
 
 
 def validate_partition(groups: Sequence[Sequence[int]], n_attrs: int) -> None:
@@ -52,3 +115,72 @@ def column_mask(groups: Sequence[Sequence[int]], n_attrs: int) -> np.ndarray:
         for j in g:
             mask[i, j] = 1.0
     return mask
+
+
+# ------------------------------------------------------------------ registry
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Registry entry: `(n_attrs, n_agents, **options) -> groups`."""
+
+    name: str
+    fn: Callable[..., List[List[int]]]
+    options: Tuple[str, ...]    # recognised **option names (spec validation)
+
+
+PARTITIONS: Dict[str, Partition] = {}
+
+
+def register_partition(name: str):
+    """Register a `(n_attrs, n_agents, **options) -> groups` scheme.
+    Keyword parameters after the two positional ones become the scheme's
+    recognised options."""
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters)[2:]
+        PARTITIONS[name] = Partition(name=name, fn=fn, options=tuple(params))
+        return fn
+
+    return deco
+
+
+@register_partition("one_per_agent")
+def _p_one_per_agent(n_attrs: int, n_agents: int) -> list[list[int]]:
+    if n_agents != n_attrs:
+        raise ValueError(
+            f"one_per_agent fixes n_agents = n_attrs (= {n_attrs}), "
+            f"got n_agents={n_agents}")
+    return one_per_agent(n_attrs)
+
+
+@register_partition("round_robin")
+def _p_round_robin(n_attrs: int, n_agents: int) -> list[list[int]]:
+    return round_robin(n_attrs, n_agents)
+
+
+@register_partition("blocks")
+def _p_blocks(n_attrs: int, n_agents: int) -> list[list[int]]:
+    return contiguous_blocks(n_attrs, n_agents)
+
+
+@register_partition("overlapping")
+def _p_overlapping(n_attrs: int, n_agents: int, overlap: int = 1) -> list[list[int]]:
+    return overlapping_blocks(n_attrs, n_agents, overlap=overlap)
+
+
+@register_partition("random")
+def _p_random(n_attrs: int, n_agents: int, seed: int = 0) -> list[list[int]]:
+    return random_partition(n_attrs, n_agents, seed=seed)
+
+
+def make_groups(partition: str, n_attrs: int, n_agents: Optional[int] = None,
+                options: Sequence[Tuple[str, Any]] = ()) -> List[List[int]]:
+    """Resolve a registered partition into concrete groups.
+    `n_agents=None` defaults to one agent per attribute."""
+    p = PARTITIONS.get(partition)
+    if p is None:
+        raise ValueError(f"unknown partition {partition!r}; "
+                         f"registered: {sorted(PARTITIONS)}")
+    d = n_attrs if n_agents is None else n_agents
+    return p.fn(n_attrs, d, **dict(options))

@@ -1,0 +1,172 @@
+"""Data-source registry: every scenario generator behind one contract.
+
+A *source* maps `(key, n, n_attrs, noise, **options) -> (x, y)` with
+`x : (n, n_attrs)` covariates and `y : (n,)` outcomes normalised to [0, 1]
+(the paper's convention — delta scales and MSE magnitudes stay comparable
+across scenarios).  Sources register under a name via `@register_source`,
+mirroring `api.SOLVERS` and `agents.FAMILIES`, so `DataSpec.source` is an
+open set: the three Friedman problems of the paper (Sec 3.2), the
+correlated-design linear model of the generalization-error line of work
+(Hellkvist et al. 2021), the dimensionally-distributed additive cosine
+model (Zheng & Kulkarni 2008), and anything a user registers.
+
+Everything here is traceable: `make_dataset` accepts a *traced* seed, which
+is what lets `api.build_runner` generate a fresh dataset per Monte-Carlo
+trial inside one jitted `vmap` (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import friedman
+
+__all__ = ["Source", "SOURCES", "register_source", "make_dataset",
+           "correlated_linear", "cosine_additive"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Source:
+    """Registry entry: the generator plus its attribute-count contract."""
+
+    name: str
+    fn: Callable[..., Tuple[jnp.ndarray, jnp.ndarray]]
+    n_attrs: Optional[int]      # fixed attribute count (None = caller's choice)
+    default_n_attrs: int        # used when DataSpec.n_attrs is None
+    options: Tuple[str, ...]    # recognised **option names (spec validation)
+
+    def resolve_n_attrs(self, n_attrs: Optional[int]) -> int:
+        if self.n_attrs is not None:
+            if n_attrs not in (None, self.n_attrs):
+                raise ValueError(
+                    f"source {self.name!r} has a fixed attribute count of "
+                    f"{self.n_attrs}, got n_attrs={n_attrs}")
+            return self.n_attrs
+        m = self.default_n_attrs if n_attrs is None else n_attrs
+        if m < 1:
+            raise ValueError(f"need n_attrs >= 1, got {m}")
+        return m
+
+
+SOURCES: Dict[str, Source] = {}
+
+
+def register_source(name: str, *, n_attrs: Optional[int] = None,
+                    default_n_attrs: Optional[int] = None):
+    """Register a `(key, n, n_attrs, noise, **options) -> (x, y)` generator.
+
+    `n_attrs=k` pins the source to exactly k attributes (the Friedman
+    formulas); otherwise `default_n_attrs` (default 5) is used when a spec
+    leaves `n_attrs` unset.  Keyword-only parameters after the four
+    positional ones become the source's recognised options.
+    """
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters)[4:]
+        SOURCES[name] = Source(
+            name=name, fn=fn, n_attrs=n_attrs,
+            default_n_attrs=n_attrs if n_attrs is not None
+            else (5 if default_n_attrs is None else default_n_attrs),
+            options=tuple(params))
+        return fn
+
+    return deco
+
+
+# ------------------------------------------------- the paper's three problems
+
+
+@register_source("friedman1", n_attrs=5)
+def _friedman1(key: jax.Array, n: int, n_attrs: int, noise: float):
+    return friedman.friedman1(key, n, noise)
+
+
+@register_source("friedman2", n_attrs=5)
+def _friedman2(key: jax.Array, n: int, n_attrs: int, noise: float):
+    return friedman.friedman2(key, n, noise)
+
+
+@register_source("friedman3", n_attrs=5)
+def _friedman3(key: jax.Array, n: int, n_attrs: int, noise: float):
+    return friedman.friedman3(key, n, noise)
+
+
+# ------------------------------------------------------- beyond-paper models
+
+
+@register_source("correlated_linear", default_n_attrs=8)
+def correlated_linear(key: jax.Array, n: int, n_attrs: int, noise: float,
+                      rho: float = 0.6, snr: float = 10.0):
+    """Correlated-design linear model (Hellkvist et al. 2021 setting).
+
+    x ~ N(0, Sigma) with the AR(1) design covariance Sigma_ij = rho^|i-j|
+    (rho tunes how redundant the agents' attribute views are), outcome
+    y = x @ w with w ~ N(0, I/M) and additive Gaussian noise sized so the
+    signal-to-noise ratio is `snr` (the analytic signal variance w' Sigma w
+    sets the scale).  `noise` adds the DataSpec-level disturbance on top,
+    like the Friedman sources.
+    """
+    kx, kw, ke, kd = jax.random.split(key, 4)
+    j = jnp.arange(n_attrs)
+    sigma = rho ** jnp.abs(j[:, None] - j[None, :])
+    chol = jnp.linalg.cholesky(sigma + 1e-9 * jnp.eye(n_attrs))
+    x = jax.random.normal(kx, (n, n_attrs)) @ chol.T
+    w = jax.random.normal(kw, (n_attrs,)) / jnp.sqrt(float(n_attrs))
+    y = x @ w
+    sig2 = w @ sigma @ w
+    y = y + jnp.sqrt(sig2 / snr) * jax.random.normal(ke, (n,))
+    y = y + noise * jax.random.normal(kd, (n,))
+    return x, friedman._normalise(y)
+
+
+@register_source("cosine", default_n_attrs=5)
+def cosine_additive(key: jax.Array, n: int, n_attrs: int, noise: float,
+                    freq: float = 1.0):
+    """Dimensionally-distributed additive cosine model (Zheng & Kulkarni '08).
+
+    Each attribute contributes its own univariate component — exactly the
+    structure the one-attribute-per-agent system can represent:
+
+        y = sum_j cos(2 pi freq (j+1) x_j) / (j + 1),   x_j ~ U[0, 1]
+
+    Higher-index attributes oscillate faster but matter less (1/(j+1)
+    amplitude decay), so the optimal ensemble weights are non-uniform — a
+    scenario where ICOA's covariance weighting visibly beats averaging.
+    """
+    kx, kw = jax.random.split(key)
+    x = jax.random.uniform(kx, (n, n_attrs))
+    j = jnp.arange(n_attrs, dtype=x.dtype)
+    comps = jnp.cos(2.0 * jnp.pi * freq * (j + 1.0) * x) / (j + 1.0)
+    y = comps.sum(axis=1) + noise * jax.random.normal(kw, (n,))
+    return x, friedman._normalise(y)
+
+
+# ------------------------------------------------------------------ assembly
+
+
+def make_dataset(source: str, n_train: int, n_test: int, seed,
+                 noise: float = 0.0, n_attrs: Optional[int] = None,
+                 options: Sequence[Tuple[str, Any]] = ()):
+    """Train/test split from a registered source, standardised on train stats.
+
+    Identical key discipline and standardisation to `friedman.make_dataset`
+    (one split of PRNGKey(seed): train stream, test stream), so the Friedman
+    sources reproduce the seed repo's datasets bit-for-bit.  `seed` may be a
+    traced integer — the whole function stages under jit/vmap.
+    """
+    src = SOURCES.get(source)
+    if src is None:
+        raise ValueError(f"unknown data source {source!r}; "
+                         f"registered: {sorted(SOURCES)}")
+    m = src.resolve_n_attrs(n_attrs)
+    kw = dict(options)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    xtr, ytr = src.fn(k1, n_train, m, noise, **kw)
+    xte, yte = src.fn(k2, n_test, m, noise, **kw)
+    mu = xtr.mean(axis=0)
+    sd = xtr.std(axis=0) + 1e-12
+    return (xtr - mu) / sd, ytr, (xte - mu) / sd, yte

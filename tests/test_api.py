@@ -61,7 +61,7 @@ def test_bad_source_partition_and_backend_raise(base_spec):
     with pytest.raises(api.SpecError, match="unknown data source"):
         api.spec_with(base_spec, "data.source", "friedman9").validate()
     with pytest.raises(api.SpecError, match="unknown partition"):
-        api.spec_with(base_spec, "data.partition", "random").validate()
+        api.spec_with(base_spec, "data.partition", "striped").validate()
     with pytest.raises(api.SpecError, match="unknown backend"):
         api.spec_with(base_spec, "backend.name", "tpu_pod").validate()
 

@@ -7,7 +7,11 @@ import pytest
 from hypcompat import HAVE_HYPOTHESIS, given, settings, st
 
 from repro.data.friedman import friedman1, friedman2, friedman3, make_dataset
-from repro.data.partition import column_mask, one_per_agent, round_robin, validate_partition
+from repro.data import sources
+from repro.data.partition import (PARTITIONS, column_mask, contiguous_blocks,
+                                  make_groups, one_per_agent,
+                                  overlapping_blocks, random_partition,
+                                  round_robin, validate_partition)
 
 
 @pytest.mark.parametrize("fn", [friedman1, friedman2, friedman3])
@@ -76,3 +80,81 @@ def test_validate_partition_rejects_gaps():
         validate_partition([[0], [2]], 3)
     with pytest.raises(ValueError):
         validate_partition([[0], []], 1)
+
+
+def test_round_robin_rejects_more_agents_than_attrs():
+    """An empty agent group must fail HERE with a clear message, not later
+    inside validate_partition (live now that n_attrs is a free knob)."""
+    with pytest.raises(ValueError, match="no attributes"):
+        round_robin(3, 5)
+    with pytest.raises(ValueError, match="n_agents >= 1"):
+        round_robin(3, 0)
+
+
+def test_contiguous_and_random_partitions_cover():
+    for m, d in [(6, 3), (8, 2), (7, 3), (5, 5)]:
+        for fn in (contiguous_blocks, random_partition):
+            g = fn(m, d)
+            validate_partition(g, m)
+            assert column_mask(g, m).sum() == m    # disjoint cover
+    # contiguous really is contiguous
+    assert contiguous_blocks(6, 3) == [[0, 1], [2, 3], [4, 5]]
+    # random is deterministic in its seed and differs across seeds
+    assert random_partition(8, 2, seed=1) == random_partition(8, 2, seed=1)
+    assert random_partition(8, 2, seed=1) != random_partition(8, 2, seed=2)
+
+
+def test_overlapping_blocks_share_columns():
+    g = overlapping_blocks(6, 3, overlap=1)
+    validate_partition(g, 6)                      # full (overlapping) cover
+    assert [len(gg) for gg in g] == [3, 3, 3]
+    assert g[0][:2] == [0, 1] and g[0][2] == 2    # block + next column
+    with pytest.raises(ValueError, match="wrap"):
+        overlapping_blocks(4, 2, overlap=3)
+
+
+def test_partition_registry_resolves_and_validates():
+    assert {"one_per_agent", "round_robin", "blocks", "overlapping",
+            "random"} <= set(PARTITIONS)
+    assert make_groups("one_per_agent", 4) == [[0], [1], [2], [3]]
+    assert make_groups("overlapping", 6, 3, options=(("overlap", 1),)) == \
+        overlapping_blocks(6, 3, overlap=1)
+    with pytest.raises(ValueError, match="unknown partition"):
+        make_groups("striped", 4)
+
+
+# ------------------------------------------------------------------ sources
+
+
+def test_source_registry_contracts():
+    assert {"friedman1", "friedman2", "friedman3", "correlated_linear",
+            "cosine"} <= set(sources.SOURCES)
+    # Friedman attribute count is pinned to the paper's 5
+    assert sources.SOURCES["friedman1"].resolve_n_attrs(None) == 5
+    with pytest.raises(ValueError, match="fixed attribute count"):
+        sources.SOURCES["friedman1"].resolve_n_attrs(7)
+    # free sources honour the requested width
+    x, y = sources.correlated_linear(jax.random.PRNGKey(0), 200, 7, 0.0)
+    assert x.shape == (200, 7) and y.shape == (200,)
+    assert float(y.min()) >= 0.0 and float(y.max()) <= 1.0 + 1e-6
+    x, y = sources.cosine_additive(jax.random.PRNGKey(0), 150, 3, 0.0)
+    assert x.shape == (150, 3)
+    assert float(y.min()) >= 0.0 and float(y.max()) <= 1.0 + 1e-6
+
+
+def test_sources_make_dataset_matches_friedman_path():
+    """The generic assembly must reproduce the seed repo's Friedman datasets
+    bit-for-bit (the api layer's strict parity tests depend on it)."""
+    old = make_dataset(2, n_train=400, n_test=300, seed=3, noise=0.1)
+    new = sources.make_dataset("friedman2", n_train=400, n_test=300, seed=3,
+                               noise=0.1)
+    for a, b in zip(old, new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_correlated_linear_rho_controls_design_covariance():
+    x, _ = sources.correlated_linear(jax.random.PRNGKey(1), 20000, 4, 0.0,
+                                     rho=0.8)
+    c = np.corrcoef(np.asarray(x).T)
+    assert abs(c[0, 1] - 0.8) < 0.05
+    assert abs(c[0, 3] - 0.8 ** 3) < 0.05
