@@ -10,9 +10,10 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (comm_cost, fig1_overtraining, fig3_divergence,
-                        fig5_upper_bound, kernels_bench, roofline,
-                        sweep_engines, table1_algorithms, table2_minimax)
+from benchmarks import (batch_bench, comm_cost, fig1_overtraining,
+                        fig3_divergence, fig5_upper_bound, kernels_bench,
+                        roofline, sweep_engines, table1_algorithms,
+                        table2_minimax)
 
 SUITES = {
     "table1": table1_algorithms.run,     # paper Table 1
@@ -25,6 +26,8 @@ SUITES = {
     "roofline": roofline.run,            # dry-run roofline table (Sec e/g)
     "sweep": sweep_engines.run,          # dense vs incremental engine curve
                                          # (writes BENCH_sweep.json)
+    "batch": batch_bench.run,            # Monte-Carlo trials/sec vs devices
+                                         # (writes BENCH_batch.json)
 }
 
 

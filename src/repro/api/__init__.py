@@ -18,11 +18,14 @@ Scenarios are open registries (api v2, DESIGN.md §6): `data.SOURCES` /
 `@register_source` for generators (`DataSpec.n_attrs` is free), and
 `partition.PARTITIONS` / `@register_partition` for attribute assignments.
 
-Monte Carlo is compiled: `api.batch_fit(spec, n_trials=32)` runs every trial
-— data generation included — as ONE jitted vmap and returns a `ResultSet`
-with mean/std trade-off curves; `api.sweep(spec, grid, trials=8)` does that
-per grid point.  `result.save(dir)` / `api.load(dir)` persist through
-checkpoint.io.
+Monte Carlo is compiled AND device-parallel: `api.batch_fit(spec,
+n_trials=32)` runs every trial — data generation included — as ONE compiled
+program, sharding the trial axis across all host devices on the local
+backend (a `lax.scan` trial loop on shard_map; Pallas-kernel paths batch via
+custom-vmap rules) and returns a `ResultSet` with mean/std trade-off curves;
+`api.sweep(spec, grid, trials=8)` does that per grid point.  BackendSpec
+carries the execution knobs (`trial_devices`, `compute_dtype`, `donate`).
+`result.save(dir)` / `api.load(dir)` persist through checkpoint.io.
 """
 from __future__ import annotations
 
@@ -34,7 +37,8 @@ from repro.data.sources import SOURCES, register_source
 from repro.api.io import load_result as load
 from repro.api.io import save_result
 from repro.api.result import History, Result, ResultSet
-from repro.api.runner import batch_fit, build_runner, trial_spec
+from repro.api.runner import (batch_fit, build_distributed_runner,
+                              build_runner, trial_spec)
 from repro.api.solvers import (SOLVERS, Solver, comm_floats_per_sweep,
                                register_solver, run_solver)
 from repro.api.specs import (AgentSpec, BackendSpec, DataSpec, Dataset,
@@ -45,7 +49,8 @@ from repro.api.sweep import grid_specs, spec_with, sweep, zip_specs
 __all__ = [
     "AgentSpec", "BackendSpec", "DataSpec", "Dataset", "ExperimentSpec",
     "History", "PARTITIONS", "Result", "ResultSet", "SOLVERS", "SOURCES",
-    "Solver", "SpecError", "batch_fit", "build_runner", "clear_dataset_cache",
+    "Solver", "SpecError", "batch_fit", "build_distributed_runner",
+    "build_runner", "clear_dataset_cache",
     "comm_floats_per_sweep", "fit", "grid_specs", "load", "register_partition",
     "register_solver", "register_source", "replace", "save_result",
     "spec_from_dict", "spec_to_dict", "spec_with", "sweep", "trial_spec",

@@ -33,17 +33,26 @@ class History:
     test_mse: List[float] = dataclasses.field(default_factory=list)
     eta: List[float] = dataclasses.field(default_factory=list)
     bytes_transmitted: List[float] = dataclasses.field(default_factory=list)
+    # record index where the serial eps rule stops (|eta_k - eta_{k-1}| < eps
+    # over post-sweep records).  Serial icoa runs truncate the history there,
+    # so it is simply the last record; compiled batch runs execute the full
+    # static schedule and report where fit() WOULD have stopped instead
+    # (DESIGN.md §7).  None for solvers without an eps rule.
+    converged_at: Optional[int] = None
 
     @property
     def total_bytes(self) -> float:
         return float(sum(self.bytes_transmitted))
 
-    def as_dict(self) -> Dict[str, List[float]]:
+    def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
     @classmethod
-    def from_dict(cls, d: Dict[str, List[float]]) -> "History":
-        return cls(**{f.name: list(d.get(f.name, [])) for f in dataclasses.fields(cls)})
+    def from_dict(cls, d: Dict[str, Any]) -> "History":
+        series = {f.name: list(d.get(f.name, []))
+                  for f in dataclasses.fields(cls) if f.name != "converged_at"}
+        conv = d.get("converged_at")
+        return cls(converged_at=None if conv is None else int(conv), **series)
 
 
 @dataclasses.dataclass
@@ -95,7 +104,11 @@ class Result:
         keys = jax.random.split(jax.random.PRNGKey(self.spec.seed), d)
         state0 = icoa.init_state(self.family, keys, self.data.xcols, self.data.y)
         a_ini = cov.gram(self.data.y[None, :] - state0.f)
-        return minimax.upper_bound(a_ini, alpha, self.data.y.shape[0])
+        # same inner-solver budget as the run itself (SolverSpec.minimax_*),
+        # so the bound and the protected weights share one PGD configuration
+        return minimax.upper_bound(a_ini, alpha, self.data.y.shape[0],
+                                   steps=self.spec.solver.minimax_steps,
+                                   lr=self.spec.solver.minimax_lr)
 
     # ---------------------------------------------------------- persistence
 
@@ -148,6 +161,12 @@ class ResultSet:
 
     def std(self, field: str = "test_mse") -> np.ndarray:
         return self.stack(field).std(axis=0)
+
+    @property
+    def converged_sweeps(self) -> List[Optional[int]]:
+        """Per-trial record index where the serial eps rule stops (see
+        History.converged_at); None where the solver has no eps rule."""
+        return [r.history.converged_at for r in self.results]
 
     @property
     def cumulative_bytes(self) -> np.ndarray:

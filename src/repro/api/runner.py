@@ -1,4 +1,5 @@
-"""Compiled Monte-Carlo execution (api v2): one program, many trials.
+"""Compiled Monte-Carlo execution (api v2): one program, many trials, many
+devices.
 
 Every figure in the paper is an average over independent trials of one
 scenario.  `fit` runs one trial eagerly; this module splits the work along
@@ -12,34 +13,58 @@ family, the partition, the solver schedule, the covariance engine — is
 closed over at build time; the returned `run_fn` takes a (traced) trial
 offset, regenerates that trial's dataset INSIDE the trace (sources.
 make_dataset is seed-traceable), and runs the solver's `*_scan` variant.
-`batch_fit` then executes all trials as one `jit(vmap(run_fn))` on the
-local backend — no Python loop, one XLA program — and falls back to serial
-`fit` calls where vmap cannot reach (shard_map collectives, Pallas-kernel
-Gram paths).
+
+`batch_fit` then executes all trials as one compiled program, picking the
+execution geometry from the spec (DESIGN.md §7):
+
+  * local backend, >1 host device: the trial axis is sharded over a
+    `launch.mesh.make_trial_mesh` — shard_map over the device axis, vmap
+    within each device — so K devices run ~K trials concurrently.  Trial
+    counts that do not divide the device count are padded (clamped trial
+    indices) and the padding rows sliced away on return.
+  * local backend, 1 device (or `backend.trial_devices=1`): the classic
+    single `jit(vmap(run_fn))`.
+  * shard_map backend: each trial needs the whole agent mesh, so trials run
+    as a compiled `lax.scan` over `run_fn` — one XLA program, collectives
+    inside the scan body, no Python-loop serial fallback.
+
+`solver.use_kernel=True` compiles under every path: the Pallas Gram kernels
+carry custom-vmap rules that lower the trial batch to batch-gridded kernels
+(kernels/gram).  `backend.compute_dtype` casts the generated data (and hence
+the whole solve) inside the trace; `backend.donate` donates the trial-index
+buffer to the compiled program.
 
 Trial t of a spec is exactly `fit(trial_spec(spec, t))`: both the data seed
 and the solver seed are offset by t, so compiled histories are checked
-against serial runs to machine precision (tests/test_api_v2.py).  The one
-semantic difference: the compiled schedule is static, so `solver.eps`
-early-stopping does not apply (a data-dependent break cannot be staged).
+against serial runs to machine precision (tests/test_api_v2.py,
+tests/test_batch_parallel.py).  The one semantic difference: the compiled
+schedule is static, so `solver.eps` early-stopping cannot break the loop —
+instead `History.converged_at` records where the serial rule would have
+stopped (core.icoa.converged_record).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro.core import baselines, icoa
+from repro.core import baselines, distributed, icoa
 from repro.data import sources as data_sources
+from repro.launch.mesh import make_trial_mesh
 
 from repro.api.result import History, Result, ResultSet
-from repro.api.solvers import _bytes_history
-from repro.api.specs import ExperimentSpec, SpecError
+from repro.api.solvers import _bytes_history, _mesh
+from repro.api.specs import _COMPUTE_DTYPES, ExperimentSpec, SpecError
 
-__all__ = ["build_runner", "batch_fit", "trial_spec"]
+__all__ = ["build_runner", "build_distributed_runner", "batch_fit",
+           "trial_spec"]
+
+_COMPILED_SOLVERS = ("icoa", "averaging", "residual_refitting")
 
 
 def trial_spec(spec: ExperimentSpec, trial: int) -> ExperimentSpec:
@@ -52,36 +77,48 @@ def trial_spec(spec: ExperimentSpec, trial: int) -> ExperimentSpec:
         data=dataclasses.replace(spec.data, seed=spec.data.seed + trial))
 
 
+def _trial_dataset(spec: ExperimentSpec, trial):
+    """Generate + cast + partition one trial's data INSIDE the trace."""
+    dspec = spec.data
+    xtr, ytr, xte, yte = data_sources.make_dataset(
+        dspec.source, n_train=dspec.n_train, n_test=dspec.n_test,
+        seed=dspec.seed + trial, noise=dspec.noise,
+        n_attrs=dspec.n_attrs, options=dspec.source_options)
+    if spec.backend.compute_dtype is not None:
+        dt = _COMPUTE_DTYPES[spec.backend.compute_dtype]
+        xtr, ytr, xte, yte = (a.astype(dt) for a in (xtr, ytr, xte, yte))
+    groups = dspec.groups
+    xcols = jnp.stack([xtr[:, g] for g in groups])
+    xcols_test = jnp.stack([xte[:, g] for g in groups])
+    return xcols, ytr, xcols_test, yte
+
+
 def build_runner(spec: ExperimentSpec) -> Callable[[Any], Dict[str, Any]]:
     """Close over the spec-static structure; return `run_fn(trial)`.
 
     `run_fn` is pure and fully traceable: `trial` may be a traced int32, so
     `jax.vmap(run_fn)(jnp.arange(k))` stages k independent trials into one
-    program.  It returns a dict of jnp values:
+    program (and shard_map over a trial mesh shards that batch across
+    devices).  It returns a dict of jnp values:
 
         params    stacked agent params, leading dim D
         weights   (D,) combination weights
         f         (D, N_train) final per-agent train predictions
         train_mse / test_mse / eta   history arrays (records axis)
+        converged_at  (icoa only) record index of the serial eps stop
     """
     spec.validate()
     if spec.backend.name != "local":
         raise SpecError(
-            "build_runner compiles the local backend only; shard_map runs "
-            "one-agent-per-device collectives that vmap cannot batch — "
-            "batch_fit falls back to serial fit() there")
-    dspec = spec.data
-    groups = dspec.groups
+            "build_runner compiles the local backend only; the shard_map "
+            "backend runs one-agent-per-device collectives — use "
+            "build_distributed_runner (batch_fit picks the right one)")
+    groups = spec.data.groups
     family = spec.agent.resolve(n_cols=len(groups[0]))
     solver = spec.solver
 
     def run_fn(trial) -> Dict[str, Any]:
-        xtr, ytr, xte, yte = data_sources.make_dataset(
-            dspec.source, n_train=dspec.n_train, n_test=dspec.n_test,
-            seed=dspec.seed + trial, noise=dspec.noise,
-            n_attrs=dspec.n_attrs, options=dspec.source_options)
-        xcols = jnp.stack([xtr[:, g] for g in groups])
-        xcols_test = jnp.stack([xte[:, g] for g in groups])
+        xcols, ytr, xcols_test, yte = _trial_dataset(spec, trial)
         seed = spec.seed + trial
         d = len(groups)
 
@@ -107,23 +144,145 @@ def build_runner(spec: ExperimentSpec) -> Callable[[Any], Dict[str, Any]]:
     return run_fn
 
 
+def build_distributed_runner(spec: ExperimentSpec,
+                             mesh=None) -> Callable[[Any], Dict[str, Any]]:
+    """`build_runner`'s shard_map twin: one agent per mesh device.
+
+    The returned `run_fn(trial)` is traceable (the shard_map'd sweeps stage
+    under jit/scan), so `batch_fit` runs a whole trial batch as one compiled
+    `lax.scan` — each trial occupies the full agent mesh, trials execute
+    sequentially, and nothing falls back to eager `fit()` calls.
+    """
+    spec.validate()
+    if spec.backend.name != "shard_map":
+        raise SpecError(
+            "build_distributed_runner compiles the shard_map backend; use "
+            "build_runner for the local backend")
+    groups = spec.data.groups
+    d = len(groups)
+    mesh = mesh or _mesh(spec, d)   # one-agent-per-device rule lives in solvers
+    family = spec.agent.resolve(n_cols=len(groups[0]))
+    solver = spec.solver
+
+    def run_fn(trial) -> Dict[str, Any]:
+        xcols, ytr, xcols_test, yte = _trial_dataset(spec, trial)
+        seed = spec.seed + trial
+
+        if solver.name == "icoa":
+            params, f, weights, hist = distributed.run_scan_distributed(
+                family, solver.icoa_config(), xcols, ytr, xcols_test, yte,
+                seed, mesh)
+        elif solver.name == "averaging":
+            params, f, hist = distributed.run_averaging_scan_distributed(
+                family, xcols, ytr, xcols_test, yte, seed, mesh)
+            weights = jnp.ones((d,), f.dtype) / d
+        elif solver.name == "residual_refitting":
+            params, f, hist = distributed.run_refit_scan_distributed(
+                family, xcols, ytr, xcols_test, yte, solver.n_sweeps, seed,
+                mesh)
+            weights = jnp.ones((d,), f.dtype)
+        else:
+            raise SpecError(
+                f"no compiled distributed runner for solver {solver.name!r}; "
+                f"registered third-party solvers run through fit()")
+        return {"params": params, "weights": weights, "f": f, **hist}
+
+    return run_fn
+
+
 def _can_compile(spec: ExperimentSpec) -> bool:
-    # Pallas Gram kernels do not batch under vmap; shard_map is per-device
-    return (spec.backend.name == "local" and not spec.solver.use_kernel
-            and spec.solver.name in ("icoa", "averaging", "residual_refitting"))
+    # every built-in solver compiles on both backends (kernel paths included);
+    # only registered third-party solvers still go through serial fit()
+    return spec.solver.name in _COMPILED_SOLVERS
+
+
+def _trial_device_count(spec: ExperimentSpec, n_trials: int) -> int:
+    avail = len(jax.devices())
+    k = avail if spec.backend.trial_devices is None else spec.backend.trial_devices
+    if k > avail:
+        raise SpecError(
+            f"backend.trial_devices={k} but only {avail} host device(s) exist "
+            f"(launch with XLA_FLAGS=--xla_force_host_platform_device_count=K)")
+    return min(k, n_trials)   # never mesh more devices than trials
+
+
+def _run_batch_program(fn, spec: ExperimentSpec, trials: jnp.ndarray):
+    """jit + (optional) donation of the trial buffer, in one place.
+
+    Donation is best-effort by design: the trial-index buffer is tiny and
+    integer-typed, so XLA often cannot alias it into the float outputs — the
+    "donated buffers were not usable" warning is the expected no-op outcome,
+    not a bug, and is silenced here.
+    """
+    jfn = jax.jit(fn, donate_argnums=(0,) if spec.backend.donate else ())
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return jfn(trials)
+
+
+def _local_batch_program(spec: ExperimentSpec, n_trials: int):
+    """The local backend's pre-jit batch program + its trial vector.
+
+    Single device (or trial_devices=1): plain `vmap(run_fn)`.  Otherwise the
+    vmapped batch is shard_map'd over the trial mesh, with padding/masking
+    for n_trials % k != 0: the tail re-runs the last real trial (any index
+    is valid work) and callers slice its rows away.  Shared with
+    benchmarks/batch_bench.py so the timed program IS the production one.
+    """
+    run_fn = build_runner(spec)
+    k = _trial_device_count(spec, n_trials)
+    if k <= 1:
+        return jax.vmap(run_fn), jnp.arange(n_trials)
+    mesh = make_trial_mesh(k)
+    padded = -(-n_trials // k) * k
+    trials = jnp.minimum(jnp.arange(padded), n_trials - 1)
+    fn = distributed._shmap(lambda t: jax.vmap(run_fn)(t), mesh,
+                            in_specs=P("trials"), out_specs=P("trials"))
+    return fn, trials
+
+
+def _shard_map_batch_program(spec: ExperimentSpec, n_trials: int):
+    """The shard_map backend's pre-jit batch program: a per-device trial loop
+    (lax.scan over the distributed run_fn) — each trial uses the whole agent
+    mesh, so trials are sequential, but the loop is ONE XLA program, not k
+    eager fit() calls.  Shared with benchmarks/batch_bench.py."""
+    run_fn = build_distributed_runner(spec)
+
+    def loop(trials):
+        return jax.lax.scan(lambda c, t: (c, run_fn(t)), 0, trials)[1]
+
+    return loop, jnp.arange(n_trials)
+
+
+def _batch_local(spec: ExperimentSpec, n_trials: int) -> Dict[str, Any]:
+    """Local backend: vmap the trial axis, sharded over the trial mesh."""
+    fn, trials = _local_batch_program(spec, n_trials)
+    out = _run_batch_program(fn, spec, trials)
+    if trials.shape[0] != n_trials:
+        out = jax.tree.map(lambda a: a[:n_trials], out)
+    return out
+
+
+def _batch_shard_map(spec: ExperimentSpec, n_trials: int) -> Dict[str, Any]:
+    """shard_map backend: the compiled trial loop of _shard_map_batch_program."""
+    fn, trials = _shard_map_batch_program(spec, n_trials)
+    return _run_batch_program(fn, spec, trials)
 
 
 def batch_fit(spec: ExperimentSpec, n_trials: int, *,
               compiled: Optional[bool] = None) -> ResultSet:
     """Run `n_trials` independent Monte-Carlo trials of one spec.
 
-    Local backend: one jitted `vmap` over the trial axis — a single compiled
-    program generates every trial's data and runs every solve.  `compiled=
-    False` forces the serial path (k `fit()` calls — what shard_map, Pallas
-    kernels, and third-party solvers always use); `compiled=True` errors if
-    the spec cannot compile.  Per-trial histories of the two paths agree to
-    machine precision; the compiled path ignores `solver.eps` (static
-    schedule).
+    One compiled program for every built-in solver on both backends — the
+    trial axis sharded across host devices on the local backend (see the
+    module docstring for the geometry), a compiled scan on the shard_map
+    backend, Pallas-kernel Gram paths batched via their custom-vmap rules.
+    `compiled=False` forces the serial path (k `fit()` calls — what
+    registered third-party solvers always use); `compiled=True` errors if the
+    spec cannot compile.  Per-trial histories of every path agree to machine
+    precision; the compiled paths ignore `solver.eps` (static schedule) but
+    report the serial stopping record as `History.converged_at`.
     """
     spec.validate()
     if n_trials < 1:
@@ -135,8 +294,10 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
 
         return ResultSet(spec, [fit(trial_spec(spec, t)) for t in range(n_trials)])
 
-    run_fn = build_runner(spec)
-    out = jax.jit(jax.vmap(run_fn))(jnp.arange(n_trials))
+    if spec.backend.name == "shard_map":
+        out = _batch_shard_map(spec, n_trials)
+    else:
+        out = _batch_local(spec, n_trials)
 
     groups = spec.data.groups
     family = spec.agent.resolve(n_cols=len(groups[0]))
@@ -148,6 +309,7 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
 
     # one bulk device-to-host transfer per history field, not one per scalar
     host = {k: np.asarray(out[k]) for k in ("train_mse", "test_mse", "eta")}
+    conv = np.asarray(out["converged_at"]) if "converged_at" in out else None
     results = []
     for t in range(n_trials):
         take = lambda tree: jax.tree.map(lambda a: a[t], tree)
@@ -155,7 +317,8 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
             train_mse=[float(v) for v in host["train_mse"][t]],
             test_mse=[float(v) for v in host["test_mse"][t]],
             eta=[float(v) for v in host["eta"][t]],
-            bytes_transmitted=list(bytes_hist))
+            bytes_transmitted=list(bytes_hist),
+            converged_at=None if conv is None else int(conv[t]))
         results.append(Result(
             spec=trial_spec(spec, t), family=family,
             params=take(out["params"]), weights=out["weights"][t],

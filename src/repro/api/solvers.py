@@ -123,7 +123,10 @@ def _fit_icoa(spec: ExperimentSpec, data: Dataset, family) -> Result:
     history = History(
         train_mse=hist["train_mse"], test_mse=hist.get("test_mse", []),
         eta=hist["eta"],
-        bytes_transmitted=_bytes_history(spec.solver, d, n, len(hist["train_mse"])))
+        bytes_transmitted=_bytes_history(spec.solver, d, n, len(hist["train_mse"])),
+        # serial runs truncate AT the eps stop, so the converged record is
+        # simply the last one (compiled runs compute it from the eps rule)
+        converged_at=len(hist["train_mse"]) - 1)
     return Result(spec=spec, family=family, params=params, weights=weights,
                   f=f, history=history, data=data)
 

@@ -9,6 +9,8 @@ Every knob of the paper's trade-off surface — scenario x solver x protection
     AgentSpec     hypothesis-space family (resolves the agents.FAMILIES registry)
     SolverSpec    icoa | averaging | residual_refitting + every ICOA knob
     BackendSpec   local (vmap, single process) | shard_map (one device/agent)
+                  + Monte-Carlo execution knobs (trial_devices sharding,
+                  compute_dtype, buffer donation) read by api.batch_fit
 
 Specs are plain data: hashable, `dataclasses.replace`-able (how `sweep()`
 builds grids) and JSON round-trippable (`to_dict` / `from_dict`, strict on
@@ -233,14 +235,47 @@ class SolverSpec:
             engine=self.engine)
 
 
+# the ONE compute-dtype table: validate() checks membership, api.runner maps
+# the names to jnp dtypes — adding a dtype here enables both at once
+_COMPUTE_DTYPES = {"float32": jnp.float32, "float64": jnp.float64,
+                   "bfloat16": jnp.bfloat16}
+
+
 @dataclasses.dataclass(frozen=True)
 class BackendSpec:
     name: str = "local"             # local | shard_map
     n_devices: Optional[int] = None  # shard_map: devices to mesh (default = D)
+    trial_devices: Optional[int] = None  # batch_fit on the local backend:
+    #                                 devices to shard the Monte-Carlo trial
+    #                                 axis over (None = every host device;
+    #                                 1 = single-device vmap, the pre-PR-4 path)
+    compute_dtype: Optional[str] = None  # compiled runs: cast the generated
+    #                                 dataset (and hence the whole solve) to
+    #                                 this dtype; None = the source's native
+    #                                 dtype (f32, or f64 under jax_enable_x64)
+    donate: bool = True             # donate the trial-index buffer to the
+    #                                 compiled batch program (frees it for the
+    #                                 output allocation; no aliasing hazard —
+    #                                 batch_fit builds it fresh per call)
 
     def validate(self) -> None:
         if self.name not in _BACKENDS:
             raise SpecError(f"unknown backend {self.name!r}; pick one of {_BACKENDS}")
+        if self.trial_devices is not None and self.trial_devices < 1:
+            raise SpecError(
+                f"trial_devices must be >= 1 (got {self.trial_devices}); use "
+                f"None to shard over every host device")
+        if self.name == "shard_map" and self.trial_devices is not None:
+            raise SpecError(
+                "trial_devices shards the trial axis of the LOCAL backend; "
+                "the shard_map backend devotes the whole agent mesh to each "
+                "trial (n_devices sizes it) and runs trials as a compiled "
+                "scan — the knob would be silently ignored")
+        if self.compute_dtype is not None and self.compute_dtype not in _COMPUTE_DTYPES:
+            raise SpecError(
+                f"unknown compute_dtype {self.compute_dtype!r}; pick one of "
+                f"{sorted(_COMPUTE_DTYPES)} (or None for the source's native "
+                f"dtype)")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -66,8 +66,9 @@ def sweep(base: ExperimentSpec, grid: Mapping[str, Sequence[Any]],
         [(r.spec.solver.alpha, r.history.total_bytes, r.test_mse) for r in rs]
 
     `trials=k`: every grid point becomes k Monte-Carlo trials through
-    `batch_fit` (one compiled program per spec on the local backend) — a list
-    of `ResultSet`s exposing mean/std trade-off curves:
+    `batch_fit` (one compiled program per spec, trial axis sharded across the
+    host devices on the local backend — see api.runner) — a list of
+    `ResultSet`s exposing mean/std trade-off curves:
 
         [(rs.spec.solver.alpha, *rs.curve()) for rs in sweep(..., trials=8)]
     """

@@ -20,7 +20,20 @@ from repro.core import covariance as cov
 from repro.core import ensemble
 
 __all__ = ["averaging", "residual_refitting", "averaging_scan",
-           "residual_refitting_scan"]
+           "residual_refitting_scan", "align_param_dtypes"]
+
+
+def align_param_dtypes(family, params, xcol: jnp.ndarray, y: jnp.ndarray):
+    """Cast stacked INIT params to the dtypes `family.fit` will return.
+
+    The refit ring is the one schedule that carries never-fitted params
+    through a lax loop: zero-init params are f32 (family.init) while the
+    first in-loop `fit` follows the data dtype (f64 under jax_enable_x64),
+    and lax.scan/fori_loop reject dtype-changing carries.  `jax.eval_shape`
+    resolves the fit output dtypes without running a solve."""
+    like = jax.eval_shape(family.fit, jax.tree.map(lambda t: t[0], params),
+                          xcol, y)
+    return jax.tree.map(lambda t, s: t.astype(s.dtype), params, like)
 
 
 def averaging(family, xcols: jnp.ndarray, y: jnp.ndarray,
@@ -98,8 +111,9 @@ def residual_refitting_scan(family, xcols: jnp.ndarray, y: jnp.ndarray,
     leave-me-out residuals as the Python-loop original)."""
     d = xcols.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(jnp.asarray(seed)), d)
-    params = jax.vmap(family.init)(keys)
-    f = jnp.zeros((d, xcols.shape[1]))
+    params = align_param_dtypes(family, jax.vmap(family.init)(keys),
+                                xcols[0], y)
+    f = jnp.zeros((d, xcols.shape[1]), dtype=y.dtype)
 
     def agent_update(i, carry):
         params, f = carry

@@ -27,11 +27,15 @@ __all__ = ["gram", "residual_covariance", "subsample_size", "subsample_indices",
 
 
 def gram(r: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
-    """(D, N) -> (D, D) Gram matrix R R^T / N."""
+    """(D, N) -> (D, D) Gram matrix R R^T / N.
+
+    The kernel accumulates in fp32 (MXU contract) and the result is cast
+    back to the residual dtype, so downstream scatters/solves stay
+    dtype-stable under jax_enable_x64."""
     if use_kernel:
         from repro.kernels.gram import ops as gram_ops
 
-        return gram_ops.gram(r, use_pallas=True) / r.shape[1]
+        return (gram_ops.gram(r, use_pallas=True) / r.shape[1]).astype(r.dtype)
     return (r @ r.T) / r.shape[1]
 
 

@@ -57,11 +57,14 @@ class CovState(NamedTuple):
 
 def row_product(vec: jnp.ndarray, r_sub: jnp.ndarray,
                 use_kernel: bool = False) -> jnp.ndarray:
-    """(m,), (D, m) -> (D,) = R @ vec — the engine's one O(N*D) product."""
+    """(m,), (D, m) -> (D,) = R @ vec — the engine's one O(N*D) product.
+
+    Kernel path: fp32 accumulation, cast back to the residual dtype (same
+    dtype discipline as covariance.gram)."""
     if use_kernel:
         from repro.kernels.gram import ops as gram_ops
 
-        return gram_ops.row_gram(vec, r_sub, use_pallas=True)
+        return gram_ops.row_gram(vec, r_sub, use_pallas=True).astype(r_sub.dtype)
     return r_sub @ vec
 
 

@@ -35,13 +35,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import baselines
 from repro.core import covariance as cov
 from repro.core import covstate
 from repro.core import ensemble, gradient, minimax
 from repro.core.icoa import ICOAConfig
 
 __all__ = ["make_agent_mesh", "distributed_sweep", "run_distributed",
-           "run_averaging_distributed", "run_refit_distributed"]
+           "run_scan_distributed", "run_averaging_distributed",
+           "run_averaging_scan_distributed", "run_refit_distributed",
+           "run_refit_scan_distributed"]
 
 
 def _shmap(body, mesh: Mesh, in_specs, out_specs):
@@ -313,16 +316,22 @@ def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
     return f_local, params_local, w
 
 
-def distributed_sweep(mesh: Mesh, cfg: ICOAConfig, family):
-    """Compiled shard_map sweep: (xcols, y, f, params, key) -> (f, params, w)."""
+def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
+    """The shard_map'd sweep WITHOUT the jit wrapper: traceable from inside
+    an enclosing jit/scan (the compiled Monte-Carlo batch path)."""
     body_fn = (_sweep_body_incremental if cfg.engine == "incremental"
                else _sweep_body)
     body = partial(body_fn, cfg, family)
-    return jax.jit(_shmap(
+    return _shmap(
         body, mesh,
         in_specs=(P("agents"), P(), P("agents"), P("agents"), P()),
         out_specs=(P("agents"), P("agents"), P()),
-    ))
+    )
+
+
+def distributed_sweep(mesh: Mesh, cfg: ICOAConfig, family):
+    """Compiled shard_map sweep: (xcols, y, f, params, key) -> (f, params, w)."""
+    return jax.jit(_sweep_shmap(mesh, cfg, family))
 
 
 def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
@@ -366,10 +375,83 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     return params, w, hist
 
 
+def run_scan_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray,
+                         y: jnp.ndarray, xcols_test: jnp.ndarray,
+                         y_test: jnp.ndarray, seed, mesh: Mesh):
+    """Fully-traceable distributed ICOA run: the shard_map Monte-Carlo block.
+
+    Same math and key discipline as `run_distributed` — init from
+    PRNGKey(seed), record with uniform weights, then per sweep
+    `key, k1 = split(key)` and record with the sweep's returned weights — but
+    the outer loop is a static `lax.scan` over cfg.n_sweeps whose body calls
+    the shard_map'd sweep (collectives stage fine under scan), and every
+    recorded quantity stays a jnp array.  `seed` may be a traced integer, so
+    an enclosing `lax.scan` over trial indices executes a whole Monte-Carlo
+    batch as ONE compiled program while each trial still runs
+    one-agent-per-device (api.batch_fit's shard_map batch path, DESIGN.md §7).
+
+    Returns (params, f, weights, hist): hist arrays of length n_sweeps + 1
+    plus hist["converged_at"], where `run_distributed`'s eps rule would have
+    stopped.
+    """
+    from repro.core import icoa as icoa_mod   # lazy: icoa imports nothing here
+
+    d = xcols.shape[0]
+    seed = jnp.asarray(seed)
+    keys = jax.random.split(jax.random.PRNGKey(seed), d)
+    params = jax.vmap(lambda k, x: family.fit(family.init(k), x, y))(keys, xcols)
+    f = jax.vmap(family.predict)(params, xcols)
+
+    sweep_fn = _sweep_shmap(mesh, cfg, family)
+
+    def record(params, f, w):
+        train = jnp.mean((y - w @ f) ** 2)
+        preds = jax.vmap(family.predict)(params, xcols_test)
+        test = jnp.mean((y_test - w @ preds) ** 2)
+        eta = ensemble.eta(cov.gram(y[None, :] - f, use_kernel=cfg.use_kernel))
+        return train, test, eta
+
+    w0 = jnp.ones((d,), f.dtype) / d
+    tr0, te0, et0 = record(params, f, w0)
+    key0 = jax.random.PRNGKey(seed + 1)
+
+    def step(carry, _):
+        params, f, key = carry
+        key, k1 = jax.random.split(key)
+        f, params, w = sweep_fn(xcols, y, f, params, k1)
+        tr, te, et = record(params, f, w)
+        return (params, f, key), (w, tr, te, et)
+
+    (params, f, _), (ws, trs, tes, ets) = jax.lax.scan(
+        step, (params, f, key0), None, length=cfg.n_sweeps)
+    hist = {
+        "train_mse": jnp.concatenate([tr0[None], trs]),
+        "test_mse": jnp.concatenate([te0[None], tes]),
+        "eta": jnp.concatenate([et0[None], ets]),
+    }
+    hist["converged_at"] = icoa_mod.converged_record(hist["eta"], cfg.eps)
+    return params, f, ws[-1], hist
+
+
 # --------------------------------------------------------------------------
 # The paper's comparison algorithms as collective schedules, so the api layer
 # can run every solver on either backend. Both keep the attribute-sharding
 # guarantee: xcols stays on its agent's device, only predictions move.
+
+
+def _averaging_shmap(mesh: Mesh, family):
+    """shard_map'd per-agent fit (traceable; no jit wrapper)."""
+
+    def body(xcol, y, key):
+        p = family.fit(family.init(key[0]), xcol[0], y)
+        f = family.predict(p, xcol[0])
+        return jax.tree.map(lambda t: t[None], p), f[None]
+
+    return _shmap(
+        body, mesh,
+        in_specs=(P("agents"), P(), P("agents")),
+        out_specs=(P("agents"), P("agents")),
+    )
 
 
 def run_averaging_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
@@ -380,34 +462,29 @@ def run_averaging_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
     d = xcols.shape[0]
     mesh = mesh or make_agent_mesh(d)
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
-
-    def body(xcol, y, key):
-        p = family.fit(family.init(key[0]), xcol[0], y)
-        f = family.predict(p, xcol[0])
-        return jax.tree.map(lambda t: t[None], p), f[None]
-
-    fn = jax.jit(_shmap(
-        body, mesh,
-        in_specs=(P("agents"), P(), P("agents")),
-        out_specs=(P("agents"), P("agents")),
-    ))
-    return fn(xcols, y, keys)
+    return jax.jit(_averaging_shmap(mesh, family))(xcols, y, keys)
 
 
-def run_refit_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
-                          xcols_test: Optional[jnp.ndarray] = None,
-                          y_test: Optional[jnp.ndarray] = None,
-                          n_cycles: int = 30, mesh: Optional[Mesh] = None,
-                          seed: int = 0):
-    """Residual refitting (ICEA ring) under shard_map: one cycle = one
-    round-robin pass; the updating agent needs only the ensemble SUM, so each
-    update is a single psum of one (N,) vector — O(N*D) wire bytes per cycle,
-    the ring cost of Fig. 2 and exactly what the api layer's byte accounting
-    charges. Mirrors baselines.residual_refitting's (params, f, hist) return
-    contract (params stacked over agents; ensemble prediction = sum of f)."""
+def run_averaging_scan_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
+                                   xcols_test: jnp.ndarray,
+                                   y_test: jnp.ndarray, seed, mesh: Mesh):
+    """Traceable distributed averaging (seed may be traced): mirrors
+    baselines.averaging_scan's (params, f, hist) contract — uniform-mean
+    train/test MSE plus the eta diagnostic — with the per-agent fits running
+    one-per-device."""
     d = xcols.shape[0]
-    mesh = mesh or make_agent_mesh(d)
-    keys = jax.random.split(jax.random.PRNGKey(seed), d)
+    keys = jax.random.split(jax.random.PRNGKey(jnp.asarray(seed)), d)
+    params, f = _averaging_shmap(mesh, family)(xcols, y, keys)
+    train = jnp.mean((y - f.mean(axis=0)) ** 2)
+    ft = jax.vmap(family.predict)(params, xcols_test)
+    test = jnp.mean((y_test - ft.mean(axis=0)) ** 2)
+    eta = ensemble.eta(cov.gram(y[None, :] - f))
+    hist = {"train_mse": train[None], "test_mse": test[None], "eta": eta[None]}
+    return params, f, hist
+
+
+def _refit_cycle_shmap(mesh: Mesh, family):
+    """shard_map'd ICEA ring cycle (traceable; no jit wrapper)."""
 
     def cycle(xcol, y, f_local, params_local):
         dd = jax.lax.psum(1, "agents")
@@ -428,13 +505,32 @@ def run_refit_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
 
         return jax.lax.fori_loop(0, dd, agent_update, (f_local, params_local))
 
-    cycle_fn = jax.jit(_shmap(
+    return _shmap(
         cycle, mesh,
         in_specs=(P("agents"), P(), P("agents"), P("agents")),
         out_specs=(P("agents"), P("agents")),
-    ))
+    )
 
-    params = jax.vmap(lambda k: family.init(k))(keys)
+
+def run_refit_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
+                          xcols_test: Optional[jnp.ndarray] = None,
+                          y_test: Optional[jnp.ndarray] = None,
+                          n_cycles: int = 30, mesh: Optional[Mesh] = None,
+                          seed: int = 0):
+    """Residual refitting (ICEA ring) under shard_map: one cycle = one
+    round-robin pass; the updating agent needs only the ensemble SUM, so each
+    update is a single psum of one (N,) vector — O(N*D) wire bytes per cycle,
+    the ring cost of Fig. 2 and exactly what the api layer's byte accounting
+    charges. Mirrors baselines.residual_refitting's (params, f, hist) return
+    contract (params stacked over agents; ensemble prediction = sum of f)."""
+    d = xcols.shape[0]
+    mesh = mesh or make_agent_mesh(d)
+    keys = jax.random.split(jax.random.PRNGKey(seed), d)
+
+    cycle_fn = jax.jit(_refit_cycle_shmap(mesh, family))
+
+    params = baselines.align_param_dtypes(
+        family, jax.vmap(lambda k: family.init(k))(keys), xcols[0], y)
     f = jnp.zeros((d, y.shape[0]), dtype=y.dtype)
     hist = {"train_mse": [], "test_mse": [], "eta": []}
     for _ in range(n_cycles):
@@ -444,4 +540,35 @@ def run_refit_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
             ft = jax.vmap(family.predict)(params, xcols_test)
             hist["test_mse"].append(float(jnp.mean((y_test - ft.sum(axis=0)) ** 2)))
         hist["eta"].append(float(ensemble.eta(cov.gram(y[None, :] - f))))
+    return params, f, hist
+
+
+def run_refit_scan_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
+                               xcols_test: jnp.ndarray, y_test: jnp.ndarray,
+                               n_cycles: int, seed, mesh: Mesh):
+    """Traceable distributed residual refitting (seed may be traced): the ring
+    cycles as a `lax.scan` whose body is the shard_map'd cycle — identical
+    update order and leave-me-out residuals as `run_refit_distributed`, with
+    per-cycle records kept as jnp arrays (no init record, matching the serial
+    history contract)."""
+    d = xcols.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(jnp.asarray(seed)), d)
+    cycle_fn = _refit_cycle_shmap(mesh, family)
+
+    params = baselines.align_param_dtypes(
+        family, jax.vmap(family.init)(keys), xcols[0], y)
+    f = jnp.zeros((d, y.shape[0]), dtype=y.dtype)
+
+    def cycle(carry, _):
+        params, f = carry
+        f, params = cycle_fn(xcols, y, f, params)
+        train = jnp.mean((y - f.sum(axis=0)) ** 2)
+        ft = jax.vmap(family.predict)(params, xcols_test)
+        test = jnp.mean((y_test - ft.sum(axis=0)) ** 2)
+        eta = ensemble.eta(cov.gram(y[None, :] - f))
+        return (params, f), (train, test, eta)
+
+    (params, f), (trs, tes, ets) = jax.lax.scan(
+        cycle, (params, f), None, length=n_cycles)
+    hist = {"train_mse": trs, "test_mse": tes, "eta": ets}
     return params, f, hist

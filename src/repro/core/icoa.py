@@ -45,7 +45,7 @@ from repro.core import gradient
 from repro.core import minimax
 
 __all__ = ["ICOAConfig", "ICOAState", "init_state", "sweep", "run", "run_scan",
-           "ensemble_predict"]
+           "converged_record", "ensemble_predict"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -326,6 +326,25 @@ def ensemble_predict(family, params: Any, weights: jnp.ndarray, xcols: jnp.ndarr
     return ensemble.combine(weights, preds)
 
 
+def converged_record(eta: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Record index where the serial eps rule stops, from a full eta history.
+
+    `run` breaks after recording sweep k (record k >= 2) when
+    |eta[k] - eta[k-1]| < eps, comparing post-sweep records only (record 0 is
+    the non-cooperative init, record 1 has no predecessor sweep).  Compiled
+    schedules are static, so they execute every sweep regardless — this
+    closed form reports where `fit()` WOULD have truncated the history.
+    Traceable (jnp ops only): batches under the trial vmap.
+    """
+    eta = jnp.asarray(eta)
+    last = eta.shape[0] - 1
+    if eta.shape[0] < 3:
+        return jnp.asarray(last, jnp.int32)
+    hit = jnp.abs(eta[2:] - eta[1:-1]) < eps
+    first = jnp.argmax(hit) + 2
+    return jnp.where(jnp.any(hit), first, last).astype(jnp.int32)
+
+
 def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
              xcols_test: jnp.ndarray, y_test: jnp.ndarray, seed):
     """Fully-traceable ICOA run: the Monte-Carlo building block.
@@ -339,7 +358,9 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     ONE compiled program (api.batch_fit; DESIGN.md §6).
 
     Returns (params, f, weights, hist) with hist arrays of length
-    cfg.n_sweeps + 1 (record 0 = the non-cooperative init, like `run`).
+    cfg.n_sweeps + 1 (record 0 = the non-cooperative init, like `run`), plus
+    hist["converged_at"] — the record index where `run`'s eps rule would have
+    stopped (the static schedule cannot break early, but it can report).
     """
     d = xcols.shape[0]
     seed = jnp.asarray(seed)
@@ -371,6 +392,7 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
         "test_mse": jnp.concatenate([te0[None], tes]),
         "eta": jnp.concatenate([et0[None], ets]),
     }
+    hist["converged_at"] = converged_record(hist["eta"], cfg.eps)
     return params, f, ws[-1], hist
 
 

@@ -14,6 +14,8 @@ descent initialised at the closed-form solution of the unprotected problem
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -31,7 +33,7 @@ def robust_objective(a: jnp.ndarray, a0: jnp.ndarray, delta: float) -> jnp.ndarr
 
 
 def robust_weights(a0: jnp.ndarray, delta: float, steps: int = 300, lr: float = 0.05,
-                   a_init: jnp.ndarray = None) -> jnp.ndarray:
+                   a_init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Projected (sub)gradient descent on eq. 24 with 1^T a = 1.
 
     Init at the unprotected closed form a*(A0); project each iterate back onto
@@ -40,6 +42,9 @@ def robust_weights(a0: jnp.ndarray, delta: float, steps: int = 300, lr: float = 
     the incremental covariance engine passes its cached (A0 + jitter I)^{-1} 1
     normalised, saving the O(D^3) solve per probe; the same wildness guard
     applies either way.
+
+    Pure lax.scan PGD over jnp values only — no host syncs — so `jax.vmap`
+    batches it across the Monte-Carlo trial axis (api.batch_fit) for free.
     """
     d = a0.shape[0]
     if a_init is None:
@@ -94,8 +99,12 @@ def delta_opt(alpha: float, n: int, sigma_max_sq: float, t_correct: bool = False
 
 
 def upper_bound(a_ini: jnp.ndarray, alpha: float, n: int,
-                steps: int = 500, lr: float = 0.05) -> float:
+                steps: int = 300, lr: float = 0.05) -> float:
     """Eq. 28: high-probability upper bound on the ensemble test error at rate alpha.
+
+    The default PGD budget matches `robust_weights` / `SolverSpec.minimax_steps`
+    (300), so the bound and a run's protected weights share one inner-solver
+    configuration unless a caller explicitly overrides it.
 
     a_ini is the *accurate* covariance of the pre-ICOA residuals. The bound is
     the optimal value of the protected problem at delta_opt(alpha): every ICOA

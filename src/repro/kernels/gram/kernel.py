@@ -11,6 +11,14 @@ vectors of N instances each, N >> D. TPU mapping:
 
 VMEM budget at the default BN=2048, Dp=128: tile 128*2048*4 = 1 MiB + scratch
 64 KiB — comfortably inside the ~16 MiB/core VMEM.
+
+The `*_batched` variants prepend a batch grid axis (grid = (B, NK), batch
+outermost, N-blocks innermost-sequential) so a whole Monte-Carlo trial batch
+runs as ONE kernel launch: each batch step re-initialises the VMEM accumulator
+at its first N-block and flushes at its last, reusing the same scratch across
+batch elements. They back the custom-vmap rules in ops.py — `jax.vmap` over
+the public `gram`/`row_gram` lowers to these instead of failing to batch
+`pallas_call`.
 """
 from __future__ import annotations
 
@@ -21,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gram_pallas", "row_gram_pallas"]
+__all__ = ["gram_pallas", "gram_pallas_batched", "row_gram_pallas",
+           "row_gram_pallas_batched"]
 
 
 def _gram_kernel(r_ref, out_ref, acc_ref, *, nk: int):
@@ -53,6 +62,46 @@ def gram_pallas(r: jnp.ndarray, *, block_n: int = 2048, interpret: bool = True) 
         in_specs=[pl.BlockSpec((dp, block_n), lambda k: (0, k))],
         out_specs=pl.BlockSpec((dp, dp), lambda k: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((dp, dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dp, dp), jnp.float32)],
+        interpret=interpret,
+    )(r)
+
+
+def _gram_batch_kernel(r_ref, out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = r_ref[0].astype(jnp.float32)          # (Dp, BN)
+    acc_ref[...] += jax.lax.dot_general(
+        blk, blk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...]
+
+
+def gram_pallas_batched(r: jnp.ndarray, *, block_n: int = 2048,
+                        interpret: bool = True) -> jnp.ndarray:
+    """r: (B, Dp, Np) -> fp32 (B, Dp, Dp): one launch for the whole batch.
+
+    Grid (B, NK) with the N axis innermost: the accumulator scratch carries
+    within one batch element and is re-zeroed at each element's first N-block,
+    so the batch axis needs no extra VMEM beyond the single-trial kernel.
+    """
+    b, dp, np_ = r.shape
+    assert np_ % block_n == 0, (np_, block_n)
+    nk = np_ // block_n
+    return pl.pallas_call(
+        functools.partial(_gram_batch_kernel, nk=nk),
+        grid=(b, nk),
+        in_specs=[pl.BlockSpec((1, dp, block_n), lambda i, k: (i, 0, k))],
+        out_specs=pl.BlockSpec((1, dp, dp), lambda i, k: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dp, dp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((dp, dp), jnp.float32)],
         interpret=interpret,
     )(r)
@@ -99,6 +148,47 @@ def row_gram_pallas(r: jnp.ndarray, v: jnp.ndarray, *, block_n: int = 2048,
                   pl.BlockSpec((8, block_n), lambda k: (0, k))],
         out_specs=pl.BlockSpec((dp, 8), lambda k: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((dp, 8), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dp, 8), jnp.float32)],
+        interpret=interpret,
+    )(r, v)
+
+
+def _row_gram_batch_kernel(r_ref, v_ref, out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = r_ref[0].astype(jnp.float32)           # (Dp, BN)
+    vec = v_ref[0].astype(jnp.float32)           # (8, BN); row 0 is the payload
+    acc_ref[...] += jax.lax.dot_general(
+        blk, vec, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...]
+
+
+def row_gram_pallas_batched(r: jnp.ndarray, v: jnp.ndarray, *,
+                            block_n: int = 2048,
+                            interpret: bool = True) -> jnp.ndarray:
+    """r: (B, Dp, Np), v: (B, 8, Np) -> fp32 (B, Dp, 8): batched `row_gram_pallas`
+    with the same (batch-outer, N-inner) grid/accumulator discipline as
+    `gram_pallas_batched`."""
+    b, dp, np_ = r.shape
+    assert np_ % block_n == 0, (np_, block_n)
+    assert v.shape == (b, 8, np_), (v.shape, r.shape)
+    nk = np_ // block_n
+    return pl.pallas_call(
+        functools.partial(_row_gram_batch_kernel, nk=nk),
+        grid=(b, nk),
+        in_specs=[pl.BlockSpec((1, dp, block_n), lambda i, k: (i, 0, k)),
+                  pl.BlockSpec((1, 8, block_n), lambda i, k: (i, 0, k))],
+        out_specs=pl.BlockSpec((1, dp, 8), lambda i, k: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dp, 8), jnp.float32),
         scratch_shapes=[pltpu.VMEM((dp, 8), jnp.float32)],
         interpret=interpret,
     )(r, v)

@@ -1,16 +1,26 @@
-"""jit'd public wrapper for the Gram kernel: padding, dtype and fallback.
+"""jit'd public wrapper for the Gram kernel: padding, dtype, batching, fallback.
 
 TPU is the target; on CPU we validate through interpret=True (exercised in
 tests) but default to the ref oracle for speed inside ICOA itself.
+
+Batching: `pallas_call` has no built-in vmap rule, so the Pallas paths are
+wrapped in `jax.custom_batching.custom_vmap` — `jax.vmap(gram)` (the Monte-
+Carlo trial axis of api.batch_fit) lowers to the `*_batched` kernels of
+kernel.py, which grid over the batch dimension instead of failing to batch.
+The rule re-enters a custom-vmap function, so nested vmaps flatten into one
+batch grid axis; unbatched operands are broadcast to the batch.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 
-from repro.kernels.gram.kernel import gram_pallas, row_gram_pallas
+from repro.kernels.gram.kernel import (gram_pallas, gram_pallas_batched,
+                                       row_gram_pallas, row_gram_pallas_batched)
 from repro.kernels.gram.ref import gram_ref, row_gram_ref
 
 __all__ = ["gram", "row_gram"]
@@ -22,13 +32,77 @@ def _pad_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+@functools.lru_cache(maxsize=None)
+def _gram_vmappable(block_n: int, interpret: bool):
+    """The padded single-trial Pallas call, with a vmap rule that reroutes a
+    batch (of any nesting depth) to the batch-gridded kernel."""
+
+    @custom_vmap
+    def call(rp: jnp.ndarray) -> jnp.ndarray:
+        return gram_pallas(rp, block_n=block_n, interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, rp):
+        if not in_batched[0]:
+            rp = jnp.broadcast_to(rp, (axis_size,) + rp.shape)
+        return batched(rp), True
+
+    @custom_vmap
+    def batched(rp: jnp.ndarray) -> jnp.ndarray:
+        return gram_pallas_batched(rp, block_n=block_n, interpret=interpret)
+
+    @batched.def_vmap
+    def _nested(axis_size, in_batched, rp):
+        if not in_batched[0]:
+            rp = jnp.broadcast_to(rp, (axis_size,) + rp.shape)
+        out = batched(rp.reshape((-1,) + rp.shape[2:]))
+        return out.reshape(rp.shape[:2] + out.shape[1:]), True
+
+    return call
+
+
+@functools.lru_cache(maxsize=None)
+def _row_gram_vmappable(block_n: int, interpret: bool):
+    """Batching wrapper for the fused row-Gram call (same scheme as above)."""
+
+    @custom_vmap
+    def call(rp: jnp.ndarray, vp: jnp.ndarray) -> jnp.ndarray:
+        return row_gram_pallas(rp, vp, block_n=block_n, interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, rp, vp):
+        if not in_batched[0]:
+            rp = jnp.broadcast_to(rp, (axis_size,) + rp.shape)
+        if not in_batched[1]:
+            vp = jnp.broadcast_to(vp, (axis_size,) + vp.shape)
+        return batched(rp, vp), True
+
+    @custom_vmap
+    def batched(rp: jnp.ndarray, vp: jnp.ndarray) -> jnp.ndarray:
+        return row_gram_pallas_batched(rp, vp, block_n=block_n,
+                                       interpret=interpret)
+
+    @batched.def_vmap
+    def _nested(axis_size, in_batched, rp, vp):
+        if not in_batched[0]:
+            rp = jnp.broadcast_to(rp, (axis_size,) + rp.shape)
+        if not in_batched[1]:
+            vp = jnp.broadcast_to(vp, (axis_size,) + vp.shape)
+        out = batched(rp.reshape((-1,) + rp.shape[2:]),
+                      vp.reshape((-1,) + vp.shape[2:]))
+        return out.reshape(rp.shape[:2] + out.shape[1:]), True
+
+    return call
+
+
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_n"))
 def gram(r: jnp.ndarray, use_pallas: bool = False, interpret: bool = True,
          block_n: int = 2048) -> jnp.ndarray:
     """(D, N) -> (D, D) = R @ R^T with fp32 accumulation.
 
     `use_pallas=True` routes through the TPU kernel (interpret=True executes
-    the kernel body in Python on CPU — correctness validation path).
+    the kernel body in Python on CPU — correctness validation path).  Safe
+    under `jax.vmap` (any depth): batches lower to the batch-gridded kernel.
     """
     d, n = r.shape
     if not use_pallas:
@@ -37,7 +111,7 @@ def gram(r: jnp.ndarray, use_pallas: bool = False, interpret: bool = True,
     dp = _pad_to(d, _LANE)
     np_ = _pad_to(n, bn)
     rp = jnp.zeros((dp, np_), r.dtype).at[:d, :n].set(r)
-    out = gram_pallas(rp, block_n=bn, interpret=interpret)
+    out = _gram_vmappable(bn, interpret)(rp)
     return out[:d, :d]
 
 
@@ -50,6 +124,7 @@ def row_gram(v: jnp.ndarray, r: jnp.ndarray, use_pallas: bool = False,
     against every agent's transmitted residuals (the rank-2 update of
     core.covstate). Padding/fallback mirror `gram`: `use_pallas=True` routes
     through the TPU kernel (interpret=True executes on CPU for validation).
+    Safe under `jax.vmap` (any depth) via the batch-gridded kernel.
     """
     d, n = r.shape
     if not use_pallas:
@@ -59,5 +134,5 @@ def row_gram(v: jnp.ndarray, r: jnp.ndarray, use_pallas: bool = False,
     np_ = _pad_to(n, bn)
     rp = jnp.zeros((dp, np_), r.dtype).at[:d, :n].set(r)
     vp = jnp.zeros((8, np_), v.dtype).at[0, :n].set(v)
-    out = row_gram_pallas(rp, vp, block_n=bn, interpret=interpret)
+    out = _row_gram_vmappable(bn, interpret)(rp, vp)
     return out[:d, 0]

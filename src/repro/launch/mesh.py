@@ -7,8 +7,10 @@ touch jax device state (smoke tests see 1 CPU device; only dryrun.py forces
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "make_local_mesh", "POD_SHAPE", "MULTIPOD_SHAPE"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_trial_mesh",
+           "POD_SHAPE", "MULTIPOD_SHAPE"]
 
 POD_SHAPE = (16, 16)            # 256 chips / pod
 MULTIPOD_SHAPE = (2, 16, 16)    # 2 pods = 512 chips
@@ -24,3 +26,18 @@ def make_local_mesh():
     """Whatever devices exist, as a 1D 'data' mesh (examples / CI)."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_trial_mesh(n_devices=None):
+    """The Monte-Carlo batch mesh: a 1D 'trials' axis over the first
+    `n_devices` host devices (default all).  api.batch_fit shards the vmapped
+    trial batch over it; repro.sharding's DEFAULT_RULES map the logical
+    'trials' axis here so constrained model code composes with it."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"need 1 <= n_devices <= {len(devs)} (have {len(devs)} host "
+            f"devices; launch with XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=K for more), got {n}")
+    return jax.sharding.Mesh(np.array(devs[:n]), ("trials",))

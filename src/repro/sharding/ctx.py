@@ -35,6 +35,10 @@ DEFAULT_RULES = {
     "kvlen": ("model",),      # decode KV caches: sequence-sharded over model
     "expert": ("model",),
     "fsdp": ("data",),
+    "trials": ("trials",),    # Monte-Carlo trial batch axis (launch.mesh.
+                              # make_trial_mesh / api.batch_fit): logical name
+                              # for the sharded trial dimension, so constrain()
+                              # calls compose with the batch runner's mesh
 }
 
 
