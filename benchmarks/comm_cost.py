@@ -1,84 +1,90 @@
-"""Fig. 2 analogue: residual-transmission cost per sweep for each algorithm,
-analytically and as measured all-gather bytes from the compiled distributed
-sweep (5 host devices, subprocess — the measured column ties the paper's
-O(.) table to the actual collective schedule the runtime emits).
+"""Fig. 2 analogue: residual-transmission cost per sweep for each algorithm —
+the analytic float counts of the paper's O(.) table next to the MEASURED
+byte ledger of actual `api.fit` runs (repro.transport, DESIGN.md §8).
 
     averaging:        O(1)      (no residual exchange)
-    residual refit:   O(N*D)    (ring, one residual per agent per cycle)
-    ICOA:             O(N*D^2)  (all-gather per agent update)
+    residual refit:   O(N*D)    (ring, one psum'd ensemble sum per cycle)
+    ICOA dense:       O(N*D^2)  (re-gather per agent update)
     ICOA + MM(alpha): O(N*D^2/alpha)
+    ICOA row-wise:    O(N*D)    (row_broadcast schedule / incremental engine)
+
+The measured column comes from `History.bytes_transmitted` — the per-sweep
+ledger every sweep threads — so this suite is also the living consistency
+check that measured == analytic × codec-itemsize for exact codecs on the
+full topology, and shows how sparse topologies (relay transmissions) and
+lossy codecs move real traffic off the analytic line.
 """
 from __future__ import annotations
 
-import os
-import subprocess
-import sys
-
 from benchmarks.common import row
-
-_PROBE = r"""
-import jax, jax.numpy as jnp, json
-from repro.agents import PolynomialFamily
-from repro.core import icoa
-from repro.core.distributed import distributed_sweep, make_agent_mesh
-from repro.launch.hlo_analysis import analyze_hlo
-
-D, N = 5, 4000
-fam = PolynomialFamily(n_cols=1, degree=4)
-mesh = make_agent_mesh(D)
-res = {}
-# dense engine pins the schedule under measurement (the incremental engine's
-# carried CovState always has row-broadcast traffic, DESIGN.md SS5)
-for name, alpha, rb, eng in (("icoa_full", 1.0, False, "dense"),
-                             ("icoa_mm100", 100.0, False, "dense"),
-                             ("icoa_rowbcast", 1.0, True, "dense"),
-                             ("icoa_rowbcast_mm100", 100.0, True, "dense"),
-                             ("icoa_incremental", 1.0, False, "incremental"),
-                             ("icoa_incremental_mm100", 100.0, False, "incremental")):
-    cfg = icoa.ICOAConfig(n_sweeps=1, alpha=alpha, delta=0.0 if alpha == 1 else 0.01,
-                          row_broadcast=rb, engine=eng)
-    fn = distributed_sweep(mesh, cfg, fam)
-    args = (
-        jax.ShapeDtypeStruct((D, N, 1), jnp.float32),
-        jax.ShapeDtypeStruct((N,), jnp.float32),
-        jax.ShapeDtypeStruct((D, N), jnp.float32),
-        jax.ShapeDtypeStruct((D, fam.n_features), jnp.float32),
-        jax.ShapeDtypeStruct((2,), jnp.uint32),
-    )
-    hlo = fn.lower(*args).compile().as_text()
-    st = analyze_hlo(hlo)
-    res[name] = st.collective_bytes
-print("JSON:" + json.dumps(res))
-"""
+from repro import api
 
 
-def run(n: int = 4000, d: int = 5) -> list[str]:
+def _spec(n: int, **kw):
+    transport = kw.pop("transport", api.TransportSpec())
+    solver_kw = dict(n_sweeps=1, eps=0.0)
+    solver_kw.update(kw)
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_train=n, n_test=2, seed=0),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),
+        solver=api.SolverSpec(**solver_kw),
+        transport=transport)
+
+
+def _sweep_bytes(spec: api.ExperimentSpec) -> float:
+    hist = api.fit(spec).history.bytes_transmitted
+    return hist[-1] if len(hist) == 1 else hist[1]
+
+
+def run(n: int = 4000) -> list[str]:
+    d = 5   # friedman1 is 5-attribute by construction (one agent each)
     out = [
         row("comm/averaging_analytic_floats_per_sweep", 0, "1"),
         row("comm/refit_analytic_floats_per_sweep", 0, f"{n * d}"),
         row("comm/icoa_analytic_floats_per_sweep", 0, f"{n * d * d}"),
-        row("comm/icoa_mm_alpha100_analytic_floats_per_sweep", 0, f"{n * d * d // 100}"),
+        row("comm/icoa_mm_alpha100_analytic_floats_per_sweep", 0,
+            f"{n * d * d // 100}"),
     ]
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=5"
-    env.setdefault("PYTHONPATH", "src")
-    try:
-        p = subprocess.run([sys.executable, "-c", _PROBE], env=env, text=True,
-                           capture_output=True, timeout=600)
-        import json
-        line = [l for l in p.stdout.splitlines() if l.startswith("JSON:")]
-        if line:
-            res = json.loads(line[0][5:])
-            for name, v in res.items():
-                out.append(row(f"comm/{name}_measured_collective_bytes_per_sweep", 0, f"{v:.3e}"))
-            full = res.get("icoa_full", 0.0)
-            for name in ("icoa_mm100", "icoa_rowbcast", "icoa_rowbcast_mm100",
-                         "icoa_incremental", "icoa_incremental_mm100"):
-                if res.get(name):
-                    out.append(row(f"comm/reduction_vs_paper_{name}", 0,
-                                   f"{full / res[name]:.1f}x"))
-        else:
-            out.append(row("comm/measured", 0, f"probe_failed:{p.stderr[-200:]}"))
-    except Exception as e:  # measured column is best-effort
-        out.append(row("comm/measured", 0, f"skipped:{type(e).__name__}"))
+
+    cases = {
+        "averaging": _spec(n, name="averaging"),
+        "refit": _spec(n, name="residual_refitting"),
+        "icoa_full": _spec(n, engine="dense"),
+        "icoa_mm100": _spec(n, engine="dense", alpha=100.0, delta=0.01,
+                            minimax_steps=30),
+        "icoa_rowbcast": _spec(n, engine="dense", row_broadcast=True),
+        "icoa_incremental": _spec(n),
+        "icoa_incremental_mm100": _spec(n, alpha=100.0, delta=0.01,
+                                        minimax_steps=30),
+        "icoa_incremental_ring": _spec(
+            n, transport=api.TransportSpec(topology="ring")),
+        "icoa_incremental_int8": _spec(
+            n, transport=api.TransportSpec(codec="int8_affine")),
+    }
+    measured = {}
+    for name, spec in cases.items():
+        measured[name] = _sweep_bytes(spec)
+        out.append(row(f"comm/{name}_measured_ledger_bytes_per_sweep", 0,
+                       f"{measured[name]:.3e}"))
+
+    # ledger == analytic cross-check (exact codec, full topology, 8 B/float)
+    checks = {
+        "refit": 8.0 * api.comm_floats_per_sweep(cases["refit"].solver, d, n),
+        "icoa_full": 8.0 * api.comm_floats_per_sweep(
+            cases["icoa_full"].solver, d, n),
+        "icoa_incremental": 8.0 * api.comm_floats_per_sweep(
+            cases["icoa_incremental"].solver, d, n),
+    }
+    for name, expect in checks.items():
+        ok = measured[name] == expect
+        out.append(row(f"comm/ledger_vs_analytic_{name}", 0,
+                       "MATCH" if ok else
+                       f"MISMATCH:{measured[name]}!={expect}"))
+
+    full = measured["icoa_full"]
+    for name in ("icoa_mm100", "icoa_rowbcast", "icoa_incremental",
+                 "icoa_incremental_mm100", "icoa_incremental_int8"):
+        if measured.get(name):
+            out.append(row(f"comm/reduction_vs_paper_{name}", 0,
+                           f"{full / measured[name]:.1f}x"))
     return out

@@ -13,7 +13,7 @@ import traceback
 from benchmarks import (batch_bench, comm_cost, fig1_overtraining,
                         fig3_divergence, fig5_upper_bound, kernels_bench,
                         roofline, sweep_engines, table1_algorithms,
-                        table2_minimax)
+                        table2_minimax, transport_bench)
 
 SUITES = {
     "table1": table1_algorithms.run,     # paper Table 1
@@ -28,6 +28,8 @@ SUITES = {
                                          # (writes BENCH_sweep.json)
     "batch": batch_bench.run,            # Monte-Carlo trials/sec vs devices
                                          # (writes BENCH_batch.json)
+    "transport": transport_bench.run,    # trade-off curves per topology x
+                                         # codec (writes BENCH_transport.json)
 }
 
 

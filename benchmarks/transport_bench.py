@@ -1,0 +1,119 @@
+"""Trade-off curves per topology × codec: the transport subsystem's
+deliverable figure (ISSUE 5 acceptance).
+
+For each (topology, codec) cell the suite runs a compiled Monte-Carlo batch
+(`api.batch_fit`) of the Fig. 1 scenario and records the measured-ledger
+trade-off curve (cumulative bytes, mean/std test MSE) — a family of curves
+the paper's single minimax axis cannot produce: alpha only subsamples, while
+topologies reprice relays and codecs reprice payloads.  A budgeted
+`greedy_eta` row shows the schedule knob on top.
+
+Writes ``BENCH_transport.json`` at the repo root (CI uploads it per PR).
+At full scale the suite FAILS (raises) unless the headline comparison holds:
+`int8_affine` on a ring must reach ≥ 2× byte reduction at ≤ 10% test-MSE
+regression versus the exact/full baseline.  ``BENCH_SMOKE=1`` shrinks
+trials/sweeps to CI scale, where the noisy small-sample headline is only
+recorded in the JSON (`meets_2x_at_10pct`), not enforced.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro import api
+
+__all__ = ["run"]
+
+_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_transport.json")
+_SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+_TOPOLOGIES = ("full", "ring", "star")
+_CODECS = ("exact_f64", "exact_bf16", "int8_affine")
+
+
+def _base_spec(n_sweeps: int) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_train=400 if _SMOKE else 2000,
+                          n_test=400 if _SMOKE else 2000, seed=0),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),
+        solver=api.SolverSpec(n_sweeps=n_sweeps, eps=0.0))
+
+
+def _curve(rs: api.ResultSet) -> dict:
+    b = np.cumsum(rs.stack("bytes_transmitted"), axis=1)
+    return {
+        "cumulative_bytes": [float(v) for v in b.mean(axis=0)],
+        "test_mse_mean": [float(v) for v in rs.mean("test_mse")],
+        "test_mse_std": [float(v) for v in rs.std("test_mse")],
+    }
+
+
+def run() -> list:
+    trials = 2 if _SMOKE else 8
+    n_sweeps = 2 if _SMOKE else 6
+    base = _base_spec(n_sweeps)
+
+    results = {}
+    for topo in _TOPOLOGIES:
+        for codec in _CODECS:
+            spec = api.replace(base, transport=api.TransportSpec(
+                topology=topo, codec=codec))
+            rs = api.batch_fit(spec, trials)
+            cell = _curve(rs)
+            results[f"{topo}/{codec}"] = cell
+            yield row(f"transport/{topo}_{codec}_total_bytes", 0,
+                      f"{cell['cumulative_bytes'][-1]:.3e}")
+            yield row(f"transport/{topo}_{codec}_final_mse", 0,
+                      f"{cell['test_mse_mean'][-1]:.4e}")
+
+    # budgeted schedule: greedy_eta at half the exact/full spend
+    full_bytes = results["full/exact_f64"]["cumulative_bytes"][-1]
+    spec_b = api.replace(base, transport=api.TransportSpec(
+        byte_budget=0.5 * full_bytes, policy="greedy_eta"))
+    rs_b = api.batch_fit(spec_b, trials)
+    results["full/exact_f64+budget0.5"] = _curve(rs_b)
+    yield row("transport/budget0.5_final_mse", 0,
+              f"{rs_b.mean('test_mse')[-1]:.4e}")
+
+    # headline acceptance: int8 on a ring vs exact on full
+    base_cell = results["full/exact_f64"]
+    lossy_cell = results["ring/int8_affine"]
+    byte_reduction = (base_cell["cumulative_bytes"][-1]
+                      / lossy_cell["cumulative_bytes"][-1])
+    mse_regression = (lossy_cell["test_mse_mean"][-1]
+                      / base_cell["test_mse_mean"][-1] - 1.0)
+    yield row("transport/int8_ring_byte_reduction", 0,
+              f"{byte_reduction:.2f}x")
+    yield row("transport/int8_ring_mse_regression", 0,
+              f"{100.0 * mse_regression:+.2f}%")
+
+    payload = {
+        "scenario": "friedman1",
+        "n_train": base.data.n_train,
+        "trials": trials,
+        "n_sweeps": n_sweeps,
+        "smoke": _SMOKE,
+        "backend": jax.default_backend(),
+        "curves": results,
+        "headline": {
+            "comparison": "ring/int8_affine vs full/exact_f64",
+            "byte_reduction": round(byte_reduction, 3),
+            "test_mse_regression": round(mse_regression, 5),
+            "meets_2x_at_10pct": bool(byte_reduction >= 2.0
+                                      and mse_regression <= 0.10),
+        },
+    }
+    with open(_OUT, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    yield row("transport/json", 0, os.path.basename(_OUT))
+    if not _SMOKE and not payload["headline"]["meets_2x_at_10pct"]:
+        raise AssertionError(
+            f"transport headline regressed: int8_affine+ring gives "
+            f"{byte_reduction:.2f}x bytes at {100 * mse_regression:+.2f}% "
+            f"test-MSE vs exact/full — the acceptance bar is >= 2x at "
+            f"<= +10% (see BENCH_transport.json)")

@@ -33,6 +33,8 @@ from dataclasses import replace
 
 from repro.data.partition import PARTITIONS, register_partition
 from repro.data.sources import SOURCES, register_source
+from repro.transport import (CODECS, TOPOLOGIES, register_codec,
+                             register_topology)
 
 from repro.api.io import load_result as load
 from repro.api.io import save_result
@@ -43,16 +45,19 @@ from repro.api.solvers import (SOLVERS, Solver, comm_floats_per_sweep,
                                register_solver, run_solver)
 from repro.api.specs import (AgentSpec, BackendSpec, DataSpec, Dataset,
                              ExperimentSpec, SolverSpec, SpecError,
-                             clear_dataset_cache, spec_from_dict, spec_to_dict)
+                             TransportSpec, clear_dataset_cache,
+                             spec_from_dict, spec_to_dict)
 from repro.api.sweep import grid_specs, spec_with, sweep, zip_specs
 
 __all__ = [
-    "AgentSpec", "BackendSpec", "DataSpec", "Dataset", "ExperimentSpec",
-    "History", "PARTITIONS", "Result", "ResultSet", "SOLVERS", "SOURCES",
-    "Solver", "SpecError", "batch_fit", "build_distributed_runner",
+    "AgentSpec", "BackendSpec", "CODECS", "DataSpec", "Dataset",
+    "ExperimentSpec", "History", "PARTITIONS", "Result", "ResultSet",
+    "SOLVERS", "SOURCES", "Solver", "SpecError", "TOPOLOGIES",
+    "TransportSpec", "batch_fit", "build_distributed_runner",
     "build_runner", "clear_dataset_cache",
-    "comm_floats_per_sweep", "fit", "grid_specs", "load", "register_partition",
-    "register_solver", "register_source", "replace", "save_result",
+    "comm_floats_per_sweep", "fit", "grid_specs", "load", "register_codec",
+    "register_partition", "register_solver", "register_source",
+    "register_topology", "replace", "save_result",
     "spec_from_dict", "spec_to_dict", "spec_with", "sweep", "trial_spec",
     "zip_specs",
 ]

@@ -6,9 +6,12 @@
 ensemble of the current agents would achieve (paper eq. 11) — for averaging
 and residual refitting this is a diagnostic (they combine uniformly / by
 summation), for ICOA it is the objective itself. `bytes_transmitted` is the
-analytic wire cost of the sweep that produced the record (record 0 — the
-non-cooperative init — is always 0), giving the paper's transmission /
-performance trade-off directly as `(cumulative_bytes, test_mse)` pairs.
+MEASURED wire cost of the sweep that produced the record (record 0 — the
+non-cooperative init — is always 0): the transport ledger's encoded-payload
+bytes × relay transmissions (DESIGN.md §8.3), codec/topology-dependent and,
+under a byte budget, data-dependent — which is why `ResultSet.
+cumulative_bytes` validates per-trial agreement.  The paper's transmission /
+performance trade-off is directly the `(cumulative_bytes, test_mse)` pairs.
 """
 from __future__ import annotations
 
@@ -170,9 +173,25 @@ class ResultSet:
 
     @property
     def cumulative_bytes(self) -> np.ndarray:
-        """Analytic cumulative wire bytes per record (identical across trials
-        — the cost model is spec-static, not data-dependent)."""
-        return np.cumsum(self.stack("bytes_transmitted")[0])
+        """Cumulative measured wire bytes per record — defined only when the
+        per-trial ledgers agree.
+
+        Unbudgeted runs charge spec-static payload prices, so every trial's
+        byte history is identical and the shared axis is well-defined.  Under
+        a `byte_budget` (which rows transmit is data-dependent) — or a
+        topology whose structure varies per trial — the ledgers genuinely
+        diverge, and silently returning trial 0's axis would mislabel every
+        other trial's curve; use `stack("bytes_transmitted")` and aggregate
+        per trial instead."""
+        b = self.stack("bytes_transmitted")
+        scale = max(float(np.max(np.abs(b))), 1.0)
+        if np.max(np.abs(b - b[0:1])) > 1e-9 * scale:
+            raise ValueError(
+                "per-trial byte ledgers diverge (a byte_budget or per-trial "
+                "topology makes measured traffic data-dependent); there is "
+                "no single byte axis — use np.cumsum(rs.stack("
+                "'bytes_transmitted'), axis=1) for per-trial curves")
+        return np.cumsum(b[0])
 
     def curve(self, field: str = "test_mse") -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """The paper's trade-off curve: (cumulative_bytes, mean, std)."""

@@ -124,15 +124,16 @@ def build_runner(spec: ExperimentSpec) -> Callable[[Any], Dict[str, Any]]:
 
         if solver.name == "icoa":
             params, f, weights, hist = icoa.run_scan(
-                family, solver.icoa_config(), xcols, ytr, xcols_test, yte,
-                seed)
+                family, solver.icoa_config(spec.transport.resolve(d)),
+                xcols, ytr, xcols_test, yte, seed)
         elif solver.name == "averaging":
             params, f, hist = baselines.averaging_scan(
                 family, xcols, ytr, xcols_test, yte, seed)
             weights = jnp.ones((d,), f.dtype) / d
         elif solver.name == "residual_refitting":
             params, f, hist = baselines.residual_refitting_scan(
-                family, xcols, ytr, xcols_test, yte, solver.n_sweeps, seed)
+                family, xcols, ytr, xcols_test, yte, solver.n_sweeps, seed,
+                codec=spec.transport.resolve(d).codec)
             # the ring ensemble is the SUM of agents (see api.solvers)
             weights = jnp.ones((d,), f.dtype)
         else:
@@ -170,8 +171,8 @@ def build_distributed_runner(spec: ExperimentSpec,
 
         if solver.name == "icoa":
             params, f, weights, hist = distributed.run_scan_distributed(
-                family, solver.icoa_config(), xcols, ytr, xcols_test, yte,
-                seed, mesh)
+                family, solver.icoa_config(spec.transport.resolve(d)),
+                xcols, ytr, xcols_test, yte, seed, mesh)
         elif solver.name == "averaging":
             params, f, hist = distributed.run_averaging_scan_distributed(
                 family, xcols, ytr, xcols_test, yte, seed, mesh)
@@ -179,7 +180,7 @@ def build_distributed_runner(spec: ExperimentSpec,
         elif solver.name == "residual_refitting":
             params, f, hist = distributed.run_refit_scan_distributed(
                 family, xcols, ytr, xcols_test, yte, solver.n_sweeps, seed,
-                mesh)
+                mesh, codec=spec.transport.resolve(d).codec)
             weights = jnp.ones((d,), f.dtype)
         else:
             raise SpecError(
@@ -303,8 +304,11 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
     family = spec.agent.resolve(n_cols=len(groups[0]))
     d, n = len(groups), spec.data.n_train
     n_records = out["train_mse"].shape[1]
-    bytes_hist = _bytes_history(
-        spec.solver, d, n, n_records,
+    # icoa scans return the MEASURED per-sweep ledger; the baselines have no
+    # traced ledger (averaging: zero traffic, refit: constant psum price)
+    bytes_meas = np.asarray(out["bytes"]) if "bytes" in out else None
+    bytes_hist = None if bytes_meas is not None else _bytes_history(
+        spec, d, n, n_records,
         initial_record=spec.solver.name != "residual_refitting")
 
     # one bulk device-to-host transfer per history field, not one per scalar
@@ -317,7 +321,8 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
             train_mse=[float(v) for v in host["train_mse"][t]],
             test_mse=[float(v) for v in host["test_mse"][t]],
             eta=[float(v) for v in host["eta"][t]],
-            bytes_transmitted=list(bytes_hist),
+            bytes_transmitted=(list(bytes_hist) if bytes_meas is None
+                               else [float(v) for v in bytes_meas[t]]),
             converged_at=None if conv is None else int(conv[t]))
         results.append(Result(
             spec=trial_spec(spec, t), family=family,

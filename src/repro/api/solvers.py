@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import baselines, distributed, ensemble, icoa
 from repro.core import covariance as cov
+from repro.transport import ledger as ledger_mod
 
 from repro.api.result import History, Result
 from repro.api.specs import Dataset, ExperimentSpec, SolverSpec, SpecError
@@ -67,6 +68,11 @@ def comm_floats_per_sweep(solver: SolverSpec, d: int, n: int) -> int:
     Diagonal variance scalars under compression (alpha > 1) ride along.
     m comes from cov.subsample_size — the same function that sizes the actual
     transmitted index set, so reported bytes can never drift from the math.
+
+    Since PR 5 reported bytes come from the MEASURED transport ledger; this
+    float count survives as the analytic cross-check — ledger == floats ×
+    codec itemsize for exact codecs on the full topology (tested, and
+    asserted per-CI-run by the `comm` benchmark's ledger_vs_analytic rows).
     """
     if solver.name == "averaging":
         return 0
@@ -80,9 +86,18 @@ def comm_floats_per_sweep(solver: SolverSpec, d: int, n: int) -> int:
     return m * d * d + diag
 
 
-def _bytes_history(solver: SolverSpec, d: int, n: int, n_records: int,
+def _bytes_history(spec: ExperimentSpec, d: int, n: int, n_records: int,
                    initial_record: bool = True) -> list:
-    per_sweep = 4.0 * comm_floats_per_sweep(solver, d, n)
+    """Byte history for the solvers WITHOUT a traced ledger (averaging: no
+    traffic; residual refitting: one psum'd ensemble sum per update, priced
+    by the spec's codec — transport.ledger is the one accounting source).
+    icoa histories carry the measured per-sweep ledger instead (hist["bytes"]).
+    """
+    if spec.solver.name == "averaging":
+        per_sweep = 0.0
+    else:
+        tp = spec.resolved_transport()
+        per_sweep = ledger_mod.refit_cycle_bytes(tp, d, n)
     if initial_record:
         return [0.0] + [per_sweep] * max(0, n_records - 1)
     return [per_sweep] * n_records
@@ -108,8 +123,8 @@ def _mesh(spec: ExperimentSpec, d: int):
 
 @register_solver("icoa")
 def _fit_icoa(spec: ExperimentSpec, data: Dataset, family) -> Result:
-    cfg = spec.solver.icoa_config()
     d, n = data.xcols.shape[0], data.y.shape[0]
+    cfg = spec.solver.icoa_config(spec.transport.resolve(d))
     if spec.backend.name == "shard_map":
         params, weights, hist = distributed.run_distributed(
             family, cfg, data.xcols, data.y, data.xcols_test, data.y_test,
@@ -123,7 +138,10 @@ def _fit_icoa(spec: ExperimentSpec, data: Dataset, family) -> Result:
     history = History(
         train_mse=hist["train_mse"], test_mse=hist.get("test_mse", []),
         eta=hist["eta"],
-        bytes_transmitted=_bytes_history(spec.solver, d, n, len(hist["train_mse"])),
+        # MEASURED per-sweep wire bytes from the sweep-threaded ledger (the
+        # analytic comm_floats_per_sweep table stays as the tested
+        # cross-check for exact codecs on the full topology)
+        bytes_transmitted=list(hist["bytes"]),
         # serial runs truncate AT the eps stop, so the converged record is
         # simply the last one (compiled runs compute it from the eps rule)
         converged_at=len(hist["train_mse"]) - 1)
@@ -161,19 +179,21 @@ def _fit_averaging(spec: ExperimentSpec, data: Dataset, family) -> Result:
 @register_solver("residual_refitting")
 def _fit_refit(spec: ExperimentSpec, data: Dataset, family) -> Result:
     d, n = data.xcols.shape[0], data.y.shape[0]
+    codec = spec.transport.resolve(d).codec   # the ring's wire format
     if spec.backend.name == "shard_map":
         params, f, hist = distributed.run_refit_distributed(
             family, data.xcols, data.y, data.xcols_test, data.y_test,
-            n_cycles=spec.solver.n_sweeps, mesh=_mesh(spec, d), seed=spec.seed)
+            n_cycles=spec.solver.n_sweeps, mesh=_mesh(spec, d), seed=spec.seed,
+            codec=codec)
     else:
         params_list, f, hist = baselines.residual_refitting(
             family, data.xcols, data.y, data.xcols_test, data.y_test,
-            n_cycles=spec.solver.n_sweeps, seed=spec.seed)
+            n_cycles=spec.solver.n_sweeps, seed=spec.seed, codec=codec)
         params = jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
     history = History(
         train_mse=hist["train_mse"], test_mse=hist.get("test_mse", []),
         eta=hist["eta"],
-        bytes_transmitted=_bytes_history(spec.solver, d, n,
+        bytes_transmitted=_bytes_history(spec, d, n,
                                          len(hist["train_mse"]),
                                          initial_record=False))
     # the ring ensemble is the SUM of agents: literal ones keep `weights @ f`

@@ -20,19 +20,22 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro import transport as transport_lib
 from repro.agents import FAMILIES
 from repro.core.icoa import ICOAConfig
 from repro.data import sources as data_sources
 from repro.data.partition import PARTITIONS, make_groups, validate_partition
 from repro.data.sources import SOURCES
+from repro.transport import CODECS, POLICIES, TOPOLOGIES, TransportError
 
 __all__ = [
-    "DataSpec", "AgentSpec", "SolverSpec", "BackendSpec", "ExperimentSpec",
-    "Dataset", "SpecError", "spec_to_dict", "spec_from_dict",
+    "DataSpec", "AgentSpec", "SolverSpec", "BackendSpec", "TransportSpec",
+    "ExperimentSpec", "Dataset", "SpecError", "spec_to_dict", "spec_from_dict",
     "clear_dataset_cache",
 ]
 
@@ -225,14 +228,81 @@ class SolverSpec:
                 f"engine selects ICOA's covariance path; solver "
                 f"{self.name!r} has no per-probe covariance to cache")
 
-    def icoa_config(self) -> ICOAConfig:
+    def icoa_config(self, transport=None) -> ICOAConfig:
+        """`transport` is a resolved transport.Transport (None = the legacy
+        exact_f64/full default) — `ExperimentSpec.resolved_transport()`
+        produces it from the spec's TransportSpec."""
         return ICOAConfig(
             n_sweeps=self.n_sweeps, eps=self.eps, step0=self.step0,
             backtrack=self.backtrack, max_probes=self.max_probes,
             alpha=self.alpha, delta=self.delta, minimax_steps=self.minimax_steps,
             minimax_lr=self.minimax_lr, use_kernel=self.use_kernel,
             accept_reject=self.accept_reject, row_broadcast=self.row_broadcast,
-            engine=self.engine)
+            engine=self.engine, transport=transport)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """The communication regime of a run (DESIGN.md §8).
+
+    `topology`/`codec` resolve the open registries `transport.TOPOLOGIES`
+    and `transport.CODECS` (options as JSON-round-trippable tuple-of-pairs,
+    like DataSpec's).  `byte_budget` caps the run's measured wire bytes: the
+    sweep skips row broadcasts that would overrun it, in `policy` order
+    (`greedy_eta`: most promising cached-probe rows first; `truncate`:
+    round-robin, first come first served).  The default — lossless f64
+    payloads on the complete graph, no budget — reproduces the pre-transport
+    solver bit-for-bit.
+    """
+
+    topology: str = "full"            # key into transport.TOPOLOGIES
+    topology_options: Tuple[Tuple[str, Any], ...] = ()  # e.g. (("p", 0.4),)
+    codec: str = "exact_f64"          # key into transport.CODECS
+    codec_options: Tuple[Tuple[str, Any], ...] = ()     # e.g. (("k", 64),)
+    byte_budget: Optional[float] = None   # per-run measured-bytes cap
+    policy: str = "greedy_eta"        # budget order: greedy_eta | truncate
+
+    def validate(self) -> None:
+        if self.topology not in TOPOLOGIES:
+            raise SpecError(f"unknown topology {self.topology!r}; "
+                            f"registered: {sorted(TOPOLOGIES)}")
+        if self.codec not in CODECS:
+            raise SpecError(f"unknown codec {self.codec!r}; "
+                            f"registered: {sorted(CODECS)}")
+        for label, opts, known in (
+                ("topology", self.topology_options,
+                 TOPOLOGIES[self.topology].options),
+                ("codec", self.codec_options, CODECS[self.codec].options)):
+            for name, _ in opts:
+                if name not in known:
+                    raise SpecError(
+                        f"{label} {getattr(self, label)!r} has no option "
+                        f"{name!r}; valid: {sorted(known)}")
+        if self.policy not in POLICIES:
+            raise SpecError(f"unknown budget policy {self.policy!r}; "
+                            f"pick one of {POLICIES}")
+        if self.byte_budget is not None and not (
+                math.isfinite(self.byte_budget) and self.byte_budget > 0):
+            raise SpecError(f"byte_budget must be positive and finite (got "
+                            f"{self.byte_budget}); use None for unbudgeted")
+
+    def resolve(self, n_agents: int) -> transport_lib.Transport:
+        """Build the frozen, hashable Transport for a D-agent run (graph
+        structure, codec instance, budget) — what `ICOAConfig.transport`
+        carries as a static jit argument."""
+        self.validate()
+        try:
+            topo = transport_lib.build_topology(
+                self.topology, n_agents, options=self.topology_options)
+            codec = transport_lib.build_codec(
+                self.codec, options=self.codec_options)
+            return transport_lib.Transport(
+                topology=topo, codec=codec, byte_budget=self.byte_budget,
+                policy=self.policy)
+        except (TransportError, TypeError) as e:
+            # TypeError covers wrong-typed option VALUES (names are checked
+            # in validate), mirroring DataSpec.groups' contract
+            raise SpecError(f"transport: {e}") from None
 
 
 # the ONE compute-dtype table: validate() checks membership, api.runner maps
@@ -284,6 +354,7 @@ class ExperimentSpec:
     agent: AgentSpec = AgentSpec()
     solver: SolverSpec = SolverSpec()
     backend: BackendSpec = BackendSpec()
+    transport: TransportSpec = TransportSpec()
     seed: int = 0                   # solver seed (init + subsample streams)
 
     def validate(self) -> None:
@@ -291,6 +362,18 @@ class ExperimentSpec:
         self.agent.validate()
         self.solver.validate()
         self.backend.validate()
+        self.transport.validate()
+        if self.transport.byte_budget is not None:
+            if self.solver.name != "icoa" or self.solver.engine != "incremental":
+                raise SpecError(
+                    "byte_budget schedules gate per-row broadcasts off the "
+                    "carried CovState — they need solver 'icoa' with "
+                    "engine='incremental' (averaging transmits nothing; the "
+                    "refit ring and the dense oracle have no per-row "
+                    "broadcast to skip)")
+
+    def resolved_transport(self) -> transport_lib.Transport:
+        return self.transport.resolve(self.data.resolved_n_agents)
 
 
 # ------------------------------------------------------------- serialisation
@@ -317,16 +400,23 @@ def _pairs(value) -> Tuple[Tuple[str, Any], ...]:
 
 
 def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
-    top_unknown = sorted(set(d) - {"data", "agent", "solver", "backend", "seed"})
+    top_unknown = sorted(set(d) - {"data", "agent", "solver", "backend",
+                                   "transport", "seed"})
     if top_unknown:
         raise SpecError(
             f"unrecognised section(s) in spec dict: {top_unknown}; "
-            f"valid: ['agent', 'backend', 'data', 'seed', 'solver']")
+            f"valid: ['agent', 'backend', 'data', 'seed', 'solver', "
+            f"'transport']")
     data = _checked_fields(DataSpec, d.get("data", {}), "spec['data']")
     for key in ("source_options", "partition_options"):
         data[key] = _pairs(data.get(key, ()))
     agent = _checked_fields(AgentSpec, d.get("agent", {}), "spec['agent']")
     agent["options"] = _pairs(agent.get("options", ()))
+    # "transport" is optional for pre-transport saves: they load as default
+    trans = _checked_fields(TransportSpec, d.get("transport", {}),
+                            "spec['transport']")
+    for key in ("topology_options", "codec_options"):
+        trans[key] = _pairs(trans.get(key, ()))
     return ExperimentSpec(
         data=DataSpec(**data),
         agent=AgentSpec(**agent),
@@ -334,5 +424,6 @@ def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
                                             "spec['solver']")),
         backend=BackendSpec(**_checked_fields(BackendSpec, d.get("backend", {}),
                                               "spec['backend']")),
+        transport=TransportSpec(**trans),
         seed=d.get("seed", 0),
     )

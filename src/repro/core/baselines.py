@@ -23,6 +23,18 @@ __all__ = ["averaging", "residual_refitting", "averaging_scan",
            "residual_refitting_scan", "align_param_dtypes"]
 
 
+def _loo_residual(codec, y: jnp.ndarray, f_sum: jnp.ndarray,
+                  f_i: jnp.ndarray) -> jnp.ndarray:
+    """Agent i's refit target from what it RECEIVES: the leave-me-out
+    ensemble sum through the codec (transport.Codec), coded once — the ring's
+    psum is priced as one delivered collective payload.  `codec=None` (or any
+    codec that is identity for the dtype) keeps the legacy expression
+    bit-for-bit (the algebraically-equal regrouping differs by ulps)."""
+    if codec is None or codec.is_identity_for(f_sum.dtype):
+        return y - f_sum + f_i
+    return y - codec.roundtrip(f_sum - f_i)
+
+
 def align_param_dtypes(family, params, xcol: jnp.ndarray, y: jnp.ndarray):
     """Cast stacked INIT params to the dtypes `family.fit` will return.
 
@@ -54,9 +66,10 @@ def averaging(family, xcols: jnp.ndarray, y: jnp.ndarray,
 def residual_refitting(family, xcols: jnp.ndarray, y: jnp.ndarray,
                        xcols_test: Optional[jnp.ndarray] = None,
                        y_test: Optional[jnp.ndarray] = None,
-                       n_cycles: int = 30, seed: int = 0):
+                       n_cycles: int = 30, seed: int = 0, codec=None):
     """ICEA ring: ensemble prediction is the SUM of agents; each agent refits
-    the current global residual in turn."""
+    the current global residual in turn.  `codec` (transport.Codec) codes the
+    wire payload — the leave-me-out ensemble sum each updater receives."""
     d = xcols.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
     params = [family.init(k) for k in keys]
@@ -74,7 +87,8 @@ def residual_refitting(family, xcols: jnp.ndarray, y: jnp.ndarray,
 
     for _ in range(n_cycles):
         for i in range(d):
-            residual = y - f.sum(axis=0) + f[i]      # leave-agent-i-out residual
+            # leave-agent-i-out sum is what crosses the wire to agent i
+            residual = _loo_residual(codec, y, f.sum(axis=0), f[i])
             params[i] = family.fit(params[i], xcols[i], residual)
             f = f.at[i].set(family.predict(params[i], xcols[i]))
         record(params, f)
@@ -105,7 +119,7 @@ def averaging_scan(family, xcols: jnp.ndarray, y: jnp.ndarray,
 
 def residual_refitting_scan(family, xcols: jnp.ndarray, y: jnp.ndarray,
                             xcols_test: jnp.ndarray, y_test: jnp.ndarray,
-                            n_cycles: int, seed):
+                            n_cycles: int, seed, codec=None):
     """Traceable `residual_refitting`: ring cycles as a lax.scan, the inner
     agent pass a lax.fori_loop over stacked params (same update order and
     leave-me-out residuals as the Python-loop original)."""
@@ -117,7 +131,7 @@ def residual_refitting_scan(family, xcols: jnp.ndarray, y: jnp.ndarray,
 
     def agent_update(i, carry):
         params, f = carry
-        residual = y - f.sum(axis=0) + f[i]      # leave-agent-i-out residual
+        residual = _loo_residual(codec, y, f.sum(axis=0), f[i])
         p_new = family.fit(jax.tree.map(lambda t: t[i], params), xcols[i], residual)
         f = f.at[i].set(family.predict(p_new, xcols[i]))
         params = jax.tree.map(lambda t, u: t.at[i].set(u), params, p_new)

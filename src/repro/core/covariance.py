@@ -22,8 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gram", "residual_covariance", "subsample_size", "subsample_indices",
-           "subsampled_gram", "subsampled_covariance"]
+__all__ = ["gram", "residual_covariance", "spliced_gram", "subsample_size",
+           "subsample_indices", "subsampled_gram", "subsampled_covariance"]
 
 
 def gram(r: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
@@ -56,6 +56,17 @@ def subsample_indices(key: jax.Array, n: int, alpha: float) -> jnp.ndarray:
     return jax.random.permutation(key, n)[: subsample_size(n, alpha)]
 
 
+def spliced_gram(sub: jnp.ndarray, exact_diag: jnp.ndarray,
+                 use_kernel: bool = False) -> jnp.ndarray:
+    """The Sec 4.1 splice in one place: off-diagonals from the (possibly
+    coded) subsample rows, diagonal replaced by the exact local variances —
+    shared by `subsampled_gram`, the transport-aware objectives
+    (core.icoa._transported_a0) and core.covstate.build, so the delta_ii = 0
+    convention cannot drift between the engines."""
+    a0 = gram(sub, use_kernel=use_kernel)
+    return a0 - jnp.diag(jnp.diag(a0)) + jnp.diag(exact_diag)
+
+
 def subsampled_gram(residuals: jnp.ndarray, idx: Optional[jnp.ndarray],
                     use_kernel: bool = False) -> jnp.ndarray:
     """A0 from given subsample indices: off-diagonals estimated from the
@@ -63,10 +74,8 @@ def subsampled_gram(residuals: jnp.ndarray, idx: Optional[jnp.ndarray],
     assumption (Sec 4.1). `idx is None` means full transmission: exact A."""
     if idx is None:
         return gram(residuals, use_kernel=use_kernel)
-    sub = residuals[:, idx]
-    a0 = gram(sub, use_kernel=use_kernel)
     exact_diag = jnp.sum(residuals * residuals, axis=1) / residuals.shape[1]
-    return a0 - jnp.diag(jnp.diag(a0)) + jnp.diag(exact_diag)
+    return spliced_gram(residuals[:, idx], exact_diag, use_kernel=use_kernel)
 
 
 def subsampled_covariance(

@@ -83,9 +83,10 @@ def build(r_sub: jnp.ndarray, exact_diag: Optional[jnp.ndarray] = None,
     `exact_diag` (sum(r_i^2)/N over the FULL residuals) activates the Sec 4.1
     split: off-diagonals from the transmitted subsample, diagonal exact.
     """
-    a0 = cov.gram(r_sub, use_kernel=use_kernel)
     if exact_diag is not None:
-        a0 = a0 - jnp.diag(jnp.diag(a0)) + jnp.diag(exact_diag)
+        a0 = cov.spliced_gram(r_sub, exact_diag, use_kernel=use_kernel)
+    else:
+        a0 = cov.gram(r_sub, use_kernel=use_kernel)
     return _with_solve(r_sub, a0)
 
 

@@ -35,11 +35,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import transport as transport_lib
 from repro.core import baselines
 from repro.core import covariance as cov
 from repro.core import covstate
 from repro.core import ensemble, gradient, minimax
 from repro.core.icoa import ICOAConfig
+from repro.transport import Ledger
+from repro.transport import ledger as ledger_mod
 
 __all__ = ["make_agent_mesh", "distributed_sweep", "run_distributed",
            "run_scan_distributed", "run_averaging_distributed",
@@ -70,16 +73,26 @@ def make_agent_mesh(n_agents: int) -> Mesh:
 
 
 def _gathered_a0(f_sub_all: jnp.ndarray, y_sub: jnp.ndarray, diag_all: jnp.ndarray,
-                 alpha: float) -> jnp.ndarray:
-    """A0 from gathered (possibly subsampled) residuals + exact local diags."""
+                 alpha: float, tp=None) -> jnp.ndarray:
+    """A0 from gathered (possibly subsampled) residuals + exact local diags.
+
+    `tp` (a transport.Transport) codes every gathered payload — residual
+    rows and, under the split, the diag scalars — with straight-through
+    gradients, so the replicated objective sees what actually crossed the
+    wire.  Identity transports short-circuit (bit-for-bit legacy parity)."""
     r_sub = y_sub[None, :] - f_sub_all
+    if tp is not None:
+        r_sub = tp.relay_rows_st(r_sub)
     a0 = (r_sub @ r_sub.T) / r_sub.shape[1]
     if alpha > 1.0:
+        if tp is not None:
+            diag_all = tp.relay_scalars_st(diag_all)
         a0 = a0 - jnp.diag(jnp.diag(a0)) + jnp.diag(diag_all)
     return a0
 
 
-def _sweep_body(cfg: ICOAConfig, family, xcol, y, f_local, params_local, key):
+def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
+                key, ledger):
     """Runs INSIDE shard_map. Shapes (local): xcol (1,N,C); f_local (1,N)."""
     d = jax.lax.psum(1, "agents")
     me = jax.lax.axis_index("agents")
@@ -90,9 +103,14 @@ def _sweep_body(cfg: ICOAConfig, family, xcol, y, f_local, params_local, key):
         idx = cov.subsample_indices(ksub, n, cfg.alpha)   # same key everywhere
     else:
         idx = jnp.arange(n)
+    ledger_mod.ensure_sweep_capacity(tp, cfg.n_sweeps, idx.shape[0],
+                                     split=cfg.alpha > 1.0,
+                                     row_wise=cfg.row_broadcast, ledger=ledger)
+    ledger = ledger.charge(ledger_mod.icoa_sweep_cost(
+        tp, idx.shape[0], split=cfg.alpha > 1.0, row_wise=cfg.row_broadcast))
 
     def eta_tilde_of(f_sub_all, diag_all):
-        a0 = _gathered_a0(f_sub_all, y[idx], diag_all, cfg.alpha)
+        a0 = _gathered_a0(f_sub_all, y[idx], diag_all, cfg.alpha, tp)
         if cfg.delta > 0.0:
             a = jax.lax.stop_gradient(minimax.robust_weights(
                 a0, cfg.delta, steps=cfg.minimax_steps, lr=cfg.minimax_lr))
@@ -175,16 +193,16 @@ def _sweep_body(cfg: ICOAConfig, family, xcol, y, f_local, params_local, key):
     else:
         f_sub_all = jax.lax.all_gather(f_local[0][idx], "agents")
         diag_all = jax.lax.all_gather(jnp.mean((y - f_local[0]) ** 2), "agents")
-    a0 = _gathered_a0(f_sub_all, y[idx], diag_all, cfg.alpha)
+    a0 = _gathered_a0(f_sub_all, y[idx], diag_all, cfg.alpha, tp)
     if cfg.delta > 0.0:
         w = minimax.robust_weights(a0, cfg.delta, steps=cfg.minimax_steps, lr=cfg.minimax_lr)
     else:
         w = ensemble.optimal_weights(a0)
-    return f_local, params_local, w
+    return f_local, params_local, w, ledger
 
 
-def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
-                            params_local, key):
+def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
+                            params_local, key, ledger):
     """Runs INSIDE shard_map: the rank-2 CovState engine.
 
     Identical math to `_sweep_body` (same gradient via the cached closed form,
@@ -194,6 +212,12 @@ def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
     candidate row — one masked psum of N/alpha floats plus one variance
     scalar.  Probes are O(D^2) SMW evaluations off the carried state instead
     of O(m*D^2) Gram rebuilds + O(D^3) solves.
+
+    Transport: the gather and the candidate broadcasts pass the codec relay
+    before entering the carried CovState; the ledger charges the measured
+    payload bytes, and a byte budget gates per-agent broadcasts exactly as
+    the local engine does (core.icoa._sweep_incremental) — the gating/order
+    state is replicated D x D algebra, so every device takes the same branch.
     """
     d = jax.lax.psum(1, "agents")
     me = jax.lax.axis_index("agents")
@@ -208,22 +232,35 @@ def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
     split = cfg.alpha > 1.0          # Sec 4.1 exact-local-diagonal split
     protected = cfg.delta > 0.0
     uk = cfg.use_kernel
+    budget = tp.byte_budget
+    ledger_mod.ensure_sweep_capacity(tp, cfg.n_sweeps, m, split=split,
+                                     row_wise=True, ledger=ledger)
 
     # the engine's ONLY full gather: residual rows + local variances, once
     f_sub_all = jax.lax.all_gather(f_local[0][idx], "agents")       # (D, m)
-    r_sub0 = y[idx][None, :] - f_sub_all
+    r_sub0 = tp.relay_rows(y[idx][None, :] - f_sub_all)
     if split:
-        diag0 = jax.lax.all_gather(jnp.mean((y - f_local[0]) ** 2), "agents")
+        diag0 = tp.relay_scalars(
+            jax.lax.all_gather(jnp.mean((y - f_local[0]) ** 2), "agents"))
         cs0 = covstate.build(r_sub0, exact_diag=diag0, use_kernel=uk)
     else:
         cs0 = covstate.build(r_sub0, use_kernel=uk)
+
+    # greedy priority probes at THIS body's back-search scale — sqrt(m) in
+    # f32, vs sqrt(n) in the local engine — mirroring the pre-existing step0
+    # conventions of the two sweep bodies, so a budgeted greedy order can
+    # differ across backends when alpha > 1 (as their trajectories already do)
+    live, order, bcosts, ledger = transport_lib.budget_setup(
+        tp, cs0, ledger, m, split,
+        step0=cfg.step0 * jnp.sqrt(jnp.asarray(m, jnp.float32)))
 
     def robust_probe(cs, i, u):
         return covstate.robust_eta_probe(cs, i, u, cfg.delta,
                                          cfg.minimax_steps, cfg.minimax_lr)
 
-    def agent_update(i, carry):
-        f_local, params_local, cs = carry
+    def agent_update(slot, carry):
+        f_local, params_local, cs, led = carry
+        i = slot if order is None else order[slot]
 
         if protected:
             v = minimax.robust_weights(cs.a0, cfg.delta, steps=cfg.minimax_steps,
@@ -275,9 +312,9 @@ def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
         # broadcast the CANDIDATE row + its variance: the per-update traffic
         cand_sub = jax.lax.psum(
             jnp.where(me == i, new_f[idx], jnp.zeros_like(new_f[idx])), "agents")
-        cand_diag = jax.lax.psum(
-            jnp.where(me == i, jnp.mean((y - new_f) ** 2), 0.0), "agents")
-        r_cand = y[idx] - cand_sub
+        cand_diag = tp.relay_scalar(jax.lax.psum(
+            jnp.where(me == i, jnp.mean((y - new_f) ** 2), 0.0), "agents"), i)
+        r_cand = tp.relay_row(y[idx] - cand_sub, i)
         delta_sub = r_cand - cs.r_sub[i]
         # accept is judged with the diag held fixed (exactly as the dense body
         # scores eta_post against the OLD diag_all); the commit then moves it
@@ -287,6 +324,11 @@ def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
         obj_post = robust_probe(cs, i, u_eval) if protected \
             else covstate.eta_probe(cs, i, u_eval)
         accept = obj_post > eta0
+
+        if budget is not None:
+            can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
+                                                       budget)
+            accept = jnp.logical_and(accept, can_tx)
 
         new_p = jax.tree.map(lambda new, old: jnp.where(accept, new, old[0]),
                              new_p, params_local)
@@ -302,10 +344,10 @@ def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
             u_commit = u_eval
         cs_next = covstate.apply_row_update(cs, i, r_cand, u_commit)
         cs = jax.tree.map(lambda a, b: jnp.where(accept, a, b), cs_next, cs)
-        return f_local, params_local, cs
+        return f_local, params_local, cs, led
 
-    f_local, params_local, cs = jax.lax.fori_loop(
-        0, d, agent_update, (f_local, params_local, cs0))
+    f_local, params_local, cs, ledger = jax.lax.fori_loop(
+        0, d, agent_update, (f_local, params_local, cs0, ledger))
 
     # final weights from the carried covariance — no re-gather needed
     if protected:
@@ -313,24 +355,28 @@ def _sweep_body_incremental(cfg: ICOAConfig, family, xcol, y, f_local,
                                    lr=cfg.minimax_lr)
     else:
         w = ensemble.optimal_weights(cs.a0)
-    return f_local, params_local, w
+    return f_local, params_local, w, ledger
 
 
 def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
     """The shard_map'd sweep WITHOUT the jit wrapper: traceable from inside
     an enclosing jit/scan (the compiled Monte-Carlo batch path)."""
+    d = mesh.devices.size
+    tp = (cfg.transport or transport_lib.default_transport(d)).validate_for(d)
+    transport_lib.require_budget_engine(tp, cfg.engine)
     body_fn = (_sweep_body_incremental if cfg.engine == "incremental"
                else _sweep_body)
-    body = partial(body_fn, cfg, family)
+    body = partial(body_fn, cfg, tp, family)
     return _shmap(
         body, mesh,
-        in_specs=(P("agents"), P(), P("agents"), P("agents"), P()),
-        out_specs=(P("agents"), P("agents"), P()),
+        in_specs=(P("agents"), P(), P("agents"), P("agents"), P(), P()),
+        out_specs=(P("agents"), P("agents"), P(), P()),
     )
 
 
 def distributed_sweep(mesh: Mesh, cfg: ICOAConfig, family):
-    """Compiled shard_map sweep: (xcols, y, f, params, key) -> (f, params, w)."""
+    """Compiled shard_map sweep:
+    (xcols, y, f, params, key, ledger) -> (f, params, w, ledger)."""
     return jax.jit(_sweep_shmap(mesh, cfg, family))
 
 
@@ -348,9 +394,10 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     f = jax.vmap(family.predict)(params, xcols)
 
     sweep_fn = distributed_sweep(mesh, cfg, family)
-    hist = {"train_mse": [], "test_mse": [], "eta": []}
+    hist = {"train_mse": [], "test_mse": [], "eta": [], "bytes": [0.0]}
     key = jax.random.PRNGKey(seed + 1)
     w = jnp.ones((d,)) / d
+    ledger = Ledger.empty()
 
     def record(params, f, w):
         hist["train_mse"].append(float(jnp.mean((y - w @ f) ** 2)))
@@ -366,7 +413,9 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     eta_prev = float("inf")   # same rule as core.icoa.run: compare post-sweep etas
     for _ in range(cfg.n_sweeps):
         key, k1 = jax.random.split(key)
-        f, params, w = sweep_fn(xcols, y, f, params, k1)
+        f, params, w, led2 = sweep_fn(xcols, y, f, params, k1, ledger)
+        hist["bytes"].append(float(led2.spent - ledger.spent))
+        ledger = led2
         record(params, f, w)
         eta_now = hist["eta"][-1]
         if abs(eta_prev - eta_now) < cfg.eps:
@@ -416,18 +465,19 @@ def run_scan_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray,
     key0 = jax.random.PRNGKey(seed + 1)
 
     def step(carry, _):
-        params, f, key = carry
+        params, f, key, led = carry
         key, k1 = jax.random.split(key)
-        f, params, w = sweep_fn(xcols, y, f, params, k1)
+        f, params, w, led2 = sweep_fn(xcols, y, f, params, k1, led)
         tr, te, et = record(params, f, w)
-        return (params, f, key), (w, tr, te, et)
+        return (params, f, key, led2), (w, tr, te, et, led2.spent - led.spent)
 
-    (params, f, _), (ws, trs, tes, ets) = jax.lax.scan(
-        step, (params, f, key0), None, length=cfg.n_sweeps)
+    (params, f, _, _), (ws, trs, tes, ets, bts) = jax.lax.scan(
+        step, (params, f, key0, Ledger.empty()), None, length=cfg.n_sweeps)
     hist = {
         "train_mse": jnp.concatenate([tr0[None], trs]),
         "test_mse": jnp.concatenate([te0[None], tes]),
         "eta": jnp.concatenate([et0[None], ets]),
+        "bytes": jnp.concatenate([jnp.zeros_like(bts[:1]), bts]),
     }
     hist["converged_at"] = icoa_mod.converged_record(hist["eta"], cfg.eps)
     return params, f, ws[-1], hist
@@ -483,8 +533,10 @@ def run_averaging_scan_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
     return params, f, hist
 
 
-def _refit_cycle_shmap(mesh: Mesh, family):
-    """shard_map'd ICEA ring cycle (traceable; no jit wrapper)."""
+def _refit_cycle_shmap(mesh: Mesh, family, codec=None):
+    """shard_map'd ICEA ring cycle (traceable; no jit wrapper).  `codec`
+    (transport.Codec) codes the delivered leave-me-out sum, exactly as the
+    serial/scan variants do (baselines._loo_residual)."""
 
     def cycle(xcol, y, f_local, params_local):
         dd = jax.lax.psum(1, "agents")
@@ -493,7 +545,7 @@ def _refit_cycle_shmap(mesh: Mesh, family):
         def agent_update(i, carry):
             f_local, params_local = carry
             f_sum = jax.lax.psum(f_local[0], "agents")                # (N,)
-            residual = y - f_sum + f_local[0]                         # leave-me-out
+            residual = baselines._loo_residual(codec, y, f_sum, f_local[0])
             new_p = family.fit(jax.tree.map(lambda t: t[0], params_local),
                                xcol[0], residual)
             new_f = family.predict(new_p, xcol[0])
@@ -516,7 +568,7 @@ def run_refit_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
                           xcols_test: Optional[jnp.ndarray] = None,
                           y_test: Optional[jnp.ndarray] = None,
                           n_cycles: int = 30, mesh: Optional[Mesh] = None,
-                          seed: int = 0):
+                          seed: int = 0, codec=None):
     """Residual refitting (ICEA ring) under shard_map: one cycle = one
     round-robin pass; the updating agent needs only the ensemble SUM, so each
     update is a single psum of one (N,) vector — O(N*D) wire bytes per cycle,
@@ -527,7 +579,7 @@ def run_refit_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
     mesh = mesh or make_agent_mesh(d)
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
 
-    cycle_fn = jax.jit(_refit_cycle_shmap(mesh, family))
+    cycle_fn = jax.jit(_refit_cycle_shmap(mesh, family, codec))
 
     params = baselines.align_param_dtypes(
         family, jax.vmap(lambda k: family.init(k))(keys), xcols[0], y)
@@ -545,7 +597,7 @@ def run_refit_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
 
 def run_refit_scan_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
                                xcols_test: jnp.ndarray, y_test: jnp.ndarray,
-                               n_cycles: int, seed, mesh: Mesh):
+                               n_cycles: int, seed, mesh: Mesh, codec=None):
     """Traceable distributed residual refitting (seed may be traced): the ring
     cycles as a `lax.scan` whose body is the shard_map'd cycle — identical
     update order and leave-me-out residuals as `run_refit_distributed`, with
@@ -553,7 +605,7 @@ def run_refit_scan_distributed(family, xcols: jnp.ndarray, y: jnp.ndarray,
     history contract)."""
     d = xcols.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(jnp.asarray(seed)), d)
-    cycle_fn = _refit_cycle_shmap(mesh, family)
+    cycle_fn = _refit_cycle_shmap(mesh, family, codec)
 
     params = baselines.align_param_dtypes(
         family, jax.vmap(family.init)(keys), xcols[0], y)

@@ -38,11 +38,14 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import transport as transport_lib
 from repro.core import covariance as cov
 from repro.core import covstate
 from repro.core import ensemble
 from repro.core import gradient
 from repro.core import minimax
+from repro.transport import Ledger
+from repro.transport import ledger as ledger_mod
 
 __all__ = ["ICOAConfig", "ICOAState", "init_state", "sweep", "run", "run_scan",
            "converged_record", "ensemble_predict"]
@@ -70,6 +73,11 @@ class ICOAConfig:
                                # O(N*D^2), with identical math (§Perf C)
     engine: str = "incremental"  # "incremental" (rank-2 CovState updates) |
                                # "dense" (recompute-from-scratch parity oracle)
+    transport: Optional[transport_lib.Transport] = None  # resolved comm regime
+                               # (topology + codec + byte budget); None = the
+                               # legacy exact_f64/full/unbudgeted default.
+                               # Frozen + hashable, so it rides this static
+                               # jit argument (DESIGN.md §8)
 
 
 @dataclasses.dataclass
@@ -105,7 +113,8 @@ def init_state(family, keys: jax.Array, xcols: jnp.ndarray, y: jnp.ndarray) -> I
 
 @partial(jax.jit, static_argnames=("family", "cfg"))
 def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
-          xcols: jnp.ndarray, y: jnp.ndarray, key: jax.Array):
+          xcols: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
+          ledger: Optional[Ledger] = None):
     """One full round-robin sweep over all D agents (jit-compiled).
 
     Unprotected (delta == 0): maximise eta_tilde = 1^T A^{-1} 1 (paper Sec 3.1).
@@ -119,35 +128,81 @@ def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
 
     cfg.engine picks the covariance engine: "incremental" carries a rank-2
     updated CovState, "dense" recomputes every probe from scratch (oracle).
+
+    `cfg.transport` picks the communication regime (DESIGN.md §8): every
+    transmitted residual payload passes the codec (relayed `ecc` hops on
+    sparse topologies) before entering the shared covariance state, and the
+    traced `ledger` is charged from measured payload sizes — pass the ledger
+    returned by the previous sweep to keep a running byte total (a byte
+    budget gates row broadcasts against it).  Returns
+    (params, f, key, ledger).
     """
     d, n = f.shape
+    tp = (cfg.transport or transport_lib.default_transport(d)).validate_for(d)
+    transport_lib.require_budget_engine(tp, cfg.engine)
+    if ledger is None:
+        ledger = Ledger.empty()
+    m = cov.subsample_size(n, cfg.alpha) if cfg.alpha > 1.0 else n
+    ledger_mod.ensure_sweep_capacity(
+        tp, cfg.n_sweeps, m, split=cfg.alpha > 1.0,
+        row_wise=cfg.engine == "incremental" or cfg.row_broadcast,
+        ledger=ledger)
     idx = None
     if cfg.alpha > 1.0:
         key, sub = jax.random.split(key)
         idx = cov.subsample_indices(sub, n, cfg.alpha)
 
     if cfg.engine == "incremental":
-        params, f = _sweep_incremental(family, cfg, params, f, xcols, y, idx)
+        params, f, ledger = _sweep_incremental(
+            family, cfg, tp, params, f, xcols, y, idx, ledger)
     else:
-        params, f = _sweep_dense(family, cfg, params, f, xcols, y, idx)
-    return params, f, key
+        params, f, ledger = _sweep_dense(
+            family, cfg, tp, params, f, xcols, y, idx, ledger)
+    return params, f, key, ledger
 
 
-def _sweep_dense(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
-                 xcols: jnp.ndarray, y: jnp.ndarray, idx: Optional[jnp.ndarray]):
+def _transported_a0(tp, cfg: ICOAConfig, f: jnp.ndarray, y: jnp.ndarray,
+                    idx: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """A0 as the agents RECEIVE it: every transmitted row (and, under the
+    Sec 4.1 split, every exact-diagonal scalar) passes the codec relay with
+    straight-through gradients, so the dense objective — and its autodiff
+    gradient — sees the lossy payloads.  Identity transports short-circuit
+    to exactly `covariance.subsampled_gram`'s operations (bit-for-bit parity
+    with the pre-transport solver)."""
+    r = y[None, :] - f
+    if idx is None:
+        return cov.gram(tp.relay_rows_st(r), use_kernel=cfg.use_kernel)
+    exact_diag = tp.relay_scalars_st(jnp.sum(r * r, axis=1) / r.shape[1])
+    return cov.spliced_gram(tp.relay_rows_st(r[:, idx]), exact_diag,
+                            use_kernel=cfg.use_kernel)
+
+
+def _sweep_dense(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
+                 xcols: jnp.ndarray, y: jnp.ndarray, idx: Optional[jnp.ndarray],
+                 ledger: Ledger):
     """Recompute-from-scratch engine: every objective probe pays the full
-    O(N*D^2) Gram + O(D^3) solve.  The parity oracle for the engine below."""
+    O(N*D^2) Gram + O(D^3) solve.  The parity oracle for the engine below.
+
+    Transport semantics: the paper-faithful schedule re-transmits every row
+    before every update, so every objective evaluation sees freshly-coded
+    payloads (`_transported_a0`); the ledger charges D re-gathers per sweep
+    (one per agent update), or the row-wise 2-gather price under
+    cfg.row_broadcast — matching the analytic table exactly for exact codecs
+    on the full topology (DESIGN.md §8)."""
     d, n = f.shape
+    m = n if idx is None else idx.shape[0]
+    ledger = ledger.charge(ledger_mod.icoa_sweep_cost(
+        tp, m, split=idx is not None, row_wise=cfg.row_broadcast))
 
     if cfg.delta > 0.0:
         def obj(ff):
-            a0 = _subsampled_a0(ff, y, idx, cfg)
+            a0 = _transported_a0(tp, cfg, ff, y, idx)
             a = jax.lax.stop_gradient(
                 minimax.robust_weights(a0, cfg.delta, steps=cfg.minimax_steps, lr=cfg.minimax_lr))
             # surrogate: worst-case quadratic at the fixed robust weights
             return -(minimax.robust_objective(a, a0, cfg.delta))  # maximise -zeta
     else:
-        obj = lambda ff: _eta_tilde_sub(ff, y, idx, cfg)
+        obj = lambda ff: ensemble.eta_tilde(_transported_a0(tp, cfg, ff, y, idx))
 
     def update_agent(i, carry):
         params, f = carry
@@ -186,12 +241,12 @@ def _sweep_dense(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
         return params, f.at[i].set(f_i)
 
     params, f = jax.lax.fori_loop(0, d, update_agent, (params, f))
-    return params, f
+    return params, f, ledger
 
 
-def _sweep_incremental(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
+def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
                        xcols: jnp.ndarray, y: jnp.ndarray,
-                       idx: Optional[jnp.ndarray]):
+                       idx: Optional[jnp.ndarray], ledger: Ledger):
     """Rank-2 CovState engine: O(N*D + D^2) per objective probe.
 
     The CovState is rebuilt from f at sweep start — that full solve IS the
@@ -199,25 +254,44 @@ def _sweep_incremental(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
     a rank-2 update.  Math is identical to `_sweep_dense` (same gradient, via
     the closed form of core.gradient applied to the cached inverse action;
     same back-search; same accept/reject), so histories agree to fp accuracy.
+
+    Transport semantics: the engine's transmissions are exactly the gather at
+    sweep start and one candidate-row broadcast per agent update — each
+    passes the codec relay before entering the carried CovState (probes are
+    local SMW algebra: no traffic, no coding).  The ledger charges the
+    measured payload bytes; under a byte budget the per-agent broadcast is
+    gated (an unaffordable broadcast skips the agent's commit — nobody
+    received the row) and `greedy_eta` reorders the round-robin by the
+    cached-probe priority (transport.policy.greedy_order).
     """
     d, n = f.shape
     m = n if idx is None else idx.shape[0]
     uk = cfg.use_kernel
     protected = cfg.delta > 0.0
+    split = idx is not None
+    budget = tp.byte_budget
 
     r0 = y[None, :] - f
     if idx is None:
-        cs0 = covstate.build(r0, use_kernel=uk)
+        cs0 = covstate.build(tp.relay_rows(r0), use_kernel=uk)
     else:
-        cs0 = covstate.build(r0[:, idx], exact_diag=jnp.sum(r0 * r0, axis=1) / n,
+        cs0 = covstate.build(tp.relay_rows(r0[:, idx]),
+                             exact_diag=tp.relay_scalars(jnp.sum(r0 * r0, axis=1) / n),
                              use_kernel=uk)
+
+    # the local engine's back-search starts at step0*sqrt(n), so the greedy
+    # priority probes at that scale too (transport.policy.budget_setup)
+    live, order, bcosts, ledger = transport_lib.budget_setup(
+        tp, cs0, ledger, m, split,
+        step0=cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype)))
 
     def robust_probe(cs, i, u):
         return covstate.robust_eta_probe(cs, i, u, cfg.delta,
                                          cfg.minimax_steps, cfg.minimax_lr)
 
-    def update_agent(i, carry):
-        params, f, cs = carry
+    def update_agent(slot, carry):
+        params, f, cs, led = carry
+        i = slot if order is None else order[slot]
         r_i = y - f[i]
 
         if protected:
@@ -280,13 +354,16 @@ def _sweep_incremental(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
         f_new = family.predict(p_new, xcols[i])
 
         # accept/reject AND commit share one rank-2 row update (the projected
-        # row is an arbitrary delta, so this is the second row-Gram product)
+        # row is an arbitrary delta, so this is the second row-Gram product).
+        # The candidate row is what actually crosses the wire: it passes the
+        # codec relay before touching the shared state (identity for exact
+        # codecs), and under a byte budget its broadcast must be affordable.
         r_new = y - f_new
-        r_new_sub = r_new if idx is None else r_new[idx]
+        r_new_sub = tp.relay_row(r_new if idx is None else r_new[idx], i)
         if idx is None:
             ddiag_acc = None
         else:
-            ddiag_acc = jnp.vdot(r_new, r_new) / n - cs.a0[i, i]
+            ddiag_acc = tp.relay_scalar(jnp.vdot(r_new, r_new) / n, i) - cs.a0[i, i]
         u_acc = covstate.row_update_vector(cs, i, r_new_sub - cs.r_sub[i],
                                            ddiag=ddiag_acc, use_kernel=uk)
         if cfg.accept_reject:
@@ -296,6 +373,11 @@ def _sweep_incremental(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
         else:
             accept = jnp.bool_(True)
 
+        if budget is not None:
+            can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
+                                                       budget)
+            accept = jnp.logical_and(accept, can_tx)
+
         p_i = jax.tree.map(lambda new, old: jnp.where(accept, new, old), p_new, p_old)
         f_i = jnp.where(accept, f_new, f[i])
         params = jax.tree.map(lambda t, u_: t.at[i].set(u_), params, p_i)
@@ -303,10 +385,11 @@ def _sweep_incremental(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
 
         cs_next = covstate.apply_row_update(cs, i, r_new_sub, u_acc)
         cs = jax.tree.map(lambda a, b: jnp.where(accept, a, b), cs_next, cs)
-        return params, f, cs
+        return params, f, cs, led
 
-    params, f, _ = jax.lax.fori_loop(0, d, update_agent, (params, f, cs0))
-    return params, f
+    params, f, _, ledger = jax.lax.fori_loop(
+        0, d, update_agent, (params, f, cs0, ledger))
+    return params, f, ledger
 
 
 def _weights(f: jnp.ndarray, y: jnp.ndarray, cfg: ICOAConfig, key: jax.Array) -> jnp.ndarray:
@@ -360,7 +443,8 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     Returns (params, f, weights, hist) with hist arrays of length
     cfg.n_sweeps + 1 (record 0 = the non-cooperative init, like `run`), plus
     hist["converged_at"] — the record index where `run`'s eps rule would have
-    stopped (the static schedule cannot break early, but it can report).
+    stopped (the static schedule cannot break early, but it can report) —
+    and hist["bytes"], the measured per-sweep ledger bytes (record 0 = 0).
     """
     d = xcols.shape[0]
     seed = jnp.asarray(seed)
@@ -379,18 +463,20 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     w0, tr0, te0, et0 = record(state0.params, state0.f, key0)
 
     def step(carry, _):
-        params, f, key = carry
+        params, f, key, led = carry
         key, k1, k2 = jax.random.split(key, 3)
-        params, f, _ = sweep(family, cfg, params, f, xcols, y, k1)
+        params, f, _, led2 = sweep(family, cfg, params, f, xcols, y, k1, led)
         w, tr, te, et = record(params, f, k2)
-        return (params, f, key), (w, tr, te, et)
+        return (params, f, key, led2), (w, tr, te, et, led2.spent - led.spent)
 
-    (params, f, _), (ws, trs, tes, ets) = jax.lax.scan(
-        step, (state0.params, state0.f, key0), None, length=cfg.n_sweeps)
+    (params, f, _, _), (ws, trs, tes, ets, bts) = jax.lax.scan(
+        step, (state0.params, state0.f, key0, Ledger.empty()), None,
+        length=cfg.n_sweeps)
     hist = {
         "train_mse": jnp.concatenate([tr0[None], trs]),
         "test_mse": jnp.concatenate([te0[None], tes]),
         "eta": jnp.concatenate([et0[None], ets]),
+        "bytes": jnp.concatenate([jnp.zeros_like(bts[:1]), bts]),
     }
     hist["converged_at"] = converged_record(hist["eta"], cfg.eps)
     return params, f, ws[-1], hist
@@ -403,9 +489,10 @@ def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     d = xcols.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
     state = init_state(family, keys, xcols, y)
-    hist = {"train_mse": [], "test_mse": [], "eta": []}
+    hist = {"train_mse": [], "test_mse": [], "eta": [], "bytes": [0.0]}
     eta_prev = jnp.inf
     key = jax.random.PRNGKey(seed + 1)
+    ledger = Ledger.empty()
 
     def record(params, f, key):
         w = _weights(f, y, cfg, key)
@@ -420,7 +507,10 @@ def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     weights = record(state.params, state.f, key)
     for _ in range(cfg.n_sweeps):
         key, k1, k2 = jax.random.split(key, 3)
-        params, f, _ = sweep(family, cfg, state.params, state.f, xcols, y, k1)
+        params, f, _, led2 = sweep(family, cfg, state.params, state.f,
+                                   xcols, y, k1, ledger)
+        hist["bytes"].append(float(led2.spent - ledger.spent))
+        ledger = led2
         state = ICOAState(params=params, f=f, key=key)
         weights = record(params, f, k2)
         eta_now = hist["eta"][-1]

@@ -1,0 +1,145 @@
+"""repro.transport — communication as a first-class, measured subsystem.
+
+Four pieces (DESIGN.md §8):
+
+    topology   static communication graphs (`TOPOLOGIES`/`@register_topology`:
+               full, ring, star, random_graph) with derived hop counts,
+               eccentricities and flood transmission counts
+    codecs     lossy/lossless wire formats (`CODECS`/`@register_codec`:
+               exact_f64/f32/bf16, int8_affine, topk_sparse) — pure jittable
+               encode/decode pairs applied to every transmitted residual row
+    ledger     `Ledger`, the traced bytes counter every sweep charges from
+               measured payload sizes × relay transmission counts
+    policy     byte-budget schedules (truncate / greedy_eta)
+
+`Transport` bundles one resolved topology + codec + budget into a frozen,
+hashable object that rides inside static jit arguments
+(`core.icoa.ICOAConfig.transport`) and provides the relay primitives the
+sweeps call: a broadcast from agent i reaches the farthest agent after
+`ecc[i]` store-decode-reencode hops, so the shared covariance state holds
+the roundtrip^ecc view of each row — identity for exact codecs (bit-for-bit
+parity with the pre-transport solver on any topology), genuinely degraded
+for lossy ones.  `default_transport(d)` (exact_f64 on full, no budget) is
+what every run uses unless an `api.TransportSpec` says otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.transport.codecs import (CODECS, Codec, ExactCodec,
+                                    Int8AffineCodec, TopKSparseCodec,
+                                    build_codec, register_codec)
+from repro.transport.ledger import (Ledger, agent_broadcast_cost,
+                                    ensure_sweep_capacity, gather_cost,
+                                    icoa_sweep_cost, refit_cycle_bytes)
+from repro.transport.policy import (POLICIES, budget_setup, gate_broadcast,
+                                    greedy_order, require_budget_engine)
+from repro.transport.topology import (TOPOLOGIES, Topology, TransportError,
+                                      build_topology, register_topology)
+
+__all__ = [
+    "CODECS", "Codec", "ExactCodec", "Int8AffineCodec", "Ledger", "POLICIES",
+    "TOPOLOGIES", "Topology", "TopKSparseCodec", "Transport", "TransportError",
+    "agent_broadcast_cost", "budget_setup", "build_codec", "build_topology",
+    "default_transport", "ensure_sweep_capacity", "gate_broadcast",
+    "gather_cost", "greedy_order", "icoa_sweep_cost", "refit_cycle_bytes",
+    "register_codec", "register_topology", "require_budget_engine",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """One resolved communication regime (frozen + hashable: static-jit safe)."""
+
+    topology: Topology
+    codec: Codec
+    byte_budget: Optional[float] = None
+    policy: str = "greedy_eta"
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise TransportError(
+                f"unknown budget policy {self.policy!r}; pick one of {POLICIES}")
+        if self.byte_budget is not None and not (
+                math.isfinite(self.byte_budget) and self.byte_budget > 0):
+            raise TransportError(
+                f"byte_budget must be positive and finite (got "
+                f"{self.byte_budget}); use None for unbudgeted runs")
+
+    # ------------------------------------------------------ relay primitives
+    # ONE copy of the hop loop: every public relay_* below differs only in
+    # which roundtrip it applies (value-level vs straight-through) and how
+    # the per-source eccentricity is selected — keeping the hop semantics
+    # from diverging between the value and autodiff views.
+
+    def _relay(self, x: jnp.ndarray, ecc, rt) -> jnp.ndarray:
+        if self.codec.is_identity_for(x.dtype):
+            return x
+        for h in range(self.topology.max_ecc):      # static unroll
+            x = jnp.where(ecc > h, rt(x), x)
+        return x
+
+    def relay_rows(self, r: jnp.ndarray) -> jnp.ndarray:
+        """(D, m) -> (D, m): row i as received after ecc[i] relay hops.
+
+        Each hop decodes and re-encodes, so lossy error accumulates with
+        graph distance; the shared state keeps the most-degraded delivered
+        copy (the network edge's view — the conservative single-state
+        semantics, DESIGN.md §8).  Exact codecs short-circuit to identity.
+        """
+        return self._relay(r, jnp.asarray(self.topology.ecc)[:, None],
+                           self.codec.roundtrip)
+
+    def relay_rows_st(self, r: jnp.ndarray) -> jnp.ndarray:
+        """`relay_rows` with straight-through gradients (dense-engine obj)."""
+        return self._relay(r, jnp.asarray(self.topology.ecc)[:, None],
+                           self.codec.roundtrip_st)
+
+    def relay_row(self, row: jnp.ndarray, i) -> jnp.ndarray:
+        """One row broadcast from (possibly traced) agent index i."""
+        return self._relay(row, jnp.asarray(self.topology.ecc)[i],
+                           self.codec.roundtrip)
+
+    def relay_scalar(self, v: jnp.ndarray, i) -> jnp.ndarray:
+        """A per-row variance scalar rides the same relay as its row."""
+        if self.codec.is_identity_for(v.dtype):
+            return v
+        return self.relay_row(jnp.reshape(v, (1,)), i)[0]
+
+    def relay_scalars(self, v: jnp.ndarray) -> jnp.ndarray:
+        """(D,) per-agent scalars, each flooded from its own agent."""
+        if self.codec.is_identity_for(v.dtype):
+            return v
+        return self.relay_rows(v[:, None])[:, 0]
+
+    def relay_scalars_st(self, v: jnp.ndarray) -> jnp.ndarray:
+        """`relay_scalars` with straight-through gradients."""
+        if self.codec.is_identity_for(v.dtype):
+            return v
+        return self.relay_rows_st(v[:, None])[:, 0]
+
+    # --------------------------------------------------------------- costs
+
+    def broadcast_costs(self, m: int, split: bool) -> jnp.ndarray:
+        """(D,) per-agent flood cost — the budget gate indexes this by the
+        (possibly reordered) updating agent."""
+        return jnp.asarray([agent_broadcast_cost(self, i, m, split)
+                            for i in range(self.topology.n_agents)])
+
+    def validate_for(self, n_agents: int) -> "Transport":
+        if self.topology.n_agents != n_agents:
+            raise TransportError(
+                f"transport topology {self.topology.name!r} was built for "
+                f"{self.topology.n_agents} agents but the run has {n_agents}")
+        return self
+
+
+def default_transport(n_agents: int) -> Transport:
+    """The legacy regime: lossless f64 payloads on a complete graph."""
+    return Transport(topology=build_topology("full", n_agents),
+                     codec=build_codec("exact_f64"))

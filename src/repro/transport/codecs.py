@@ -1,0 +1,226 @@
+"""Codec registry: what a residual payload looks like on the wire.
+
+A *codec* is a pure, jittable `encode`/`decode` pair applied to every
+transmitted residual payload (rows along the last axis), plus a static byte
+model `nbytes(n_elems)` the ledger charges per payload.  The law every codec
+obeys (tested): `decode(encode(x)) ≈ x` — exactly for the `exact_*` family,
+within one quantisation step for `int8_affine`, exactly on the kept support
+for `topk_sparse`.
+
+`roundtrip` (== decode∘encode) is what the solvers actually call: the shared
+covariance state holds the *decoded* rows, so quantisation error genuinely
+perturbs the CovState/Gram updates.  `roundtrip_st` is the straight-through
+variant for the dense engine's autodiff objective (value quantised, gradient
+passed through).
+
+Codecs register under a name via `@register_codec`; registered factories take
+keyword options (e.g. `topk_sparse(k=64)`) and return a frozen, hashable
+codec instance, so a codec can ride inside a static jit argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.transport.topology import TransportError
+
+__all__ = ["Codec", "CODECS", "register_codec", "build_codec",
+           "ExactCodec", "Int8AffineCodec", "TopKSparseCodec"]
+
+_INDEX_BYTES = 4     # int32 wire index (topk_sparse)
+_SCALE_BYTES = 8     # f32 scale + f32 zero-point per row (int8_affine)
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Base codec: identity.  Subclasses override the four methods below."""
+
+    name: str
+
+    # -- wire format ------------------------------------------------------
+    def encode(self, x: jnp.ndarray):
+        """x (…, m) -> payload pytree (what crosses one link)."""
+        return x
+
+    def decode(self, payload) -> jnp.ndarray:
+        """payload -> (…, m) array in the original dtype."""
+        return payload
+
+    def nbytes(self, n_elems: int) -> float:
+        """Static wire bytes of one encoded payload of `n_elems` values."""
+        raise NotImplementedError
+
+    def is_identity_for(self, dtype) -> bool:
+        """True when roundtrip is bit-exact for values of `dtype` (lets the
+        hot paths skip the encode/decode ops entirely)."""
+        return False
+
+    # -- derived ----------------------------------------------------------
+    def roundtrip(self, x: jnp.ndarray) -> jnp.ndarray:
+        """decode(encode(x)) — the receiver's view after one hop."""
+        return self.decode(self.encode(x))
+
+    def roundtrip_st(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Straight-through roundtrip: quantised value, identity gradient
+        (the dense engine differentiates its objective through the payload;
+        rounding has zero gradient almost everywhere, which would kill the
+        ICOA descent direction)."""
+        if self.is_identity_for(x.dtype):
+            return x
+        return x + jax.lax.stop_gradient(self.roundtrip(x) - x)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactCodec(Codec):
+    """Cast to a wire dtype and back — lossless whenever the wire dtype is at
+    least as wide as the data dtype (exact_f64 is lossless for everything the
+    repo computes in; exact_f32/bf16 genuinely round f64 payloads)."""
+
+    wire_dtype: str = "float64"
+    itemsize: int = 8
+
+    def encode(self, x):
+        if self.is_identity_for(x.dtype):
+            # avoids the "f64 truncated to f32" warning when x64 is off —
+            # a wider wire dtype never changes the values anyway
+            return x
+        return x.astype(self.wire_dtype)
+
+    def decode(self, payload):
+        return payload
+
+    def roundtrip(self, x):
+        return self.encode(x).astype(x.dtype)
+
+    def nbytes(self, n_elems: int) -> float:
+        return float(n_elems * self.itemsize)
+
+    def is_identity_for(self, dtype) -> bool:
+        # identity iff the wire dtype's value set contains the data's —
+        # promote_types, not itemsize: float16 under a bfloat16 wire is the
+        # same width but NOT value-preserving.  (Without jax_enable_x64 an
+        # f64 cast silently stays f32 — still identity, still reported so.)
+        wire = jnp.dtype(self.wire_dtype)
+        return jnp.promote_types(dtype, wire) == wire
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8AffineCodec(Codec):
+    """Per-row affine quantisation to 256 levels: q = round((x - lo)/scale),
+    transmitted as one uint8 per value plus a per-row (scale, zero-point)
+    pair.  Constant rows (scale 0) pass through exactly."""
+
+    def encode(self, x):
+        lo = x.min(axis=-1, keepdims=True)
+        hi = x.max(axis=-1, keepdims=True)
+        scale = (hi - lo) / 255.0
+        safe = jnp.where(scale > 0, scale, jnp.ones_like(scale))
+        q = jnp.clip(jnp.round((x - lo) / safe), 0, 255).astype(jnp.uint8)
+        return {"q": q, "lo": lo, "scale": scale}
+
+    def decode(self, payload):
+        q, lo, scale = payload["q"], payload["lo"], payload["scale"]
+        return lo + q.astype(lo.dtype) * scale
+
+    def nbytes(self, n_elems: int) -> float:
+        return float(n_elems * 1 + _SCALE_BYTES)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSparseCodec(Codec):
+    """Keep the k largest-|x| entries per row (f32 value + int32 index each);
+    the rest decode to zero.  k is clamped to the row length, so the codec
+    composes with any compression rate alpha."""
+
+    k: int = 64
+
+    def _k(self, m: int) -> int:
+        return max(1, min(self.k, m))
+
+    def encode(self, x):
+        k = self._k(x.shape[-1])
+        vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        del vals
+        kept = jnp.take_along_axis(x, idx, axis=-1).astype(jnp.float32)
+        return {"values": kept, "indices": idx.astype(jnp.int32),
+                "length": x.shape[-1]}
+
+    def decode(self, payload):
+        vals, idx = payload["values"], payload["indices"]
+        out = jnp.zeros(vals.shape[:-1] + (payload["length"],), vals.dtype)
+        return jnp.put_along_axis(out, idx, vals, axis=-1, inplace=False)
+
+    def roundtrip(self, x):
+        return self.decode(self.encode(x)).astype(x.dtype)
+
+    def nbytes(self, n_elems: int) -> float:
+        return float(self._k(n_elems) * (4 + _INDEX_BYTES))
+
+
+# -------------------------------------------------------------- the registry
+
+
+@dataclasses.dataclass(frozen=True)
+class _CodecFactory:
+    name: str
+    fn: Callable[..., Codec]
+    options: Tuple[str, ...]
+
+
+CODECS: Dict[str, _CodecFactory] = {}
+
+
+def register_codec(name: str):
+    """Register a `(**options) -> Codec` factory; its keyword parameters
+    become the codec's recognised options (spec validation by name)."""
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters)
+        CODECS[name] = _CodecFactory(name=name, fn=fn, options=tuple(params))
+        return fn
+
+    return deco
+
+
+def build_codec(name: str, options=()) -> Codec:
+    factory = CODECS.get(name)
+    if factory is None:
+        raise TransportError(f"unknown codec {name!r}; "
+                             f"registered: {sorted(CODECS)}")
+    kw = dict(options)
+    unknown = sorted(set(kw) - set(factory.options))
+    if unknown:
+        raise TransportError(f"codec {name!r} has no option(s) {unknown}; "
+                             f"valid: {sorted(factory.options)}")
+    return factory.fn(**kw)
+
+
+@register_codec("exact_f64")
+def _exact_f64() -> Codec:
+    return ExactCodec(name="exact_f64", wire_dtype="float64", itemsize=8)
+
+
+@register_codec("exact_f32")
+def _exact_f32() -> Codec:
+    return ExactCodec(name="exact_f32", wire_dtype="float32", itemsize=4)
+
+
+@register_codec("exact_bf16")
+def _exact_bf16() -> Codec:
+    return ExactCodec(name="exact_bf16", wire_dtype="bfloat16", itemsize=2)
+
+
+@register_codec("int8_affine")
+def _int8_affine() -> Codec:
+    return Int8AffineCodec(name="int8_affine")
+
+
+@register_codec("topk_sparse")
+def _topk_sparse(k: int = 64) -> Codec:
+    if k < 1:
+        raise TransportError(f"topk_sparse needs k >= 1, got {k}")
+    return TopKSparseCodec(name="topk_sparse", k=int(k))

@@ -1,0 +1,133 @@
+"""The measured byte ledger: traffic accounted from what actually crossed
+the wire, not from an O(.) table.
+
+`Ledger` is a tiny pytree (a scalar bytes counter) threaded through
+`icoa.sweep`, `distributed._sweep_body*` and every `*_scan` variant; sweeps
+charge it from the *encoded payload* byte model (`Codec.nbytes`) times the
+*flood transmission count* of the topology (`Topology.bcast_tx`).  Because
+both factors are static, an unbudgeted sweep's cost folds to a constant —
+but under a `byte_budget` the set of agents that get to transmit is data
+dependent, and the ledger stays honestly traced.
+
+Cost model (per icoa sweep; m = transmitted instances, split = the Sec 4.1
+exact-diagonal scalars ride along when alpha > 1):
+
+    payload_i     = nbytes(m) + split * nbytes(1)        one agent's row
+    broadcast_i   = bcast_tx[i] * payload_i              flood from agent i
+    gather        = Σ_i broadcast_i                      everyone floods once
+    row-wise      = gather + Σ_i broadcast_i             (incremental engine /
+                                                          row_broadcast: one
+                                                          candidate per agent)
+    paper-dense   = D * gather                           (re-gather per update)
+
+On the `full` topology with an `exact_*` codec this reproduces the analytic
+float counts of `api.solvers.comm_floats_per_sweep` times the codec itemsize
+— the analytic formulas stay as the cross-check and CI asserts the equality.
+The residual-refitting ring charges one psum'd ensemble sum per update
+(`nbytes(n)` — the collective's delivered payload, topology-independent, the
+same convention the analytic table always used); averaging charges nothing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax.numpy as jnp
+
+__all__ = ["Ledger", "agent_broadcast_cost", "ensure_sweep_capacity",
+           "gather_cost", "icoa_sweep_cost", "refit_cycle_bytes"]
+
+Scalar = Union[int, jnp.ndarray]
+
+
+class Ledger(NamedTuple):
+    """Cumulative measured wire bytes (a pytree: jit/scan/shard_map safe).
+
+    Counts are INTEGER bytes — every payload price is a whole number, and a
+    float accumulator would silently round per-sweep charges once the total
+    passes 2^24 (a few MB of traffic), drifting the measured history off the
+    analytic cross-check.  The scalar is the default int dtype: exact to
+    2^31 bytes per run without jax_enable_x64, 2^63 with it.
+    """
+
+    spent: jnp.ndarray   # () scalar, default int dtype
+
+    @classmethod
+    def empty(cls) -> "Ledger":
+        return cls(spent=jnp.asarray(0))
+
+    @classmethod
+    def of(cls, spent) -> "Ledger":
+        return cls(spent=jnp.asarray(spent))
+
+    def charge(self, n_bytes: Scalar) -> "Ledger":
+        return Ledger(spent=self.spent + n_bytes)
+
+    def charge_if(self, cond, n_bytes: Scalar) -> "Ledger":
+        return Ledger(spent=self.spent + jnp.where(cond, n_bytes, 0))
+
+    def affords(self, n_bytes: Scalar, budget: float) -> jnp.ndarray:
+        """True when charging `n_bytes` more stays within `budget` (floored
+        to whole bytes; clamped so huge budgets cannot overflow the int
+        accumulator's dtype at trace time)."""
+        cap = min(int(budget), int(jnp.iinfo(self.spent.dtype).max))
+        return self.spent + n_bytes <= cap
+
+
+# ------------------------------------------------------- static cost helpers
+# All return plain Python ints: shapes/dtypes/graphs are spec-static, so the
+# per-transmission prices are compile-time constants (and integral — see the
+# Ledger docstring).
+
+
+def _payload(transport, m: int, split: bool) -> int:
+    return int(round(transport.codec.nbytes(m)
+                     + (transport.codec.nbytes(1) if split else 0.0)))
+
+
+def agent_broadcast_cost(transport, i: int, m: int, split: bool) -> int:
+    """Bytes to flood agent i's row (plus its diag scalar under the split)
+    to every other agent — `bcast_tx[i]` relay transmissions of one payload."""
+    return transport.topology.bcast_tx[i] * _payload(transport, m, split)
+
+
+def gather_cost(transport, m: int, split: bool) -> int:
+    """Bytes for every agent to flood its row once (the sweep-start gather)."""
+    return sum(agent_broadcast_cost(transport, i, m, split)
+               for i in range(transport.topology.n_agents))
+
+
+def icoa_sweep_cost(transport, m: int, split: bool, row_wise: bool) -> int:
+    """Full (unbudgeted) cost of one icoa sweep under the given schedule."""
+    g = gather_cost(transport, m, split)
+    if row_wise:
+        return 2 * g              # gather + one candidate broadcast per agent
+    return transport.topology.n_agents * g   # paper-dense: re-gather per update
+
+
+def refit_cycle_bytes(transport, d: int, n: int) -> float:
+    """Residual-refitting ring: one psum'd ensemble sum per agent update."""
+    return d * transport.codec.nbytes(n)
+
+
+def ensure_sweep_capacity(transport, n_sweeps: int, m: int, split: bool,
+                          row_wise: bool, ledger: Ledger) -> None:
+    """Trace-time guard against silent int wrap-around: the schedule is
+    static, so the run's worst-case spend is known before a byte moves.
+
+    Under a byte_budget the gating clamps reachable spend to the (floored)
+    budget, so budgeted runs in expensive regimes are NOT rejected just
+    because their unbudgeted schedule would overflow.  The guard assumes a
+    fresh ledger (`ledger.spent` is traced and unreadable here); a caller
+    pre-charging a ledger close to the dtype cap is on their own.
+    """
+    worst = n_sweeps * icoa_sweep_cost(transport, m, split=split,
+                                       row_wise=row_wise)
+    if transport.byte_budget is not None:
+        worst = min(worst, int(transport.byte_budget))
+    cap = int(jnp.iinfo(ledger.spent.dtype).max)
+    if worst > cap:
+        raise ValueError(
+            f"this run would measure ~{worst:.3e} wire bytes, past the "
+            f"ledger's {ledger.spent.dtype} capacity ({cap}) — enable "
+            f"jax_enable_x64 for int64 byte accounting (or set a "
+            f"byte_budget within capacity)")

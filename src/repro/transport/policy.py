@@ -1,0 +1,103 @@
+"""Budget policies: which row broadcasts to spend a byte budget on.
+
+Both policies gate transmissions inside the sweep's agent loop — an agent
+whose broadcast would overrun `TransportSpec.byte_budget` is skipped (its
+projection is not committed to the shared covariance state, because nobody
+received the row).  They differ only in the *order* agents are offered the
+remaining budget:
+
+    truncate     round-robin order 0..D-1 (the paper's schedule), first come
+                 first served — the tail of the sweep starves.
+    greedy_eta   rank agents by the predicted objective after a nominal
+                 gradient step, probed in O(D^2) off the carried CovState
+                 (`covstate.eta_probe` — no transmission, no extra solve),
+                 and offer the budget to the most promising rows first.
+
+With `byte_budget=None` both policies are inert and the schedule is exactly
+the unbudgeted round-robin sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.transport.ledger import gather_cost, icoa_sweep_cost
+
+__all__ = ["POLICIES", "budget_setup", "gate_broadcast", "greedy_order",
+           "require_budget_engine"]
+
+POLICIES = ("greedy_eta", "truncate")
+
+
+def require_budget_engine(transport, engine: str) -> None:
+    """Trace-time guard shared by the local and shard_map sweeps.  The spec
+    layer (api.ExperimentSpec.validate) raises its own SpecError twin naming
+    the solver/engine fields — keep the two conditions in lockstep."""
+    if transport.byte_budget is not None and engine != "incremental":
+        raise ValueError(
+            "byte_budget schedules gate row broadcasts off the carried "
+            "CovState; the dense engine re-transmits everything by "
+            "construction — use engine='incremental'")
+
+
+def budget_setup(transport, cs0, ledger, m: int, split: bool, step0):
+    """Sweep-start budget state, shared by both incremental sweep bodies
+    (core.icoa and core.distributed): returns (live, order, bcosts, ledger).
+
+    Unbudgeted: the whole row-wise schedule always runs, charged as one
+    constant; `order`/`bcosts` are None (round-robin, no gating).  Budgeted:
+    the gather is charged only if affordable (`live`), per-agent broadcast
+    prices are materialised, and `order` is the greedy-probe ranking (at the
+    calling engine's own back-search step0) or the round-robin identity.
+    """
+    if transport.byte_budget is None:
+        return (jnp.bool_(True), None, None,
+                ledger.charge(icoa_sweep_cost(transport, m, split=split,
+                                              row_wise=True)))
+    g = gather_cost(transport, m, split)
+    live = ledger.affords(g, transport.byte_budget)
+    ledger = ledger.charge_if(live, g)
+    bcosts = transport.broadcast_costs(m, split)
+    if transport.policy == "greedy_eta":
+        order, _ = greedy_order(cs0, step0)
+    else:
+        order = jnp.arange(transport.topology.n_agents)
+    return live, order, bcosts, ledger
+
+
+def gate_broadcast(ledger, live, bcosts, i, budget: float):
+    """Per-agent budget gate: traffic is spent whether or not the candidate
+    is accepted (the broadcast precedes the accept decision); an
+    unaffordable broadcast means nobody received the row — no commit.
+    Returns (can_tx, ledger)."""
+    can_tx = jnp.logical_and(live, ledger.affords(bcosts[i], budget))
+    return can_tx, ledger.charge_if(can_tx, bcosts[i])
+
+
+def greedy_order(cs, step0: float):
+    """Agent update order by descending predicted eta after a nominal step.
+
+    The cached closed-form gradient of agent i is g_i = (2/m) s_i (sᵀR) —
+    every agent's direction is ±(sᵀR), so the probe update vectors assemble
+    from ONE shared row product.  Each candidate is scored with
+    `covstate.eta_probe` (the same O(D²) SMW probe the back-search uses) at
+    the back-search's initial step; ties and protected (delta > 0) runs use
+    this unprotected probe as the heuristic — the priority only has to rank,
+    not to be exact.  Returns (order, scores): `order[j]` is the j-th agent
+    slot of the sweep.
+    """
+    from repro.core import covstate   # lazy: core.icoa imports repro.transport
+
+    d, m = cs.r_sub.shape
+    c = cs.s @ cs.r_sub                              # (m,) shared direction
+    cu = c / (jnp.linalg.norm(c) + 1e-30)
+    p = cs.r_sub @ cu / m                            # (D,)
+    sgn = jnp.sign(cs.s)
+
+    def score(i):
+        u = -(step0 * sgn[i]) * p
+        u = u.at[i].add(step0 * step0 / (2.0 * m))   # ||g_unit|| = 1
+        return covstate.eta_probe(cs, i, u)
+
+    scores = jax.vmap(score)(jnp.arange(d))
+    return jnp.argsort(-scores), scores

@@ -1,0 +1,194 @@
+"""Topology registry: the static communication graph agents must live on.
+
+The paper's algorithms assume every agent can broadcast to every other agent
+for free; real deployments (Côté et al., in-network regression) run on sparse
+graphs where a residual row reaches distant agents only by multi-hop relay.
+A *topology* is the static undirected graph over the D agents; the builder
+returns an adjacency matrix and `build_topology` derives everything the
+transport layer consults:
+
+    hops[i][j]   shortest-path hop count (BFS)
+    ecc[i]       eccentricity — how many relay hops agent i's broadcast
+                 traverses before the LAST agent receives it (each hop
+                 re-encodes the payload, so lossy codecs degrade with ecc)
+    bcast_tx[i]  flood transmission count — how many times the payload is
+                 put on the air to reach everyone (broadcast medium: one
+                 transmission reaches all neighbours; relays re-transmit).
+                 This is what the byte ledger charges per broadcast.
+
+Everything is computed once, host-side, and frozen into hashable tuples, so a
+`Topology` can ride inside a static jit argument (core.icoa.ICOAConfig).
+Builders register under a name via `@register_topology`, mirroring
+`data.SOURCES`; registered builders take `(n_agents, **options)` and return a
+symmetric (D, D) 0/1 adjacency (numpy), no self-loops.  Disconnected graphs
+are rejected — an unreachable agent cannot participate in the ensemble.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["Topology", "TopologyBuilder", "TOPOLOGIES", "register_topology",
+           "build_topology", "TransportError"]
+
+
+class TransportError(ValueError):
+    """A transport spec names an unknown registry entry or is inconsistent."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Frozen, hashable graph structure (tuples only — static-jit friendly)."""
+
+    name: str
+    n_agents: int
+    adjacency: Tuple[Tuple[int, ...], ...]   # symmetric 0/1, zero diagonal
+    hops: Tuple[Tuple[int, ...], ...]        # shortest-path hop counts
+    ecc: Tuple[int, ...]                     # per-agent eccentricity
+    bcast_tx: Tuple[int, ...]                # per-agent flood transmissions
+
+    @property
+    def is_complete(self) -> bool:
+        return all(e == 1 for e in self.ecc)
+
+    @property
+    def max_ecc(self) -> int:
+        return max(self.ecc)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyBuilder:
+    name: str
+    fn: Callable[..., np.ndarray]
+    options: Tuple[str, ...]
+
+
+TOPOLOGIES: Dict[str, TopologyBuilder] = {}
+
+
+def register_topology(name: str):
+    """Register an `(n_agents, **options) -> (D, D) adjacency` builder.
+
+    Keyword parameters after `n_agents` become the topology's recognised
+    options (validated by name at the spec layer, like data sources).
+    """
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters)[1:]
+        TOPOLOGIES[name] = TopologyBuilder(name=name, fn=fn,
+                                           options=tuple(params))
+        return fn
+
+    return deco
+
+
+def _bfs(adj: np.ndarray, root: int) -> Tuple[np.ndarray, int]:
+    """Hop counts from `root` plus the flood transmission count.
+
+    The flood model is a broadcast medium: the root transmits once (every
+    neighbour hears it); a node that has at least one BFS child re-transmits
+    once.  `bcast_tx` is the number of transmitting nodes — 1 on a complete
+    graph, up to D-1 on a path.  BFS parents are deterministic (lowest-index
+    neighbour in the previous layer) so the count is reproducible.
+    """
+    d = adj.shape[0]
+    hops = np.full(d, -1, dtype=np.int64)
+    hops[root] = 0
+    frontier = [root]
+    parents = np.full(d, -1, dtype=np.int64)
+    while frontier:
+        nxt = []
+        for u in sorted(frontier):
+            for v in np.flatnonzero(adj[u]):
+                if hops[v] < 0:
+                    hops[v] = hops[u] + 1
+                    parents[v] = u
+                    nxt.append(int(v))
+        frontier = nxt
+    transmitters = {root} | {int(p) for p in parents if p >= 0}
+    return hops, len(transmitters)
+
+
+def build_topology(name: str, n_agents: int, options=()) -> Topology:
+    """Resolve a registered builder and derive the frozen `Topology`."""
+    builder = TOPOLOGIES.get(name)
+    if builder is None:
+        raise TransportError(f"unknown topology {name!r}; "
+                             f"registered: {sorted(TOPOLOGIES)}")
+    if n_agents < 1:
+        raise TransportError(f"need n_agents >= 1, got {n_agents}")
+    kw = dict(options)
+    unknown = sorted(set(kw) - set(builder.options))
+    if unknown:
+        raise TransportError(
+            f"topology {name!r} has no option(s) {unknown}; "
+            f"valid: {sorted(builder.options)}")
+    adj = np.asarray(builder.fn(n_agents, **kw), dtype=np.int64)
+    if adj.shape != (n_agents, n_agents):
+        raise TransportError(
+            f"topology {name!r} returned shape {adj.shape}, "
+            f"expected ({n_agents}, {n_agents})")
+    if not np.array_equal(adj, adj.T) or np.any(np.diag(adj)):
+        raise TransportError(
+            f"topology {name!r} must be symmetric with a zero diagonal")
+    hops_rows, bcast = [], []
+    for i in range(n_agents):
+        hops, n_tx = _bfs(adj, i)
+        if np.any(hops < 0):
+            stranded = sorted(int(j) for j in np.flatnonzero(hops < 0))
+            raise TransportError(
+                f"topology {name!r} is disconnected (agents {stranded} "
+                f"unreachable from agent {i}); every agent must be able to "
+                f"relay to every other — raise p / change the seed")
+        hops_rows.append(tuple(int(h) for h in hops))
+        bcast.append(int(n_tx))
+    ecc = tuple(max(row) if n_agents > 1 else 0 for row in hops_rows)
+    # a single agent never transmits; keep ecc/bcast well-defined anyway
+    return Topology(name=name, n_agents=n_agents,
+                    adjacency=tuple(tuple(int(v) for v in r) for r in adj),
+                    hops=tuple(hops_rows), ecc=ecc, bcast_tx=tuple(bcast))
+
+
+# ------------------------------------------------------------ built-in graphs
+
+
+@register_topology("full")
+def full(n_agents: int) -> np.ndarray:
+    """Complete graph — the paper's implicit assumption (1 hop, 1 tx)."""
+    return np.ones((n_agents, n_agents), dtype=np.int64) - np.eye(n_agents, dtype=np.int64)
+
+
+@register_topology("ring")
+def ring(n_agents: int) -> np.ndarray:
+    """Cycle: each agent talks to its two neighbours."""
+    adj = np.zeros((n_agents, n_agents), dtype=np.int64)
+    if n_agents == 1:
+        return adj
+    for i in range(n_agents):
+        adj[i, (i + 1) % n_agents] = 1
+        adj[(i + 1) % n_agents, i] = 1
+    return adj
+
+
+@register_topology("star")
+def star(n_agents: int) -> np.ndarray:
+    """Hub-and-spoke: agent 0 is the fusion centre, leaves relay through it."""
+    adj = np.zeros((n_agents, n_agents), dtype=np.int64)
+    adj[0, 1:] = 1
+    adj[1:, 0] = 1
+    return adj
+
+
+@register_topology("random_graph")
+def random_graph(n_agents: int, p: float = 0.5, seed: int = 0) -> np.ndarray:
+    """Erdős–Rényi G(D, p), seeded.  May be disconnected — `build_topology`
+    rejects that loudly rather than silently isolating agents."""
+    if not 0.0 <= p <= 1.0:
+        raise TransportError(f"random_graph needs 0 <= p <= 1, got {p}")
+    rng = np.random.default_rng(int(seed))
+    upper = rng.random((n_agents, n_agents)) < p
+    adj = np.triu(upper, k=1).astype(np.int64)
+    return adj + adj.T

@@ -1,0 +1,354 @@
+"""repro.transport (PR 5): topology/codec registries, the measured byte
+ledger vs the analytic cross-check, budgeted schedules, TransportSpec
+plumbing, and checkpoint round-trips of transport-carrying Results."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro import transport as tlib
+from repro.core import icoa
+from repro.transport import ledger as ledger_mod
+
+_N = 150
+
+
+def _spec(**kw):
+    transport = kw.pop("transport", api.TransportSpec())
+    solver_kw = dict(n_sweeps=2, eps=0.0)
+    solver_kw.update(kw)
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_train=_N, n_test=_N, seed=7),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 3),)),
+        solver=api.SolverSpec(**solver_kw),
+        transport=transport)
+
+
+# ------------------------------------------------------------------ topology
+
+
+def test_topology_structure():
+    full = tlib.build_topology("full", 5)
+    assert full.ecc == (1,) * 5 and full.bcast_tx == (1,) * 5
+    ring = tlib.build_topology("ring", 5)
+    assert ring.ecc == (2,) * 5                      # farthest agent: 2 hops
+    assert ring.bcast_tx == (3,) * 5                 # root + both neighbours
+    star = tlib.build_topology("star", 5)
+    assert star.ecc == (1, 2, 2, 2, 2)               # centre reaches all in 1
+    assert star.bcast_tx == (1, 2, 2, 2, 2)          # leaves relay via centre
+    assert star.hops[1][2] == 2 and star.hops[0][3] == 1
+
+
+def test_topology_random_graph_and_disconnection():
+    g = tlib.build_topology("random_graph", 6, options=(("p", 0.7), ("seed", 1)))
+    assert g.n_agents == 6 and max(g.ecc) >= 1
+    adj = np.asarray(g.adjacency)
+    assert np.array_equal(adj, adj.T) and not np.any(np.diag(adj))
+    with pytest.raises(tlib.TransportError, match="disconnected"):
+        tlib.build_topology("random_graph", 8, options=(("p", 0.0),))
+    with pytest.raises(tlib.TransportError, match="unknown topology"):
+        tlib.build_topology("mesh2d", 4)
+
+
+def test_topology_registry_is_open():
+    @tlib.register_topology("_test_path")
+    def _path(n_agents):
+        adj = np.zeros((n_agents, n_agents), dtype=np.int64)
+        for i in range(n_agents - 1):
+            adj[i, i + 1] = adj[i + 1, i] = 1
+        return adj
+
+    try:
+        t = tlib.build_topology("_test_path", 4)
+        assert t.ecc == (3, 2, 2, 3)                 # path end-to-end
+        spec = _spec(transport=api.TransportSpec(topology="_test_path"))
+        spec.validate()                              # spec layer sees it too
+    finally:
+        del tlib.TOPOLOGIES["_test_path"]
+
+
+# -------------------------------------------------------------------- codecs
+
+
+@pytest.mark.parametrize("name,opts", [
+    ("exact_f64", ()), ("exact_f32", ()), ("exact_bf16", ()),
+    ("int8_affine", ()), ("topk_sparse", (("k", 16),)),
+])
+def test_codec_roundtrip_law(name, opts):
+    """decode(encode(x)) ≈ x: the registry-wide contract (DESIGN.md §8)."""
+    codec = tlib.build_codec(name, options=opts)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 60))
+    rt = jax.jit(codec.roundtrip)(x)                 # must stage under jit
+    assert rt.shape == x.shape and rt.dtype == x.dtype
+    if name == "exact_f64":
+        np.testing.assert_array_equal(np.asarray(rt), np.asarray(x))
+    elif name.startswith("exact"):
+        np.testing.assert_allclose(rt, x, rtol=1e-2, atol=1e-2)
+    elif name == "int8_affine":
+        # within half a quantisation step per row
+        step = (x.max(axis=1) - x.min(axis=1)) / 255.0
+        assert np.all(np.abs(np.asarray(rt - x)).max(axis=1) <= 0.51 * step)
+    else:
+        # kept support exact (f32), dropped entries zero
+        nz = np.asarray(rt) != 0.0
+        assert nz.sum(axis=1).max() <= 16
+        np.testing.assert_allclose(np.asarray(rt)[nz], np.asarray(x)[nz],
+                                   rtol=1e-6)
+
+
+def test_codec_bytes_model():
+    assert tlib.build_codec("exact_f64").nbytes(100) == 800.0
+    assert tlib.build_codec("exact_bf16").nbytes(100) == 200.0
+    assert tlib.build_codec("int8_affine").nbytes(100) == 108.0
+    topk = tlib.build_codec("topk_sparse", options=(("k", 16),))
+    assert topk.nbytes(100) == 16 * 8.0
+    assert topk.nbytes(8) == 8 * 8.0                 # k clamps to the row
+
+
+def test_codec_sparse_exact_when_support_fits():
+    codec = tlib.build_codec("topk_sparse", options=(("k", 8),))
+    x = jnp.zeros((30,)).at[jnp.array([2, 11, 29])].set(jnp.array([1.0, -2.0, 0.5]))
+    np.testing.assert_allclose(codec.roundtrip(x), x, rtol=1e-6)
+
+
+def test_codec_registry_is_open():
+    @tlib.register_codec("_test_sign")
+    def _sign() -> tlib.Codec:
+        return tlib.ExactCodec(name="_test_sign", wire_dtype="float32",
+                               itemsize=4)
+
+    try:
+        assert tlib.build_codec("_test_sign").nbytes(2) == 8.0
+        api.TransportSpec(codec="_test_sign").validate()
+    finally:
+        del tlib.CODECS["_test_sign"]
+
+
+# ------------------------------------------- measured ledger vs analytic table
+
+
+@pytest.mark.parametrize("engine,alpha,row_broadcast", [
+    ("incremental", 1.0, False), ("incremental", 10.0, False),
+    ("dense", 1.0, False), ("dense", 10.0, False), ("dense", 1.0, True),
+])
+def test_ledger_equals_analytic_on_full_exact(engine, alpha, row_broadcast):
+    """The tentpole cross-check: for exact codecs on the full topology the
+    measured per-sweep ledger equals comm_floats_per_sweep × itemsize."""
+    spec = _spec(engine=engine, alpha=alpha, row_broadcast=row_broadcast,
+                 delta=0.01 if alpha > 1 else 0.0, minimax_steps=30)
+    res = api.fit(spec)
+    analytic = 8.0 * api.comm_floats_per_sweep(spec.solver, 5, _N)
+    assert res.history.bytes_transmitted[0] == 0.0
+    for b in res.history.bytes_transmitted[1:]:
+        assert b == analytic, (b, analytic)
+
+
+def test_ledger_itemsize_follows_codec():
+    b64 = api.fit(_spec()).history.bytes_transmitted[1]
+    b16 = api.fit(_spec(transport=api.TransportSpec(codec="exact_bf16"))
+                  ).history.bytes_transmitted[1]
+    assert b16 == b64 / 4.0                          # 2 bytes vs 8 per float
+
+
+def test_ledger_counts_relay_transmissions():
+    full = api.fit(_spec()).history.bytes_transmitted[1]
+    ring = api.fit(_spec(transport=api.TransportSpec(topology="ring"))
+                   ).history.bytes_transmitted[1]
+    assert ring == 3.0 * full                        # bcast_tx = 3 on a 5-ring
+
+
+def test_exact_codec_any_topology_preserves_histories():
+    """Exact relay is identity, so without a budget a sparse topology changes
+    ONLY the ledger — trajectories match the full graph bit-for-bit."""
+    base = api.fit(_spec())
+    ring = api.fit(_spec(transport=api.TransportSpec(topology="ring")))
+    for field in ("train_mse", "test_mse", "eta"):
+        assert getattr(ring.history, field) == getattr(base.history, field)
+    assert ring.history.total_bytes > base.history.total_bytes
+
+
+def test_lossy_codec_perturbs_but_tracks():
+    base = api.fit(_spec(n_sweeps=3))
+    lossy = api.fit(_spec(n_sweeps=3,
+                          transport=api.TransportSpec(codec="int8_affine")))
+    assert lossy.history.test_mse != base.history.test_mse   # genuinely lossy
+    assert lossy.test_mse < 1.5 * base.test_mse + 1e-3       # but still works
+    assert lossy.history.total_bytes < 0.2 * base.history.total_bytes
+
+
+def test_refit_bytes_priced_by_codec():
+    spec = _spec(name="residual_refitting")
+    spec_bf16 = api.replace(spec, transport=api.TransportSpec(codec="exact_bf16"))
+    b64 = api.fit(spec).history.bytes_transmitted
+    b16 = api.fit(spec_bf16).history.bytes_transmitted
+    assert b64[0] == 5 * _N * 8.0 and b16[0] == 5 * _N * 2.0
+    assert ledger_mod.refit_cycle_bytes(
+        spec.resolved_transport(), 5, _N) == b64[0]
+
+
+def test_refit_lossy_codec_perturbs_the_ring():
+    """The delivered leave-me-out sum passes the codec, so a lossy refit
+    run pays in accuracy for its cheaper bytes — never a free win."""
+    exact = api.fit(_spec(name="residual_refitting"))
+    lossy = api.fit(_spec(name="residual_refitting",
+                          transport=api.TransportSpec(codec="int8_affine")))
+    assert lossy.history.total_bytes < exact.history.total_bytes
+    assert lossy.history.train_mse != exact.history.train_mse
+    assert np.isfinite(lossy.test_mse)
+
+
+# --------------------------------------------------------- budgeted schedules
+
+
+def test_budget_truncates_and_is_respected():
+    full_cost = api.fit(_spec(n_sweeps=4)).history.total_bytes
+    budget = 0.6 * full_cost
+    for policy in ("greedy_eta", "truncate"):
+        res = api.fit(_spec(n_sweeps=4, transport=api.TransportSpec(
+            byte_budget=budget, policy=policy)))
+        assert res.history.total_bytes <= budget, policy
+        assert res.history.total_bytes > 0.0, policy
+        # starved sweeps still record (flat tail), schedule length unchanged
+        assert len(res.history.train_mse) == 5
+
+
+def test_budget_zero_traffic_when_unaffordable():
+    res = api.fit(_spec(transport=api.TransportSpec(byte_budget=10.0)))
+    assert res.history.total_bytes == 0.0
+    # nothing transmitted => nothing commits => the init ensemble persists
+    assert res.history.train_mse[0] == pytest.approx(res.history.train_mse[-1])
+
+
+def test_budget_requires_incremental_icoa():
+    with pytest.raises(api.SpecError, match="incremental"):
+        _spec(engine="dense",
+              transport=api.TransportSpec(byte_budget=1e6)).validate()
+    with pytest.raises(api.SpecError, match="byte_budget"):
+        api.TransportSpec(byte_budget=-5.0).validate()
+    with pytest.raises(api.SpecError, match="policy"):
+        api.TransportSpec(policy="roundrobin").validate()
+
+
+def test_greedy_policy_beats_truncate_on_star():
+    """On a star the centre's broadcast is cheap (1 tx) and the leaves' cost
+    2; greedy ranks by predicted eta gain, truncate burns budget in index
+    order — with a budget that only fits some broadcasts they pick different
+    agents, and the ledger shows it."""
+    base = api.TransportSpec(topology="star")
+    cost = api.fit(_spec(n_sweeps=1, transport=base)).history.total_bytes
+    kw = dict(n_sweeps=1)
+    budget = 0.75 * cost
+    greedy = api.fit(_spec(transport=api.replace(
+        base, byte_budget=budget, policy="greedy_eta"), **kw))
+    trunc = api.fit(_spec(transport=api.replace(
+        base, byte_budget=budget, policy="truncate"), **kw))
+    assert greedy.history.total_bytes <= budget
+    assert trunc.history.total_bytes <= budget
+    # both transmit something; the schedules are genuinely different
+    assert greedy.history.total_bytes > 0 and trunc.history.total_bytes > 0
+    assert (greedy.history.test_mse != trunc.history.test_mse
+            or greedy.history.total_bytes != trunc.history.total_bytes)
+
+
+# ------------------------------------------------- compiled-path parity (bytes)
+
+
+def test_batch_fit_measured_bytes_match_serial():
+    spec = _spec()
+    rs = api.batch_fit(spec, 3)
+    for t in range(3):
+        ser = api.fit(api.trial_spec(spec, t))
+        assert rs[t].history.bytes_transmitted == ser.history.bytes_transmitted
+
+
+def test_batch_fit_lossy_bytes_and_sanity():
+    """Lossy codecs flip quantisation buckets on compile-variant fp noise, so
+    compiled-vs-serial parity is statistical, not bit-wise — but the ledger
+    (static payload prices, no budget) must agree exactly."""
+    spec = _spec(transport=api.TransportSpec(topology="ring",
+                                             codec="int8_affine"))
+    rs = api.batch_fit(spec, 2)
+    for t in range(2):
+        ser = api.fit(api.trial_spec(spec, t))
+        assert rs[t].history.bytes_transmitted == ser.history.bytes_transmitted
+        np.testing.assert_allclose(rs[t].history.test_mse,
+                                   ser.history.test_mse, rtol=0.5)
+
+
+def test_cumulative_bytes_raises_on_diverging_ledgers():
+    rs = api.batch_fit(_spec(), 2)
+    assert rs.cumulative_bytes[-1] > 0                     # agreeing: fine
+    # forge a diverged ledger (what a budget + greedy order on an
+    # asymmetric topology produces): the shared axis must refuse loudly
+    rs.results[1].history.bytes_transmitted = \
+        [b * 0.5 for b in rs.results[1].history.bytes_transmitted]
+    with pytest.raises(ValueError, match="diverge"):
+        rs.cumulative_bytes
+    with pytest.raises(ValueError, match="diverge"):
+        rs.curve("test_mse")
+
+
+# ------------------------------------------------- spec + checkpoint round-trip
+
+
+def test_transport_spec_validation_and_round_trip():
+    spec = _spec(transport=api.TransportSpec(
+        topology="random_graph", topology_options=(("p", 0.8), ("seed", 3)),
+        codec="topk_sparse", codec_options=(("k", 32),)))
+    spec.validate()
+    assert api.spec_from_dict(api.spec_to_dict(spec)) == spec
+    with pytest.raises(api.SpecError, match="no option"):
+        api.TransportSpec(topology="full",
+                          topology_options=(("p", 0.5),)).validate()
+    with pytest.raises(api.SpecError, match="unknown codec"):
+        api.TransportSpec(codec="exact_f16").validate()
+    with pytest.raises(api.SpecError, match="spec\\['transport'\\]"):
+        api.spec_from_dict({"transport": {"codex": "exact_f64"}})
+    # pre-transport saves (no section) load as the identity default
+    legacy = api.spec_to_dict(_spec())
+    del legacy["transport"]
+    assert api.spec_from_dict(legacy).transport == api.TransportSpec()
+
+
+def test_result_checkpoint_round_trips_transport_and_ledger(tmp_path):
+    spec = _spec(transport=api.TransportSpec(
+        topology="ring", codec="int8_affine"))
+    res = api.fit(spec)
+    out = api.load(res.save(str(tmp_path / "run")))
+    assert out.spec == spec
+    assert out.spec.transport.codec == "int8_affine"
+    assert out.history.bytes_transmitted == res.history.bytes_transmitted
+    np.testing.assert_allclose(np.asarray(out.weights),
+                               np.asarray(res.weights), rtol=1e-6)
+    # the restored spec re-resolves to the identical transport regime
+    assert out.spec.resolved_transport() == spec.resolved_transport()
+
+
+# ------------------------------------------------------------- sweep-level API
+
+
+def test_sweep_returns_and_threads_ledger():
+    from repro.data.friedman import make_dataset
+    from repro.data.partition import one_per_agent
+    from repro.agents import PolynomialFamily
+
+    xtr, ytr, _, _ = make_dataset(1, n_train=_N, n_test=2, seed=0)
+    xc = jnp.stack([xtr[:, g] for g in one_per_agent(5)])
+    fam = PolynomialFamily(n_cols=1, degree=3)
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    st = icoa.init_state(fam, keys, xc, ytr)
+    cfg = icoa.ICOAConfig(n_sweeps=1)
+    params, f, _, led = icoa.sweep(fam, cfg, st.params, st.f, xc, ytr,
+                                   jax.random.PRNGKey(1))
+    assert float(led.spent) == 2 * 5 * _N * 8.0
+    # a second sweep keeps the running total
+    _, _, _, led2 = icoa.sweep(fam, cfg, params, f, xc, ytr,
+                               jax.random.PRNGKey(2), led)
+    assert float(led2.spent) == 2 * float(led.spent)
+    # dense engine + budget is rejected at trace time too
+    with pytest.raises(ValueError, match="incremental"):
+        icoa.sweep(fam, icoa.ICOAConfig(engine="dense", transport=tlib.Transport(
+            topology=tlib.build_topology("full", 5),
+            codec=tlib.build_codec("exact_f64"), byte_budget=1e9)),
+            st.params, st.f, xc, ytr, jax.random.PRNGKey(1))
