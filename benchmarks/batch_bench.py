@@ -49,10 +49,20 @@ _REPS = 1 if _SMOKE else 2
 def _worker(cfg: dict) -> None:
     """Runs in the subprocess (device count fixed by XLA_FLAGS): time every
     path available at this device count, print one JSON dict to stdout."""
+    import contextlib
+
     import jax
 
     from repro import api
+    from repro.analysis import recompile
     from repro.api import runner as runner_mod
+
+    # when the parent is audited (DESIGN.md §9.3), count this worker's
+    # compiles too and report them on stdout — the parent absorbs them, so
+    # the bench_batch audit covers the forked per-device-count runs
+    audit = (recompile.count_compilations()
+             if os.environ.get("REPRO_RECOMPILE_AUDIT")
+             else contextlib.nullcontext(None))
 
     k = len(jax.devices())
     n_sweeps, n_train = cfg["n_sweeps"], cfg["n_train"]
@@ -92,19 +102,22 @@ def _worker(cfg: dict) -> None:
                 "trials_per_sec": round(n_trials / dt, 2),
                 "ms_per_batch": round(dt * 1e3, 1)}
 
-    paths = ["vmap"] if k == 1 else ["sharded"]
-    if k >= cfg["n_agents"]:
-        paths.append("scan")
-    results = [measure(p, cfg["n_trials"]) for p in paths]
-    if cfg.get("trial_scaling"):
-        # batch-size curve for the parallel paths; the scan path is
-        # sequential by construction (one trial at a time on the agent
-        # mesh), so its throughput does not scale with batch size — skip it
-        for n in cfg["trial_counts"]:
-            for p in paths:
-                if n != cfg["n_trials"] and p != "scan":
-                    results.append(measure(p, n))
+    with audit as compile_log:
+        paths = ["vmap"] if k == 1 else ["sharded"]
+        if k >= cfg["n_agents"]:
+            paths.append("scan")
+        results = [measure(p, cfg["n_trials"]) for p in paths]
+        if cfg.get("trial_scaling"):
+            # batch-size curve for the parallel paths; the scan path is
+            # sequential by construction (one trial at a time on the agent
+            # mesh), so its throughput does not scale with batch size — skip
+            for n in cfg["trial_counts"]:
+                for p in paths:
+                    if n != cfg["n_trials"] and p != "scan":
+                        results.append(measure(p, n))
     print("BENCH_JSON:" + json.dumps(results))
+    if compile_log is not None:
+        print("AUDIT_COUNTS:" + json.dumps(compile_log.counts))
 
 
 def _spawn(devices: int, trial_scaling: bool) -> list:
@@ -123,10 +136,17 @@ def _spawn(devices: int, trial_scaling: bool) -> list:
     if out.returncode != 0:
         raise RuntimeError(f"batch bench worker (devices={devices}) failed:\n"
                            + out.stderr[-2000:])
+    rows = None
     for line in out.stdout.splitlines():
         if line.startswith("BENCH_JSON:"):
-            return json.loads(line[len("BENCH_JSON:"):])
-    raise RuntimeError(f"no BENCH_JSON line from worker (devices={devices})")
+            rows = json.loads(line[len("BENCH_JSON:"):])
+        elif line.startswith("AUDIT_COUNTS:"):
+            from repro.analysis import recompile
+            recompile.absorb_counts(json.loads(line[len("AUDIT_COUNTS:"):]))
+    if rows is None:
+        raise RuntimeError(
+            f"no BENCH_JSON line from worker (devices={devices})")
+    return rows
 
 
 def run():

@@ -10,6 +10,8 @@ from __future__ import annotations
 import sys
 import traceback
 
+from repro.analysis import recompile
+
 from benchmarks import (batch_bench, comm_cost, fig1_overtraining,
                         fig3_divergence, fig5_upper_bound, kernels_bench,
                         roofline, sweep_engines, table1_algorithms,
@@ -34,6 +36,9 @@ SUITES = {
 
 
 def main() -> int:
+    # recompilation audit (DESIGN.md §9.3): active only when
+    # REPRO_RECOMPILE_AUDIT names a JSON path — the audit is written at exit
+    recompile.install_from_env("bench_batch")
     which = sys.argv[1:] or list(SUITES)
     print("name,us_per_call,derived")
     failed = 0

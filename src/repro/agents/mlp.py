@@ -33,12 +33,14 @@ class MLPFamily:
         k1, k2, k3 = jax.random.split(key, 3)
         c, h = self.n_cols, self.hidden
         return {
+            # biases pin f32 explicitly — the same dtype random.normal gives
+            # the weights, independent of the ambient x64 flag (reprolint)
             "w1": jax.random.normal(k1, (c, h)) / jnp.sqrt(c),
-            "b1": jnp.zeros((h,)),
+            "b1": jnp.zeros((h,), jnp.float32),
             "w2": jax.random.normal(k2, (h, h)) / jnp.sqrt(h),
-            "b2": jnp.zeros((h,)),
+            "b2": jnp.zeros((h,), jnp.float32),
             "w3": jax.random.normal(k3, (h, 1)) / jnp.sqrt(h),
-            "b3": jnp.zeros((1,)),
+            "b3": jnp.zeros((1,), jnp.float32),
         }
 
     def predict(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:

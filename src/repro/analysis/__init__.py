@@ -1,0 +1,33 @@
+"""repro.analysis — machine-checked enforcement of the stack's own contracts.
+
+Three rails (DESIGN.md §9):
+
+    lint       `reprolint`, the repo-specific AST pass: traced-value branch
+               detection, implicit-dtype inits, literal lax carries, mutable
+               static fields, registry signature conformance, host effects in
+               traced code (`tools/reprolint.py` is the CLI)
+    sanitize   the `jax.experimental.checkify` rail: named check sites in the
+               hot paths, off-by-default (bit-for-bit inert), switched by
+               `BackendSpec.checks` / `ICOAConfig.checks`
+    recompile  the jit-cache-miss auditor: counts real XLA compiles per
+               process and enforces `tools/recompile_budget.json` in CI
+"""
+from __future__ import annotations
+
+from repro.analysis.lint import (LintConfig, RULES, Violation, lint_file,
+                                 lint_paths, lint_source, load_config)
+from repro.analysis.recompile import (CompilationLog, check_budget,
+                                      count_compilations, install_from_env,
+                                      load_budget, write_audit)
+from repro.analysis.sanitize import (CHECK_MODES, check_finite,
+                                     check_in_bounds, check_nonzero, checked,
+                                     checks_enabled, sanitize_scope,
+                                     validate_mode)
+
+__all__ = [
+    "CHECK_MODES", "CompilationLog", "LintConfig", "RULES", "Violation",
+    "check_budget", "check_finite", "check_in_bounds", "check_nonzero",
+    "checked", "checks_enabled", "count_compilations", "install_from_env",
+    "lint_file", "lint_paths", "lint_source", "load_budget", "load_config",
+    "sanitize_scope", "validate_mode", "write_audit",
+]

@@ -1,0 +1,539 @@
+"""reprolint — the repo-specific JAX-contract lint pass (DESIGN §9.1).
+
+Generic linters cannot see the contracts this stack actually breaks on:
+Python control flow on traced values detonates at trace time three layers
+away from the branch; a bare `jnp.zeros(shape)` init meets an f64 fit output
+inside a `lax` carry and either crashes or silently downcasts (the PR 4
+refit-ring bug); a mutable field on a frozen spec dataclass turns every jit
+call into a cache miss; a registry entry with the wrong positional contract
+fails only when a spec finally exercises it.  Each rule below encodes one of
+those invariants as an AST check.
+
+Rules (each with a one-line suppression: `# reprolint: disable=<rule>`):
+
+    traced-branch        Python `if`/`while`/ternary on a traced parameter
+                         inside a jit/`lax`-combinator/Pallas context
+    implicit-dtype       jnp.zeros/ones/full/empty without an explicit dtype
+    literal-carry        bare Python int/float literals in the init/carry
+                         argument of lax.scan/fori_loop/while_loop
+    mutable-static-field frozen (hashable, static-jit) dataclasses with
+                         list/dict/set-typed fields
+    registry-signature   @register_source/_partition/_codec/_topology entries
+                         whose signature breaks the registry's contract
+    host-call-in-trace   numpy.random/print/open/time.time inside traced code
+
+Known limitation (documented, by design): traced-context detection is
+lexical.  A helper that is only ever *called* from inside a jitted function
+is not recognised as traced — the rules catch the decorated/combinator
+surfaces where the repo's actual bugs lived, without a call graph.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+import re
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["RULES", "Violation", "lint_source", "lint_file", "lint_paths",
+           "load_config", "LintConfig"]
+
+RULES: Dict[str, str] = {
+    "traced-branch": (
+        "Python if/while/ternary on a traced value inside a traced context "
+        "(jit body, lax.scan/fori_loop/while_loop/cond callee, Pallas "
+        "kernel); use jnp.where / lax.cond instead"),
+    "implicit-dtype": (
+        "jnp.zeros/ones/full/empty without an explicit dtype: the default "
+        "(weak f32) meets data-dtype arrays inside lax carries and either "
+        "crashes or silently downcasts — pass dtype= explicitly"),
+    "literal-carry": (
+        "bare Python int/float literal in a lax.scan/fori_loop/while_loop "
+        "init: the weak-typed scalar can promote against the loop body's "
+        "dtype — wrap it (e.g. jnp.asarray(0, jnp.int32))"),
+    "mutable-static-field": (
+        "list/dict/set-typed field on a frozen dataclass: frozen specs ride "
+        "static jit arguments, and an unhashable field breaks the jit cache "
+        "— use Tuple[...] instead"),
+    "registry-signature": (
+        "registered entry does not satisfy the registry's positional "
+        "contract (source: (key, n, n_attrs, noise, **opts); partition: "
+        "(n_attrs, n_agents, **opts); topology: (n_agents, **opts); codec: "
+        "(**opts)); extra parameters must have defaults"),
+    "host-call-in-trace": (
+        "host-side effect (numpy.random, print, open, time.time, ...) "
+        "inside a traced context: it runs once at trace time, not per call "
+        "— use jax.random / jax.debug.print, or hoist it out of the trace"),
+}
+
+# registry name -> number of required positional (contract) parameters
+_REGISTRY_CONTRACTS: Dict[str, Tuple[int, str]] = {
+    "register_source": (4, "(key, n, n_attrs, noise, **options)"),
+    "register_partition": (2, "(n_attrs, n_agents, **options)"),
+    "register_topology": (1, "(n_agents, **options)"),
+    "register_codec": (0, "(**options)"),
+}
+
+_ZEROS_LIKE = {"zeros": 2, "ones": 2, "empty": 2, "full": 3}  # dtype arg pos
+_HOST_CALLS = ("np.random.", "numpy.random.", "random.", "time.time",
+               "time.sleep", "print", "open", "input")
+
+_SUPPRESS_RE = re.compile(r"#\s*reprolint:\s*disable=([\w,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    """`[tool.reprolint]` in pyproject.toml: path excludes (fnmatch globs,
+    matched against the /-normalised relative path)."""
+
+    exclude: Tuple[str, ...] = ()
+
+    def is_excluded(self, path: str) -> bool:
+        norm = path.replace(os.sep, "/")
+        for pat in self.exclude:
+            p = pat.replace(os.sep, "/").rstrip("/")
+            # glob match on the whole path, or the pattern as a directory
+            # prefix / interior path segment (so "src/repro/models" excludes
+            # the tree whether the walked path is relative or absolute)
+            if fnmatch.fnmatch(norm, p) or fnmatch.fnmatch(norm, p + "/*"):
+                return True
+            if f"/{p}/" in f"/{norm}/":
+                return True
+        return False
+
+
+def load_config(pyproject_path: str) -> LintConfig:
+    """Parse [tool.reprolint] with stdlib tomllib (py3.11+) or a permissive
+    fallback scan, so the linter has zero third-party dependencies."""
+    try:
+        import tomllib
+    except ImportError:  # pragma: no cover - py3.10 fallback
+        tomllib = None  # type: ignore[assignment]
+    if not os.path.exists(pyproject_path):
+        return LintConfig()
+    if tomllib is not None:
+        with open(pyproject_path, "rb") as fh:
+            data = tomllib.load(fh)
+        section = data.get("tool", {}).get("reprolint", {})
+        return LintConfig(exclude=tuple(section.get("exclude", ())))
+    with open(pyproject_path, "r", encoding="utf-8") as fh:  # pragma: no cover
+        text = fh.read()
+    m = re.search(r"\[tool\.reprolint\].*?exclude\s*=\s*\[(.*?)\]", text,
+                  re.DOTALL)
+    if not m:  # pragma: no cover
+        return LintConfig()
+    pats = re.findall(r"[\"']([^\"']+)[\"']", m.group(1))  # pragma: no cover
+    return LintConfig(exclude=tuple(pats))  # pragma: no cover
+
+
+# --------------------------------------------------------------- AST helpers
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.lax.while_loop' for an Attribute/Name chain; '' when not one."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_expr(node: ast.AST) -> Tuple[bool, FrozenSet[str]]:
+    """Is this decorator/callee expression a jit (possibly via partial)?
+    Returns (is_jit, static_argnames)."""
+    dotted = _dotted(node)
+    if dotted in ("jax.jit", "jit", "jax.pmap", "pmap", "pjit", "jax.pjit"):
+        return True, frozenset()
+    if isinstance(node, ast.Call):
+        fn = _dotted(node.func)
+        if fn in ("jax.jit", "jit", "jax.pmap", "pmap", "pjit", "jax.pjit"):
+            return True, _static_names(node)
+        if fn in ("partial", "functools.partial") and node.args:
+            inner, names = _is_jit_expr(node.args[0])
+            if inner:
+                return True, names | _static_names(node)
+    return False, frozenset()
+
+
+def _static_names(call: ast.Call) -> FrozenSet[str]:
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    names.add(sub.value)
+    return frozenset(names)
+
+
+# argument slots holding traced callees: dotted suffix -> positions / kwargs
+_COMBINATOR_SLOTS: Dict[str, Tuple[Tuple[int, ...], Tuple[str, ...]]] = {
+    "scan": ((0,), ("f",)),
+    "fori_loop": ((2,), ("body_fun",)),
+    "while_loop": ((0, 1), ("cond_fun", "body_fun")),
+    "cond": ((1, 2), ("true_fun", "false_fun")),
+    "map": ((0,), ("f",)),
+    "pallas_call": ((0,), ("kernel",)),
+    "vmap": ((0,), ("fun",)),
+    "grad": ((0,), ("fun",)),
+    "value_and_grad": ((0,), ("fun",)),
+    "checkify": ((0,), ("f",)),
+}
+_COMBINATOR_ROOTS = ("lax", "jax", "pl", "pallas", "checkify", "plgpu")
+
+
+def _combinator_callees(call: ast.Call) -> List[ast.AST]:
+    dotted = _dotted(call.func)
+    if not dotted:
+        return []
+    leaf = dotted.rsplit(".", 1)[-1]
+    root = dotted.split(".", 1)[0]
+    if leaf not in _COMBINATOR_SLOTS:
+        return []
+    if "." in dotted and root not in _COMBINATOR_ROOTS:
+        return []
+    if "." not in dotted and leaf not in ("pallas_call",):
+        # bare `scan(...)`/`cond(...)` could be anything; require a module
+        # qualifier except for the unambiguous pallas entry point
+        return []
+    positions, kwargs = _COMBINATOR_SLOTS[leaf]
+    out: List[ast.AST] = []
+    for p in positions:
+        if p < len(call.args):
+            out.append(call.args[p])
+    for kw in call.keywords:
+        if kw.arg in kwargs:
+            out.append(kw.value)
+    return out
+
+
+@dataclasses.dataclass
+class _TracedFn:
+    node: ast.AST                     # FunctionDef | Lambda
+    static: FrozenSet[str]
+
+    @property
+    def params(self) -> FrozenSet[str]:
+        args = self.node.args if isinstance(
+            self.node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ) else None
+        if args is None:  # pragma: no cover - defensive
+            return frozenset()
+        names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        if args.kwarg:
+            names.append(args.kwarg.arg)
+        return frozenset(names) - self.static
+
+
+def _collect_traced(tree: ast.Module) -> List[_TracedFn]:
+    """Every function node the linter treats as a traced context."""
+    by_name: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name[node.name] = node
+
+    traced: Dict[int, _TracedFn] = {}
+
+    def mark(node: ast.AST, static: FrozenSet[str] = frozenset()) -> None:
+        if isinstance(node, ast.Name) and node.id in by_name:
+            node = by_name[node.id]
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            traced.setdefault(id(node), _TracedFn(node=node, static=static))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for deco in node.decorator_list:
+                is_jit, static = _is_jit_expr(deco)
+                if is_jit:
+                    mark(node, static)
+        if isinstance(node, ast.Call):
+            is_jit, static = _is_jit_expr(node)
+            if is_jit and isinstance(node, ast.Call):
+                inner = node.args[0] if node.args else None
+                if inner is not None and not _is_jit_expr(inner)[0]:
+                    mark(inner, static)
+            for callee in _combinator_callees(node):
+                mark(callee)
+    return list(traced.values())
+
+
+def _suppressed(src_lines: Sequence[str], line: int, rule: str) -> bool:
+    if 1 <= line <= len(src_lines):
+        m = _SUPPRESS_RE.search(src_lines[line - 1])
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",")}
+            return rule in rules or "all" in rules
+    return False
+
+
+# -------------------------------------------------------------------- rules
+
+
+def _is_none_test(test: ast.AST) -> bool:
+    """`x is None` / `x is not None` (and and/or/not combinations thereof)
+    are trace-safe: they branch on Python structure, not traced values."""
+    if isinstance(test, ast.Compare):
+        return all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+    if isinstance(test, ast.BoolOp):
+        return all(_is_none_test(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_none_test(test.operand)
+    if isinstance(test, ast.Call):
+        return _dotted(test.func) in ("isinstance", "hasattr", "callable")
+    return False
+
+
+def _rule_traced_branch(tree: ast.Module, traced: List[_TracedFn],
+                        out: List[Tuple[int, int, str, str]]) -> None:
+    for fn in traced:
+        params = fn.params
+        if not params:
+            continue
+        body: Iterable[ast.AST]
+        if isinstance(fn.node, ast.Lambda):
+            body = [fn.node.body]
+        else:
+            body = fn.node.body  # type: ignore[union-attr]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                test: Optional[ast.AST] = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test = node.test
+                elif isinstance(node, ast.IfExp):
+                    test = node.test
+                if test is None or _is_none_test(test):
+                    continue
+                hits = sorted({n.id for n in ast.walk(test)
+                               if isinstance(n, ast.Name) and n.id in params})
+                if hits:
+                    kind = type(node).__name__.lower()
+                    out.append((node.lineno, node.col_offset, "traced-branch",
+                                f"Python {kind!r} on traced value(s) "
+                                f"{hits} inside a traced context; use "
+                                f"jnp.where / lax.cond"))
+
+
+def _rule_implicit_dtype(tree: ast.Module,
+                         out: List[Tuple[int, int, str, str]]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if "." not in dotted:
+            continue
+        root, leaf = dotted.rsplit(".", 1)
+        if leaf not in _ZEROS_LIKE or root not in ("jnp", "jax.numpy"):
+            continue
+        dtype_pos = _ZEROS_LIKE[leaf]
+        has_dtype = (len(node.args) >= dtype_pos
+                     or any(kw.arg == "dtype" for kw in node.keywords))
+        if not has_dtype:
+            out.append((node.lineno, node.col_offset, "implicit-dtype",
+                        f"{dotted}(...) without an explicit dtype; the "
+                        f"default meets data-dtype arrays in lax carries "
+                        f"(the PR 4 refit-ring bug class) — pass dtype="))
+
+
+_INIT_SLOTS: Dict[str, Tuple[int, str]] = {
+    "scan": (1, "init"),
+    "fori_loop": (3, "init_val"),
+    "while_loop": (2, "init_val"),
+}
+
+
+def _literal_leaves(node: ast.AST) -> List[ast.Constant]:
+    """Bare numeric literals reachable through tuple/list nesting only (a
+    literal inside a call like jnp.asarray(0, ...) is explicitly typed)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)) \
+            and not isinstance(node.value, bool):
+        return [node]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[ast.Constant] = []
+        for elt in node.elts:
+            out.extend(_literal_leaves(elt))
+        return out
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return _literal_leaves(node.operand)
+    return []
+
+
+def _rule_literal_carry(tree: ast.Module,
+                        out: List[Tuple[int, int, str, str]]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        leaf = dotted.rsplit(".", 1)[-1]
+        if leaf not in _INIT_SLOTS or "lax" not in dotted:
+            continue
+        pos, kwname = _INIT_SLOTS[leaf]
+        init: Optional[ast.AST] = None
+        if pos < len(node.args):
+            init = node.args[pos]
+        else:
+            for kw in node.keywords:
+                if kw.arg == kwname:
+                    init = kw.value
+        if init is None:
+            continue
+        for lit in _literal_leaves(init):
+            out.append((lit.lineno, lit.col_offset, "literal-carry",
+                        f"bare literal {lit.value!r} in lax.{leaf} init: "
+                        f"weak-typed carries promote against the body "
+                        f"dtype — wrap with jnp.asarray(..., dtype=...)"))
+
+
+def _is_frozen_dataclass(node: ast.ClassDef) -> bool:
+    for deco in node.decorator_list:
+        if isinstance(deco, ast.Call) and _dotted(deco.func) in (
+                "dataclasses.dataclass", "dataclass"):
+            for kw in deco.keywords:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value is True:
+                    return True
+    return False
+
+
+_MUTABLE_TYPES = {"list", "dict", "set", "List", "Dict", "Set",
+                  "MutableMapping", "MutableSequence", "bytearray"}
+
+
+def _rule_mutable_static_field(tree: ast.Module,
+                               out: List[Tuple[int, int, str, str]]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef) or not _is_frozen_dataclass(node):
+            continue
+        for stmt in node.body:
+            if not isinstance(stmt, ast.AnnAssign):
+                continue
+            ann = stmt.annotation
+            head = ann.value if isinstance(ann, ast.Subscript) else ann
+            name = _dotted(head).rsplit(".", 1)[-1]
+            if name in _MUTABLE_TYPES:
+                target = stmt.target
+                fname = target.id if isinstance(target, ast.Name) else "?"
+                out.append((stmt.lineno, stmt.col_offset,
+                            "mutable-static-field",
+                            f"frozen dataclass {node.name!r} field {fname!r} "
+                            f"is {name}-typed: unhashable fields break the "
+                            f"static-jit cache — use Tuple[...]"))
+
+
+def _rule_registry_signature(tree: ast.Module,
+                             out: List[Tuple[int, int, str, str]]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for deco in node.decorator_list:
+            if not isinstance(deco, ast.Call):
+                continue
+            reg = _dotted(deco.func).rsplit(".", 1)[-1]
+            if reg not in _REGISTRY_CONTRACTS:
+                continue
+            required, contract = _REGISTRY_CONTRACTS[reg]
+            args = node.args
+            pos = args.posonlyargs + args.args
+            n_defaults = len(args.defaults)
+            n_required = len(pos) - n_defaults
+            if len(pos) < required and args.vararg is None:
+                out.append((node.lineno, node.col_offset,
+                            "registry-signature",
+                            f"@{reg} entry {node.name!r} takes {len(pos)} "
+                            f"positional parameter(s); the registry calls it "
+                            f"as {contract}"))
+            elif n_required > required:
+                extra = [a.arg for a in pos[required:len(pos) - n_defaults]]
+                out.append((node.lineno, node.col_offset,
+                            "registry-signature",
+                            f"@{reg} entry {node.name!r}: parameter(s) "
+                            f"{extra} beyond the {contract} contract must "
+                            f"have defaults (they are passed as **options "
+                            f"by name)"))
+
+
+def _rule_host_call_in_trace(tree: ast.Module, traced: List[_TracedFn],
+                             out: List[Tuple[int, int, str, str]]) -> None:
+    seen: Set[int] = set()
+    for fn in traced:
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call) or id(node) in seen:
+                continue
+            dotted = _dotted(node.func)
+            if not dotted:
+                continue
+            if any(dotted == h.rstrip(".") or dotted.startswith(h)
+                   for h in _HOST_CALLS):
+                seen.add(id(node))
+                out.append((node.lineno, node.col_offset,
+                            "host-call-in-trace",
+                            f"host call {dotted}(...) inside a traced "
+                            f"context runs ONCE at trace time; use "
+                            f"jax.random / jax.debug.print or hoist it"))
+
+
+# -------------------------------------------------------------- entry points
+
+
+def lint_source(src: str, path: str = "<string>") -> List[Violation]:
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Violation(path=path, line=e.lineno or 0, col=e.offset or 0,
+                          rule="syntax-error", message=str(e.msg))]
+    traced = _collect_traced(tree)
+    raw: List[Tuple[int, int, str, str]] = []
+    _rule_traced_branch(tree, traced, raw)
+    _rule_implicit_dtype(tree, raw)
+    _rule_literal_carry(tree, raw)
+    _rule_mutable_static_field(tree, raw)
+    _rule_registry_signature(tree, raw)
+    _rule_host_call_in_trace(tree, traced, raw)
+    lines = src.splitlines()
+    out = [Violation(path=path, line=ln, col=col, rule=rule, message=msg)
+           for ln, col, rule, msg in sorted(raw)
+           if not _suppressed(lines, ln, rule)]
+    return out
+
+
+def lint_file(path: str) -> List[Violation]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return lint_source(fh.read(), path)
+
+
+def lint_paths(paths: Sequence[str],
+               config: Optional[LintConfig] = None) -> List[Violation]:
+    """Lint files and directories (recursively, *.py), honouring excludes."""
+    config = config or LintConfig()
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames.sort()
+                for fname in sorted(filenames):
+                    if fname.endswith(".py"):
+                        files.append(os.path.join(dirpath, fname))
+        else:
+            files.append(p)
+    out: List[Violation] = []
+    for f in files:
+        if config.is_excluded(f):
+            continue
+        out.extend(lint_file(f))
+    return out

@@ -185,12 +185,18 @@ class ResultSet:
         per trial instead."""
         b = self.stack("bytes_transmitted")
         scale = max(float(np.max(np.abs(b))), 1.0)
-        if np.max(np.abs(b - b[0:1])) > 1e-9 * scale:
+        dev = np.abs(b - b[0:1])
+        if np.max(dev) > 1e-9 * scale:
+            # name the first offending (trial, record) so the error points at
+            # the divergent ledger, not at the aggregation that tripped on it
+            trial, record = np.unravel_index(int(np.argmax(dev)), dev.shape)
             raise ValueError(
-                "per-trial byte ledgers diverge (a byte_budget or per-trial "
-                "topology makes measured traffic data-dependent); there is "
-                "no single byte axis — use np.cumsum(rs.stack("
-                "'bytes_transmitted'), axis=1) for per-trial curves")
+                f"per-trial byte ledgers diverge: trial {trial} record "
+                f"{record} transmitted {b[trial, record]:g} bytes vs trial 0's "
+                f"{b[0, record]:g} (a byte_budget or per-trial topology makes "
+                f"measured traffic data-dependent); there is no single byte "
+                f"axis — use np.cumsum(rs.stack('bytes_transmitted'), axis=1) "
+                f"for per-trial curves")
         return np.cumsum(b[0])
 
     def curve(self, field: str = "test_mse") -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

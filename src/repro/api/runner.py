@@ -45,14 +45,17 @@ stopped (core.icoa.converged_record).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import checkify
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import sanitize
 from repro.core import baselines, distributed, icoa
 from repro.data import sources as data_sources
 from repro.launch.mesh import make_trial_mesh
@@ -62,7 +65,7 @@ from repro.api.solvers import _bytes_history, _mesh
 from repro.api.specs import _COMPUTE_DTYPES, ExperimentSpec, SpecError
 
 __all__ = ["build_runner", "build_distributed_runner", "batch_fit",
-           "trial_spec"]
+           "trial_spec", "clear_program_cache"]
 
 _COMPILED_SOLVERS = ("icoa", "averaging", "residual_refitting")
 
@@ -124,7 +127,8 @@ def build_runner(spec: ExperimentSpec) -> Callable[[Any], Dict[str, Any]]:
 
         if solver.name == "icoa":
             params, f, weights, hist = icoa.run_scan(
-                family, solver.icoa_config(spec.transport.resolve(d)),
+                family, solver.icoa_config(spec.transport.resolve(d),
+                                           checks=spec.backend.checks),
                 xcols, ytr, xcols_test, yte, seed)
         elif solver.name == "averaging":
             params, f, hist = baselines.averaging_scan(
@@ -171,7 +175,8 @@ def build_distributed_runner(spec: ExperimentSpec,
 
         if solver.name == "icoa":
             params, f, weights, hist = distributed.run_scan_distributed(
-                family, solver.icoa_config(spec.transport.resolve(d)),
+                family, solver.icoa_config(spec.transport.resolve(d),
+                                           checks=spec.backend.checks),
                 xcols, ytr, xcols_test, yte, seed, mesh)
         elif solver.name == "averaging":
             params, f, hist = distributed.run_averaging_scan_distributed(
@@ -207,19 +212,43 @@ def _trial_device_count(spec: ExperimentSpec, n_trials: int) -> int:
     return min(k, n_trials)   # never mesh more devices than trials
 
 
+# batch programs live in a spec-keyed memo: specs are frozen/hashable, so
+# repeated batch_fit calls on the same (spec, n_trials) reuse ONE jitted
+# program instead of retracing a fresh closure per call — the retrace class
+# the recompilation auditor (repro.analysis.recompile) budgets against
+_PROGRAM_CACHE_SIZE = 8
+
+
 def _run_batch_program(fn, spec: ExperimentSpec, trials: jnp.ndarray):
-    """jit + (optional) donation of the trial buffer, in one place.
+    """Execute a jitted batch program (discharging checkify when armed).
 
     Donation is best-effort by design: the trial-index buffer is tiny and
     integer-typed, so XLA often cannot alias it into the float outputs — the
     "donated buffers were not usable" warning is the expected no-op outcome,
     not a bug, and is silenced here.
     """
-    jfn = jax.jit(fn, donate_argnums=(0,) if spec.backend.donate else ())
     with warnings.catch_warnings():
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
-        return jfn(trials)
+        if spec.backend.checks == "raise":
+            # the scope is open while the (first-call) trace runs, so every
+            # check site in the closed-over solver stack inserts; later calls
+            # hit the jit cache, whose key includes spec.backend.checks
+            with sanitize.sanitize_scope("raise"):
+                err, out = fn(trials)
+            checkify.check_error(err)
+            return out
+        return fn(trials)
+
+
+def _local_trials(spec: ExperimentSpec, n_trials: int) -> jnp.ndarray:
+    """The local backend's trial vector, built FRESH per call: it may be
+    donated to the compiled program, so it must never come from the memo."""
+    k = _trial_device_count(spec, n_trials)
+    if k <= 1:
+        return jnp.arange(n_trials)
+    padded = -(-n_trials // k) * k
+    return jnp.minimum(jnp.arange(padded), n_trials - 1)
 
 
 def _local_batch_program(spec: ExperimentSpec, n_trials: int):
@@ -232,13 +261,31 @@ def _local_batch_program(spec: ExperimentSpec, n_trials: int):
     benchmarks/batch_bench.py so the timed program IS the production one.
     """
     run_fn = build_runner(spec)
+    if spec.backend.checks == "raise":
+        base = run_fn
+
+        def checked_trial(t):
+            # the padding clamp must keep every index a real trial — the one
+            # OOB hazard of the batch geometry, so it gets a named check site
+            t = sanitize.check_in_bounds(
+                t, n_trials, "local batch: padded trial indices (clamped tail)")
+            return base(t)
+
+        # checkify sits INSIDE the trial vmap: the solver bodies carry
+        # while-loops, and checkify cannot discharge vmap-of-while — the
+        # supported orientation is vmap-of-checkify, one Error per trial
+        # (check_error on the batched Error throws the first failure)
+        run_fn = checkify.checkify(checked_trial)
     k = _trial_device_count(spec, n_trials)
+    trials = _local_trials(spec, n_trials)
     if k <= 1:
-        return jax.vmap(run_fn), jnp.arange(n_trials)
+        return jax.vmap(run_fn), trials
     mesh = make_trial_mesh(k)
-    padded = -(-n_trials // k) * k
-    trials = jnp.minimum(jnp.arange(padded), n_trials - 1)
-    fn = distributed._shmap(lambda t: jax.vmap(run_fn)(t), mesh,
+
+    def shard(t):
+        return jax.vmap(run_fn)(t)
+
+    fn = distributed._shmap(shard, mesh,
                             in_specs=P("trials"), out_specs=P("trials"))
     return fn, trials
 
@@ -251,15 +298,47 @@ def _shard_map_batch_program(spec: ExperimentSpec, n_trials: int):
     run_fn = build_distributed_runner(spec)
 
     def loop(trials):
-        return jax.lax.scan(lambda c, t: (c, run_fn(t)), 0, trials)[1]
+        carry0 = jnp.asarray(0, jnp.int32)   # typed dummy carry (reprolint)
+        return jax.lax.scan(lambda c, t: (c, run_fn(t)), carry0, trials)[1]
 
     return loop, jnp.arange(n_trials)
 
 
+@functools.lru_cache(maxsize=_PROGRAM_CACHE_SIZE)
+def _jitted_batch_program(spec: ExperimentSpec, n_trials: int):
+    """ONE jit wrapper per (spec, n_trials), memoised on the hashable spec.
+
+    Without the memo every batch_fit call wraps a fresh closure in jax.jit —
+    a guaranteed retrace of the largest programs in the stack.  Under
+    checks="raise" the program is checkify-transformed before jit (it then
+    returns (err, out) and _run_batch_program discharges the error); the
+    knob is a spec field, so sanitized and bare programs key separately.
+    The memoised wrapper never holds the donated trial vector — callers
+    build that fresh via _local_trials / jnp.arange.
+    """
+    if spec.backend.name == "shard_map":
+        fn, _ = _shard_map_batch_program(spec, n_trials)
+        if spec.backend.checks == "raise":
+            # the trial loop is a scan (not a vmap), so checkify discharges
+            # through it from the outside
+            fn = checkify.checkify(fn)
+    else:
+        # the local program already carries checkify INSIDE its trial vmap
+        # (see _local_batch_program) and returns (err, out) itself
+        fn, _ = _local_batch_program(spec, n_trials)
+    return jax.jit(fn, donate_argnums=(0,) if spec.backend.donate else ())
+
+
+def clear_program_cache() -> None:
+    """Drop every memoised batch program (frees the compiled executables)."""
+    _jitted_batch_program.cache_clear()
+
+
 def _batch_local(spec: ExperimentSpec, n_trials: int) -> Dict[str, Any]:
     """Local backend: vmap the trial axis, sharded over the trial mesh."""
-    fn, trials = _local_batch_program(spec, n_trials)
-    out = _run_batch_program(fn, spec, trials)
+    trials = _local_trials(spec, n_trials)
+    out = _run_batch_program(_jitted_batch_program(spec, n_trials), spec,
+                             trials)
     if trials.shape[0] != n_trials:
         out = jax.tree.map(lambda a: a[:n_trials], out)
     return out
@@ -267,8 +346,8 @@ def _batch_local(spec: ExperimentSpec, n_trials: int) -> Dict[str, Any]:
 
 def _batch_shard_map(spec: ExperimentSpec, n_trials: int) -> Dict[str, Any]:
     """shard_map backend: the compiled trial loop of _shard_map_batch_program."""
-    fn, trials = _shard_map_batch_program(spec, n_trials)
-    return _run_batch_program(fn, spec, trials)
+    return _run_batch_program(_jitted_batch_program(spec, n_trials), spec,
+                              jnp.arange(n_trials))
 
 
 def batch_fit(spec: ExperimentSpec, n_trials: int, *,
@@ -314,9 +393,11 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
     # one bulk device-to-host transfer per history field, not one per scalar
     host = {k: np.asarray(out[k]) for k in ("train_mse", "test_mse", "eta")}
     conv = np.asarray(out["converged_at"]) if "converged_at" in out else None
+    def take(tree, t):
+        return jax.tree.map(lambda a: a[t], tree)
+
     results = []
     for t in range(n_trials):
-        take = lambda tree: jax.tree.map(lambda a: a[t], tree)
         history = History(
             train_mse=[float(v) for v in host["train_mse"][t]],
             test_mse=[float(v) for v in host["test_mse"][t]],
@@ -326,6 +407,6 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
             converged_at=None if conv is None else int(conv[t]))
         results.append(Result(
             spec=trial_spec(spec, t), family=family,
-            params=take(out["params"]), weights=out["weights"][t],
+            params=take(out["params"], t), weights=out["weights"][t],
             f=out["f"][t], history=history, data=None))
     return ResultSet(spec, results)

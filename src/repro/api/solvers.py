@@ -124,7 +124,8 @@ def _mesh(spec: ExperimentSpec, d: int):
 @register_solver("icoa")
 def _fit_icoa(spec: ExperimentSpec, data: Dataset, family) -> Result:
     d, n = data.xcols.shape[0], data.y.shape[0]
-    cfg = spec.solver.icoa_config(spec.transport.resolve(d))
+    cfg = spec.solver.icoa_config(spec.transport.resolve(d),
+                                  checks=spec.backend.checks)
     if spec.backend.name == "shard_map":
         params, weights, hist = distributed.run_distributed(
             family, cfg, data.xcols, data.y, data.xcols_test, data.y_test,
@@ -155,7 +156,7 @@ def _fit_averaging(spec: ExperimentSpec, data: Dataset, family) -> Result:
     if spec.backend.name == "shard_map":
         params, f = distributed.run_averaging_distributed(
             family, data.xcols, data.y, mesh=_mesh(spec, d), seed=spec.seed)
-        weights = jnp.ones((d,)) / d
+        weights = jnp.ones((d,), f.dtype) / d
         train_mse = float(jnp.mean((data.y - weights @ f) ** 2))
         test_mse = None
         if data.y_test.shape[0]:
@@ -166,7 +167,7 @@ def _fit_averaging(spec: ExperimentSpec, data: Dataset, family) -> Result:
             family, data.xcols, data.y, data.xcols_test, data.y_test,
             seed=spec.seed)
         f = jax.vmap(family.predict)(params, data.xcols)
-        weights = jnp.ones((d,)) / d
+        weights = jnp.ones((d,), f.dtype) / d
         train_mse, test_mse = out["train_mse"], out.get("test_mse")
     history = History(train_mse=[train_mse], eta=[_eta_of(f, data.y)],
                       bytes_transmitted=[0.0])
@@ -198,6 +199,6 @@ def _fit_refit(spec: ExperimentSpec, data: Dataset, family) -> Result:
                                          initial_record=False))
     # the ring ensemble is the SUM of agents: literal ones keep `weights @ f`
     # the uniform combination rule across every solver
-    weights = jnp.ones((d,))
+    weights = jnp.ones((d,), f.dtype)
     return Result(spec=spec, family=family, params=params, weights=weights,
                   f=f, history=history, data=data)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro import transport as transport_lib
 from repro.agents import FAMILIES
+from repro.analysis import sanitize
 from repro.core.icoa import ICOAConfig
 from repro.data import sources as data_sources
 from repro.data.partition import PARTITIONS, make_groups, validate_partition
@@ -228,17 +229,19 @@ class SolverSpec:
                 f"engine selects ICOA's covariance path; solver "
                 f"{self.name!r} has no per-probe covariance to cache")
 
-    def icoa_config(self, transport=None) -> ICOAConfig:
+    def icoa_config(self, transport=None, checks: str = "off") -> ICOAConfig:
         """`transport` is a resolved transport.Transport (None = the legacy
         exact_f64/full default) — `ExperimentSpec.resolved_transport()`
-        produces it from the spec's TransportSpec."""
+        produces it from the spec's TransportSpec.  `checks` is the backend's
+        sanitizer mode (BackendSpec.checks), threaded into the static cfg so
+        sanitized and bare sweeps key the jit cache separately."""
         return ICOAConfig(
             n_sweeps=self.n_sweeps, eps=self.eps, step0=self.step0,
             backtrack=self.backtrack, max_probes=self.max_probes,
             alpha=self.alpha, delta=self.delta, minimax_steps=self.minimax_steps,
             minimax_lr=self.minimax_lr, use_kernel=self.use_kernel,
             accept_reject=self.accept_reject, row_broadcast=self.row_broadcast,
-            engine=self.engine, transport=transport)
+            engine=self.engine, transport=transport, checks=checks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -327,10 +330,19 @@ class BackendSpec:
     #                                 compiled batch program (frees it for the
     #                                 output allocation; no aliasing hazard —
     #                                 batch_fit builds it fresh per call)
+    checks: str = "off"             # checkify sanitizer rail (DESIGN.md §9.2):
+    #                                 "off" = bit-for-bit inert; "raise" =
+    #                                 NaN/div-zero/OOB checks insert into the
+    #                                 compiled programs and failures raise a
+    #                                 located checkify error
 
     def validate(self) -> None:
         if self.name not in _BACKENDS:
             raise SpecError(f"unknown backend {self.name!r}; pick one of {_BACKENDS}")
+        try:
+            sanitize.validate_mode(self.checks, "BackendSpec.checks")
+        except ValueError as e:
+            raise SpecError(str(e)) from None
         if self.trial_devices is not None and self.trial_devices < 1:
             raise SpecError(
                 f"trial_devices must be >= 1 (got {self.trial_devices}); use "
@@ -394,9 +406,24 @@ def _checked_fields(cls, d: Dict[str, Any], where: str) -> Dict[str, Any]:
     return dict(d)
 
 
-def _pairs(value) -> Tuple[Tuple[str, Any], ...]:
-    # JSON turns tuple-of-pairs into list-of-lists; restore it
-    return tuple((str(k), v) for k, v in value)
+def _pairs(value, where: str) -> Tuple[Tuple[str, Any], ...]:
+    # JSON turns tuple-of-pairs into list-of-lists; restore it.  Malformed
+    # entries name their exact key path + position — a saved-spec typo should
+    # point at itself, not surface as a bare unpacking TypeError downstream
+    if isinstance(value, (str, bytes)) or not hasattr(value, "__iter__"):
+        raise SpecError(
+            f"{where} must be a sequence of [name, value] pairs "
+            f"(got {value!r})")
+    out = []
+    for pos, item in enumerate(value):
+        try:
+            k, v = item
+        except (TypeError, ValueError):
+            raise SpecError(
+                f"{where}[{pos}] is not a [name, value] pair "
+                f"(got {item!r})") from None
+        out.append((str(k), v))
+    return tuple(out)
 
 
 def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
@@ -409,14 +436,15 @@ def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
             f"'transport']")
     data = _checked_fields(DataSpec, d.get("data", {}), "spec['data']")
     for key in ("source_options", "partition_options"):
-        data[key] = _pairs(data.get(key, ()))
+        data[key] = _pairs(data.get(key, ()), f"spec['data'][{key!r}]")
     agent = _checked_fields(AgentSpec, d.get("agent", {}), "spec['agent']")
-    agent["options"] = _pairs(agent.get("options", ()))
+    agent["options"] = _pairs(agent.get("options", ()),
+                              "spec['agent']['options']")
     # "transport" is optional for pre-transport saves: they load as default
     trans = _checked_fields(TransportSpec, d.get("transport", {}),
                             "spec['transport']")
     for key in ("topology_options", "codec_options"):
-        trans[key] = _pairs(trans.get(key, ()))
+        trans[key] = _pairs(trans.get(key, ()), f"spec['transport'][{key!r}]")
     return ExperimentSpec(
         data=DataSpec(**data),
         agent=AgentSpec(**agent),

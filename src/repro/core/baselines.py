@@ -16,6 +16,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitize
 from repro.core import covariance as cov
 from repro.core import ensemble
 
@@ -32,7 +33,10 @@ def _loo_residual(codec, y: jnp.ndarray, f_sum: jnp.ndarray,
     bit-for-bit (the algebraically-equal regrouping differs by ulps)."""
     if codec is None or codec.is_identity_for(f_sum.dtype):
         return y - f_sum + f_i
-    return y - codec.roundtrip(f_sum - f_i)
+    return y - sanitize.check_finite(
+        codec.roundtrip(f_sum - f_i),
+        f"baselines leave-one-out refit: codec {codec.name!r} delivered a "
+        f"non-finite ensemble sum")
 
 
 def align_param_dtypes(family, params, xcol: jnp.ndarray, y: jnp.ndarray):
@@ -73,7 +77,8 @@ def residual_refitting(family, xcols: jnp.ndarray, y: jnp.ndarray,
     d = xcols.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
     params = [family.init(k) for k in keys]
-    f = jnp.zeros((d, xcols.shape[1]))
+    f = jnp.zeros((d, xcols.shape[1]), dtype=y.dtype)  # reprolint implicit-dtype:
+    # match the scan variant's carry dtype instead of the x64-flag default
     hist = {"train_mse": [], "test_mse": [], "eta": []}
 
     def record(params, f):

@@ -37,6 +37,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitize
 from repro.core import covariance as cov
 from repro.core.ensemble import _JITTER
 
@@ -119,6 +120,9 @@ def _smw_pieces(state: CovState, i, u: jnp.ndarray):
     k12 = 1.0 + z2[i]
     k22 = jnp.vdot(u, z2)
     det = k11 * k22 - k12 * k12
+    det = sanitize.check_nonzero(
+        det, "covstate._smw_pieces: SMW pivot determinant "
+        "(eta_probe / s_probe / apply_row_update divide by it)")
     return z1, z2, k11, k12, k22, det
 
 

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import transport as transport_lib
+from repro.analysis import sanitize
 from repro.core import baselines
 from repro.core import covariance as cov
 from repro.core import covstate
@@ -146,7 +147,8 @@ def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
 
         step0 = cfg.step0 * jnp.sqrt(jnp.asarray(idx.shape[0], jnp.float32))
         step, probes = jax.lax.while_loop(
-            cond, lambda s: (s[0] * cfg.backtrack, s[1] + 1), (step0, 0))
+            cond, lambda s: (s[0] * cfg.backtrack, s[1] + 1),
+            (step0, jnp.asarray(0, jnp.int32)))
         step = jnp.where(probes >= cfg.max_probes, 0.0, step)
 
         # scatter the gradient step back to full-length targets: only the
@@ -299,7 +301,8 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
 
         step0 = cfg.step0 * jnp.sqrt(jnp.asarray(m, jnp.float32))
         step, probes = jax.lax.while_loop(
-            cond, lambda s: (s[0] * cfg.backtrack, s[1] + 1), (step0, 0))
+            cond, lambda s: (s[0] * cfg.backtrack, s[1] + 1),
+            (step0, jnp.asarray(0, jnp.int32)))
         step = jnp.where(probes >= cfg.max_probes, 0.0, step)
 
         # scatter the step to full-length targets; projection runs everywhere,
@@ -367,11 +370,24 @@ def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
     body_fn = (_sweep_body_incremental if cfg.engine == "incremental"
                else _sweep_body)
     body = partial(body_fn, cfg, tp, family)
-    return _shmap(
+    sm = _shmap(
         body, mesh,
         in_specs=(P("agents"), P(), P("agents"), P("agents"), P(), P()),
         out_specs=(P("agents"), P("agents"), P(), P()),
     )
+
+    def sweep(xcols, y, f, params, key, ledger):
+        # the scope is open while shard_map traces the body, so the relay /
+        # covstate check sites inside it insert iff cfg.checks says so
+        # (checkify discharges through shard_map).  Every check on this
+        # backend must live INSIDE the body: in-body errors leave the shmap
+        # with a per-device axis, and checkify cannot merge them with a
+        # scalar check added out here (shape-mismatched error select)
+        with sanitize.sanitize_scope(cfg.checks):
+            f, params, w, ledger = sm(xcols, y, f, params, key, ledger)
+        return f, params, w, ledger
+
+    return sweep
 
 
 def distributed_sweep(mesh: Mesh, cfg: ICOAConfig, family):
@@ -393,10 +409,14 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     params = jax.vmap(lambda k, x: family.fit(family.init(k), x, y))(keys, xcols)
     f = jax.vmap(family.predict)(params, xcols)
 
+    sanitize.validate_mode(cfg.checks, "ICOAConfig.checks")
     sweep_fn = distributed_sweep(mesh, cfg, family)
+    if cfg.checks == "raise":
+        # functionalize the check sites and throw on the first failure
+        sweep_fn = sanitize.checked(sweep_fn)
     hist = {"train_mse": [], "test_mse": [], "eta": [], "bytes": [0.0]}
     key = jax.random.PRNGKey(seed + 1)
-    w = jnp.ones((d,)) / d
+    w = jnp.ones((d,), f.dtype) / d
     ledger = Ledger.empty()
 
     def record(params, f, w):

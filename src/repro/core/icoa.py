@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import transport as transport_lib
+from repro.analysis import sanitize
 from repro.core import covariance as cov
 from repro.core import covstate
 from repro.core import ensemble
@@ -78,6 +79,12 @@ class ICOAConfig:
                                # legacy exact_f64/full/unbudgeted default.
                                # Frozen + hashable, so it rides this static
                                # jit argument (DESIGN.md §8)
+    checks: str = "off"        # checkify sanitizer rail (DESIGN.md §9.2):
+                               # "off" = bit-for-bit inert (zero extra traced
+                               # ops); "raise" = named NaN/div-zero/OOB checks
+                               # insert at trace time and failures raise.
+                               # Part of this static cfg, so the jit cache
+                               # keys sanitized and bare programs separately
 
 
 @dataclasses.dataclass
@@ -136,7 +143,23 @@ def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
     returned by the previous sweep to keep a running byte total (a byte
     budget gates row broadcasts against it).  Returns
     (params, f, key, ledger).
+
+    `cfg.checks` switches the checkify sanitizer rail (DESIGN.md §9.2): the
+    scope below holds the trace-time flag open while THIS program traces, so
+    the check sites in covstate/transport insert iff the static cfg says so —
+    callers with checks="raise" must run under `analysis.checked` (icoa.run
+    and api.batch_fit do this) to functionalize them.
     """
+    with sanitize.sanitize_scope(cfg.checks):
+        params, f, key, ledger = _sweep_impl(family, cfg, params, f, xcols,
+                                             y, key, ledger)
+        f = sanitize.check_finite(f, "icoa.sweep: prediction matrix f")
+    return params, f, key, ledger
+
+
+def _sweep_impl(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
+                xcols: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
+                ledger: Optional[Ledger]):
     d, n = f.shape
     tp = (cfg.transport or transport_lib.default_transport(d)).validate_for(d)
     transport_lib.require_budget_engine(tp, cfg.engine)
@@ -202,7 +225,8 @@ def _sweep_dense(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
             # surrogate: worst-case quadratic at the fixed robust weights
             return -(minimax.robust_objective(a, a0, cfg.delta))  # maximise -zeta
     else:
-        obj = lambda ff: ensemble.eta_tilde(_transported_a0(tp, cfg, ff, y, idx))
+        def obj(ff):
+            return ensemble.eta_tilde(_transported_a0(tp, cfg, ff, y, idx))
 
     def update_agent(i, carry):
         params, f = carry
@@ -222,7 +246,8 @@ def _sweep_dense(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
             return step * cfg.backtrack, probes + 1
 
         step0 = cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype))  # scale-free start
-        step, probes = jax.lax.while_loop(cond, body, (step0, 0))
+        step, probes = jax.lax.while_loop(cond, body,
+                                          (step0, jnp.asarray(0, jnp.int32)))
         # if the budget ran out without improvement, take no step
         step = jnp.where(probes >= cfg.max_probes, 0.0, step)
 
@@ -345,7 +370,8 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
             return step * cfg.backtrack, probes + 1
 
         step0 = cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype))  # scale-free start
-        step, probes = jax.lax.while_loop(cond, body, (step0, 0))
+        step, probes = jax.lax.while_loop(cond, body,
+                                          (step0, jnp.asarray(0, jnp.int32)))
         step = jnp.where(probes >= cfg.max_probes, 0.0, step)
 
         f_hat = f[i] + step * g_unit
@@ -456,7 +482,9 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
         train = jnp.mean((y - ensemble.combine(w, f)) ** 2)
         pred = ensemble_predict(family, params, w, xcols_test)
         test = jnp.mean((y_test - pred) ** 2)
-        eta = 1.0 / _eta_tilde_sub(f, y, None, cfg)
+        eta = 1.0 / sanitize.check_nonzero(
+            _eta_tilde_sub(f, y, None, cfg),
+            "icoa.run_scan record: eta_tilde (eta = 1/eta_tilde)")
         return w, train, test, eta
 
     key0 = jax.random.PRNGKey(seed + 1)
@@ -486,6 +514,14 @@ def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
         xcols_test: Optional[jnp.ndarray] = None, y_test: Optional[jnp.ndarray] = None,
         seed: int = 0):
     """Full ICOA run; returns (state, weights, history dict of per-sweep errors)."""
+    sanitize.validate_mode(cfg.checks, "ICOAConfig.checks")
+    # checks="raise" functionalizes the sweep's check sites via checkify and
+    # throws on the first failed check (DESIGN.md §9.2); "off" is this exact
+    # jitted sweep, bit for bit.  checkify flattens every argument, so the
+    # static family/cfg pair is bound by partial, never traced.
+    sweep_fn = partial(sweep, family, cfg)
+    if cfg.checks == "raise":
+        sweep_fn = sanitize.checked(sweep_fn)
     d = xcols.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
     state = init_state(family, keys, xcols, y)
@@ -507,8 +543,8 @@ def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     weights = record(state.params, state.f, key)
     for _ in range(cfg.n_sweeps):
         key, k1, k2 = jax.random.split(key, 3)
-        params, f, _, led2 = sweep(family, cfg, state.params, state.f,
-                                   xcols, y, k1, ledger)
+        params, f, _, led2 = sweep_fn(state.params, state.f, xcols, y, k1,
+                                      ledger)
         hist["bytes"].append(float(led2.spent - ledger.spent))
         ledger = led2
         state = ICOAState(params=params, f=f, key=key)

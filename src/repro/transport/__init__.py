@@ -31,6 +31,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitize
 from repro.transport.codecs import (CODECS, Codec, ExactCodec,
                                     Int8AffineCodec, TopKSparseCodec,
                                     build_codec, register_codec)
@@ -82,7 +83,12 @@ class Transport:
             return x
         for h in range(self.topology.max_ecc):      # static unroll
             x = jnp.where(ecc > h, rt(x), x)
-        return x
+        # only lossy payloads reach here: a NaN/Inf delivered out of the
+        # relay poisons the shared covariance state a sweep later, far from
+        # its source — name the codec while the payload is still in hand
+        return sanitize.check_finite(
+            x, f"transport relay: codec {self.codec.name!r} delivered a "
+            f"non-finite payload over topology {self.topology.name!r}")
 
     def relay_rows(self, r: jnp.ndarray) -> jnp.ndarray:
         """(D, m) -> (D, m): row i as received after ecc[i] relay hops.

@@ -1,9 +1,16 @@
 import jax
 import pytest
 
+from repro.analysis import recompile
+
 # smoke tests and benches run on the single real CPU device; ONLY
 # launch/dryrun.py forces 512 placeholder devices (per assignment).
 jax.config.update("jax_enable_x64", False)
+
+# recompilation audit (DESIGN.md §9.3): when REPRO_RECOMPILE_AUDIT names a
+# JSON path, count every XLA compile of this pytest session and write the
+# audit at exit; tools/recompile_audit.py checks it against the budget
+recompile.install_from_env("tier1_suite")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,22 @@
+"""Fixture: every call here trips `host-call-in-trace` and nothing else."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def leaky(x):
+    print("tracing")                 # runs once at trace time, not per call
+    noise = np.random.normal()       # host RNG frozen into the trace
+    return x + noise
+
+
+def timed_body(carry, x):
+    t = time.time()                  # trace-time timestamp, not runtime
+    return carry + x, t
+
+
+def run(xs):
+    return jax.lax.scan(timed_body, jnp.asarray(0.0, xs.dtype), xs)

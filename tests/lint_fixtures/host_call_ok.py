@@ -1,0 +1,17 @@
+"""Fixture: host effects done right — none may fire `host-call-in-trace`."""
+import jax
+
+
+@jax.jit
+def stochastic(key, x):
+    noise = jax.random.normal(key, x.shape)      # traced RNG
+    jax.debug.print("mean = {m}", m=x.mean())    # runtime-staged print
+    return x + noise
+
+
+def host_setup(path):
+    """Not a traced context: host calls are exactly where they belong."""
+    with open(path, "r", encoding="utf-8") as fh:
+        text = fh.read()
+    print(len(text))
+    return text

@@ -1,0 +1,10 @@
+"""Fixture: every allocation here trips `implicit-dtype` and nothing else."""
+import jax.numpy as jnp
+
+
+def make_buffers(n):
+    z = jnp.zeros((n,))              # default weak f32
+    o = jnp.ones((n, n))             # same
+    e = jnp.empty((n,))              # same
+    f = jnp.full((n,), 3.0)          # fill value does not pin the dtype
+    return z, o, e, f

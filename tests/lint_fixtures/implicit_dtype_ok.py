@@ -1,0 +1,10 @@
+"""Fixture: explicitly-typed allocations — none may fire `implicit-dtype`."""
+import jax.numpy as jnp
+
+
+def make_buffers(n, x):
+    z = jnp.zeros((n,), jnp.float32)           # positional dtype
+    o = jnp.ones((n, n), dtype=x.dtype)        # keyword dtype, data-derived
+    f = jnp.full((n,), 3.0, dtype=jnp.float32)
+    like = jnp.zeros_like(x)                   # *_like inherits the dtype
+    return z, o, f, like

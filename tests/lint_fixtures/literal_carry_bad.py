@@ -1,0 +1,27 @@
+"""Fixture: every init here trips `literal-carry` and nothing else."""
+import jax
+
+
+def total_scan(xs):
+    def body(carry, x):
+        return carry + x, x
+
+    total, _ = jax.lax.scan(body, 0.0, xs)       # bare float init
+    return total
+
+
+def count_fori(n, v0):
+    def body(i, v):
+        return v + 1
+
+    return jax.lax.fori_loop(0, n, body, 0)      # bare int init_val
+
+
+def grow_while(x):
+    def cond(c):
+        return c[1] < 3
+
+    def body(c):
+        return c[0] * 2.0, c[1] + 1
+
+    return jax.lax.while_loop(cond, body, (x, 0))   # literal inside the tuple

@@ -1,0 +1,29 @@
+"""Fixture: explicitly-typed carries — none may fire `literal-carry`."""
+import jax
+import jax.numpy as jnp
+
+
+def total_scan(xs):
+    def body(carry, x):
+        return carry + x, x
+
+    total, _ = jax.lax.scan(body, jnp.asarray(0.0, xs.dtype), xs)
+    return total
+
+
+def count_fori(n, v0):
+    def body(i, v):
+        return v + 1
+
+    return jax.lax.fori_loop(0, n, body, jnp.asarray(0, jnp.int32))
+
+
+def grow_while(x):
+    def cond(c):
+        return c[1] < 3
+
+    def body(c):
+        return c[0] * 2.0, c[1] + 1
+
+    init = (x, jnp.asarray(0, jnp.int32))        # literal wrapped in asarray
+    return jax.lax.while_loop(cond, body, init)

@@ -1,0 +1,16 @@
+"""Fixture: every field here trips `mutable-static-field` and nothing else."""
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass(frozen=True)
+class BadSpec:
+    name: str
+    groups: List[int]                    # unhashable: breaks the static-jit cache
+    options: Dict[str, float]            # same
+    tags: set                            # bare builtin, same
+
+
+@dataclasses.dataclass(frozen=True)
+class AlsoBad:
+    history: list                        # bare builtin list

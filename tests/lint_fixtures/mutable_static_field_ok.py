@@ -1,0 +1,18 @@
+"""Fixture: hashable frozen specs — none may fire `mutable-static-field`."""
+import dataclasses
+from typing import Any, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodSpec:
+    name: str
+    groups: Tuple[int, ...]
+    options: Tuple[Tuple[str, Any], ...]       # the repo's tuple-of-pairs idiom
+    budget: Optional[float] = None
+
+
+@dataclasses.dataclass
+class MutableRecord:
+    """Not frozen, never a static jit argument: mutable fields are fine."""
+
+    history: list = dataclasses.field(default_factory=list)

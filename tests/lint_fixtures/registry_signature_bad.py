@@ -1,0 +1,38 @@
+"""Fixture: every entry here trips `registry-signature` and nothing else.
+
+The decorators are local stand-ins with the registries' names — the lint
+rule matches the decorator's dotted leaf, not the import.
+"""
+
+
+def register_source(name):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def register_topology(name):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def register_codec(name):
+    def deco(fn):
+        return fn
+    return deco
+
+
+@register_source("too_few")
+def bad_source(key, n):                  # contract needs (key, n, n_attrs, noise)
+    return None
+
+
+@register_topology("extra_required")
+def bad_topology(n_agents, fanout):      # fanout beyond the contract needs a default
+    return None
+
+
+@register_codec("positional_codec")
+def bad_codec(levels):                   # codec entries take options by keyword only
+    return None

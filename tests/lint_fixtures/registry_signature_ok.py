@@ -1,0 +1,50 @@
+"""Fixture: contract-satisfying entries — none may fire `registry-signature`."""
+
+
+def register_source(name):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def register_partition(name):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def register_topology(name):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def register_codec(name):
+    def deco(fn):
+        return fn
+    return deco
+
+
+@register_source("linear")
+def linear_source(key, n, n_attrs, noise, rho=0.5):   # extras have defaults
+    return None
+
+
+@register_source("varargs")
+def varargs_source(*args, **options):                 # vararg absorbs the contract
+    return None
+
+
+@register_partition("even")
+def even_partition(n_attrs, n_agents):
+    return None
+
+
+@register_topology("ring")
+def ring_topology(n_agents, **options):
+    return None
+
+
+@register_codec("noisy")
+def noisy_codec(sigma=1.0):
+    return None

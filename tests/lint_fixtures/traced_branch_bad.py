@@ -1,0 +1,25 @@
+"""Fixture: every construct here trips `traced-branch` and nothing else."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def relu_branch(x):
+    if x > 0:                        # Python `if` on a traced parameter
+        return x
+    return -x
+
+
+@jax.jit
+def doubling_loop(x):
+    while x < 10.0:                  # Python `while` on a traced parameter
+        x = x * 2.0
+    return x
+
+
+def scan_ternary(xs):
+    def body(carry, x):
+        y = carry + x if x > 0 else carry - x    # ternary on a traced value
+        return y, y
+
+    return jax.lax.scan(body, jnp.asarray(0.0, xs.dtype), xs)

@@ -1,0 +1,38 @@
+"""Fixture: trace-safe branching — none of these may fire `traced-branch`."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def scaled(x, mode):
+    if mode == "double":             # static argument: resolved at trace time
+        return 2.0 * x
+    return x
+
+
+@jax.jit
+def maybe_add(x, bias=None):
+    if bias is None:                 # `is None` branches on Python structure
+        return x
+    return x + bias
+
+
+@jax.jit
+def shape_dispatch(x, axes=None):
+    if not isinstance(axes, tuple):  # isinstance test is trace-safe
+        return x
+    return jnp.sum(x, axis=axes)
+
+
+@jax.jit
+def clamp(x):
+    return jnp.where(x > 0, x, 0.0)  # the traced-safe way to branch on data
+
+
+@jax.jit
+def suppressed(x):
+    if x.ndim == 2:  # reprolint: disable=traced-branch
+        return jnp.sum(x, axis=1)
+    return x

@@ -1,0 +1,130 @@
+"""reprolint: every rule fires on its fixture and stays silent on the
+trace-safe twin; suppression comments, config excludes, and the
+live-tree-is-clean acceptance bar (DESIGN.md §9.1)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import lint
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "lint_fixtures")
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# rule name -> fixture stem; every RULES entry must appear here, enforced below
+_FIXTURE_STEMS = {
+    "traced-branch": "traced_branch",
+    "implicit-dtype": "implicit_dtype",
+    "literal-carry": "literal_carry",
+    "mutable-static-field": "mutable_static_field",
+    "registry-signature": "registry_signature",
+    "host-call-in-trace": "host_call",
+}
+
+
+def test_every_rule_has_a_fixture_pair():
+    assert set(_FIXTURE_STEMS) == set(lint.RULES)
+    for stem in _FIXTURE_STEMS.values():
+        for suffix in ("bad", "ok"):
+            assert os.path.exists(os.path.join(FIXTURES, f"{stem}_{suffix}.py"))
+
+
+@pytest.mark.parametrize("rule,stem", sorted(_FIXTURE_STEMS.items()))
+def test_rule_fires_on_bad_fixture_only(rule, stem):
+    bad = lint.lint_file(os.path.join(FIXTURES, f"{stem}_bad.py"))
+    assert bad, f"{rule} did not fire on its positive fixture"
+    # the positive fixture is pure: it trips its own rule and nothing else
+    assert {v.rule for v in bad} == {rule}
+    ok = lint.lint_file(os.path.join(FIXTURES, f"{stem}_ok.py"))
+    assert ok == [], [v.format() for v in ok]
+
+
+def test_violation_format_is_clickable():
+    (v,) = lint.lint_source("import jax.numpy as jnp\nz = jnp.zeros((3,))\n",
+                            path="somefile.py")
+    assert v.format().startswith("somefile.py:2:")
+    assert "[implicit-dtype]" in v.format()
+
+
+def test_syntax_error_reported_not_raised():
+    vs = lint.lint_source("def broken(:\n", path="x.py")
+    assert len(vs) == 1 and vs[0].rule == "syntax-error"
+
+
+# ------------------------------------------------------------- suppression
+
+
+def test_suppression_comment_silences_one_rule():
+    src = "import jax.numpy as jnp\nz = jnp.zeros((3,))  # reprolint: disable=implicit-dtype\n"
+    assert lint.lint_source(src) == []
+
+
+def test_suppression_all_and_multi_rule_lists():
+    base = "import jax.numpy as jnp\nz = jnp.zeros((3,))  # reprolint: disable={}\n"
+    assert lint.lint_source(base.format("all")) == []
+    assert lint.lint_source(base.format("literal-carry, implicit-dtype")) == []
+    # a disable for a DIFFERENT rule does not silence the hit
+    assert len(lint.lint_source(base.format("traced-branch"))) == 1
+
+
+# ------------------------------------------------------------------ config
+
+
+def test_is_excluded_matches_prefixes_and_absolute_paths():
+    cfg = lint.LintConfig(exclude=("src/repro/models", "tests/lint_fixtures"))
+    assert cfg.is_excluded("src/repro/models/model.py")
+    assert cfg.is_excluded("/abs/repo/src/repro/models/deep/layer.py")
+    assert cfg.is_excluded("tests/lint_fixtures/traced_branch_bad.py")
+    assert not cfg.is_excluded("src/repro/core/icoa.py")
+    assert not cfg.is_excluded("src/repro/models_extra/thing.py")
+
+
+def test_load_config_reads_pyproject():
+    cfg = lint.load_config(os.path.join(REPO, "pyproject.toml"))
+    assert "tests/lint_fixtures" in cfg.exclude
+    assert any("models" in p for p in cfg.exclude)
+
+
+def test_load_config_missing_file_is_empty():
+    cfg = lint.load_config(os.path.join(REPO, "no_such_pyproject.toml"))
+    assert cfg == lint.LintConfig()
+
+
+def test_lint_paths_skips_excluded_fixture_dir():
+    cfg = lint.load_config(os.path.join(REPO, "pyproject.toml"))
+    vs = lint.lint_paths([FIXTURES], config=cfg)
+    assert vs == []          # everything under the fixture dir is excluded
+    # without the config the same walk reports every planted violation
+    assert lint.lint_paths([FIXTURES]) != []
+
+
+# --------------------------------------------------- the acceptance bar
+
+
+def test_live_tree_is_clean():
+    """`reprolint src/repro tests benchmarks tools` exits clean — the whole
+    point of the pass; a new violation anywhere in the live tree fails CI
+    and this test identically."""
+    cfg = lint.load_config(os.path.join(REPO, "pyproject.toml"))
+    paths = [os.path.join(REPO, p)
+             for p in ("src/repro", "tests", "benchmarks", "tools")]
+    vs = lint.lint_paths(paths, config=cfg)
+    assert vs == [], "\n".join(v.format() for v in vs)
+
+
+def test_cli_exit_codes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    tool = os.path.join(REPO, "tools", "reprolint.py")
+    clean = subprocess.run(
+        [sys.executable, tool, os.path.join(REPO, "src", "repro", "analysis")],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    assert "clean" in clean.stdout
+    dirty = subprocess.run(
+        [sys.executable, tool, "--no-config",
+         os.path.join(FIXTURES, "implicit_dtype_bad.py")],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert dirty.returncode == 1
+    assert "[implicit-dtype]" in dirty.stdout

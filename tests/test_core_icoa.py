@@ -126,7 +126,7 @@ def test_linear_agents_cannot_beat_linear_regression(friedman1_small):
     fam = LinearFamily(n_cols=1)
     _, _, hist = icoa.run(fam, icoa.ICOAConfig(n_sweeps=6), xc, y)
     x_full = jnp.concatenate([xc[i] for i in range(xc.shape[0])], axis=1)
-    x1 = jnp.concatenate([x_full, jnp.ones((x_full.shape[0], 1))], axis=1)
+    x1 = jnp.concatenate([x_full, jnp.ones((x_full.shape[0], 1), x_full.dtype)], axis=1)
     beta, *_ = jnp.linalg.lstsq(x1, y)
     ls_mse = float(jnp.mean((y - x1 @ beta) ** 2))
     assert hist["train_mse"][-1] >= ls_mse - 1e-5

@@ -51,7 +51,7 @@ def test_robust_weights_feasible_and_no_worse_than_uniform(seed, d, delta):
     a0 = _rand_cov(seed, d)
     w = minimax.robust_weights(a0, delta, steps=200)
     assert abs(float(jnp.sum(w)) - 1.0) < 1e-3
-    uni = jnp.ones((d,)) / d
+    uni = jnp.ones((d,), a0.dtype) / d
     assert (float(minimax.robust_objective(w, a0, delta))
             <= float(minimax.robust_objective(uni, a0, delta)) + 1e-5)
 

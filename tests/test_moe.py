@@ -44,8 +44,8 @@ def test_aux_loss_finite_and_scales_with_imbalance(setup):
     assert jnp.isfinite(aux) and float(aux) >= 0.0
     # force total imbalance: bias router to expert 0
     biased = dict(params, router=params["router"] * 0.0 + jnp.eye(cfg.d_model, cfg.n_experts) * 0
-                  + jnp.concatenate([jnp.ones((cfg.d_model, 1)) * 5.0,
-                                     jnp.zeros((cfg.d_model, cfg.n_experts - 1))], axis=1))
+                  + jnp.concatenate([jnp.ones((cfg.d_model, 1), jnp.float32) * 5.0,
+                                     jnp.zeros((cfg.d_model, cfg.n_experts - 1), jnp.float32)], axis=1))
     _, aux_bad = moe_apply(biased, x, cfg)
     assert float(aux_bad) > float(aux)
 

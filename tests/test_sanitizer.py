@@ -1,0 +1,292 @@
+"""The checkify sanitizer rail (DESIGN.md §9.2): off-mode is inert, raise-mode
+turns the repo's silent-corruption bugs (NaN through a lossy codec, a singular
+SMW pivot) into *located* runtime errors — plus the error-message regressions
+for spec round-trip key paths and the divergent-ledger diagnostic."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import checkify
+
+from repro import api
+from repro import transport as transport_lib
+from repro.agents import LinearFamily
+from repro.analysis import sanitize
+from repro.api.result import History, Result, ResultSet
+from repro.api.specs import SpecError, spec_from_dict
+from repro.core import covstate, icoa
+from repro.transport import codecs
+
+
+def _data(d=3, n=48, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, d))
+    y = x @ jnp.arange(1.0, d + 1.0) + 0.1 * jax.random.normal(ky, (n,))
+    xcols = jnp.stack([x[:, [i]] for i in range(d)])
+    return xcols, y
+
+
+@dataclasses.dataclass(frozen=True)
+class _NaNCodec(codecs.Codec):
+    """A lossy codec whose decode poisons every delivered payload — the
+    bug class the relay's check_finite site exists to catch."""
+
+    def decode(self, payload):
+        return payload * jnp.nan
+
+    def nbytes(self, n_elems: int) -> float:
+        return float(8 * n_elems)
+
+    def is_identity_for(self, dtype) -> bool:
+        return False                       # force the relay (and the check)
+
+
+def _nan_transport(d):
+    return transport_lib.Transport(
+        topology=transport_lib.build_topology("full", d),
+        codec=_NaNCodec(name="nan_injector"))
+
+
+# ------------------------------------------------------- trace-time gating
+
+
+def test_check_helpers_are_identity_when_off():
+    x = jnp.ones((3,), jnp.float32)
+    idx = jnp.arange(3)
+    assert not sanitize.checks_enabled()
+    assert sanitize.check_finite(x, "t") is x          # zero inserted ops
+    assert sanitize.check_nonzero(x, "t") is x
+    assert sanitize.check_in_bounds(idx, 3, "t") is idx
+    with sanitize.sanitize_scope("off"):
+        assert sanitize.check_finite(x, "t") is x
+
+
+def test_sanitize_scope_nests_innermost_wins():
+    assert not sanitize.checks_enabled()
+    with sanitize.sanitize_scope("raise"):
+        assert sanitize.checks_enabled()
+        with sanitize.sanitize_scope("off"):           # icoa.sweep re-asserts
+            assert not sanitize.checks_enabled()
+        assert sanitize.checks_enabled()
+    assert not sanitize.checks_enabled()
+
+
+def test_validate_mode_rejects_unknown():
+    with pytest.raises(ValueError, match="ICOAConfig.checks"):
+        sanitize.validate_mode("verbose", "ICOAConfig.checks")
+    with pytest.raises(SpecError, match="BackendSpec.checks"):
+        api.BackendSpec(checks="bogus").validate()
+    xcols, y = _data()
+    with pytest.raises(ValueError, match="checks"):
+        icoa.run(LinearFamily(n_cols=1), icoa.ICOAConfig(checks="debug"),
+                 xcols, y)
+
+
+# --------------------------------------------------- located runtime errors
+
+
+def test_nan_codec_raises_located_error():
+    """checks='raise' names the poisoning codec and topology at the relay."""
+    d = 3
+    xcols, y = _data(d)
+    cfg = icoa.ICOAConfig(n_sweeps=1, transport=_nan_transport(d),
+                          checks="raise")
+    with pytest.raises(checkify.JaxRuntimeError) as ei:
+        icoa.run(LinearFamily(n_cols=1), cfg, xcols, y, seed=0)
+    msg = str(ei.value)
+    assert "transport relay" in msg
+    assert "nan_injector" in msg
+
+
+def test_nan_codec_is_silent_corruption_when_off():
+    """Off-mode documents the failure the rail exists for: the poisoned
+    covariance state makes every acceptance comparison NaN (hence False), so
+    the run completes "successfully" having silently rejected all progress —
+    no error, no NaN in the reported history, nothing pointing at the codec."""
+    d = 3
+    xcols, y = _data(d)
+    cfg = icoa.ICOAConfig(n_sweeps=1, transport=_nan_transport(d))
+    _, _, hist = icoa.run(LinearFamily(n_cols=1), cfg, xcols, y, seed=0)
+    assert np.isfinite(hist["eta"]).all()
+    assert hist["eta"][-1] == hist["eta"][0]          # zero progress, zero signal
+
+
+def test_singular_smw_pivot_raises_named_division_error():
+    """det = k11*k22 - k12^2 hits exactly 0 for u = -e0/2 against m_inv = I:
+    the check names covstate._smw_pieces instead of silently dividing."""
+    d, m = 3, 8
+    r_sub = jnp.zeros((d, m), jnp.float32)
+    eye = jnp.eye(d, dtype=jnp.float32)
+    s = eye @ jnp.ones((d,), jnp.float32)
+    state = covstate.CovState(r_sub=r_sub, a0=eye, m_inv=eye, s=s,
+                              eta_tilde=jnp.sum(s))
+    u_bad = (-0.5 * eye[0]).astype(jnp.float32)
+    probe = sanitize.checked(covstate.eta_probe)
+    with pytest.raises(checkify.JaxRuntimeError, match="covstate._smw_pieces"):
+        probe(state, 0, u_bad)
+    # a well-conditioned probe passes the checked path and matches the bare one
+    u_ok = 0.1 * jnp.ones((d,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(probe(state, 0, u_ok)),
+                               np.asarray(covstate.eta_probe(state, 0, u_ok)))
+
+
+def test_batch_fit_raise_mode_catches_nan(tmp_path):
+    """The memoized compiled batch program discharges the same relay check."""
+    d = 3
+    xcols, y = _data(d)
+    cfg = icoa.ICOAConfig(n_sweeps=1, transport=_nan_transport(d),
+                          checks="raise")
+    fam = LinearFamily(n_cols=1)
+    with pytest.raises(checkify.JaxRuntimeError, match="transport relay"):
+        sanitize.checked(lambda: icoa.run_scan(
+            fam, cfg, xcols, y, xcols, y, 0))()
+
+
+# ------------------------------------------------------ raise == off parity
+
+
+def test_serial_run_raise_matches_off_exactly():
+    xcols, y = _data()
+    fam = LinearFamily(n_cols=1)
+    base = icoa.ICOAConfig(n_sweeps=2)
+    _, w_off, h_off = icoa.run(fam, base, xcols, y, xcols, y, seed=3)
+    _, w_on, h_on = icoa.run(
+        fam, dataclasses.replace(base, checks="raise"), xcols, y, xcols, y,
+        seed=3)
+    assert h_on == h_off                       # bit-for-bit float histories
+    np.testing.assert_array_equal(np.asarray(w_on), np.asarray(w_off))
+
+
+def _mc_spec(checks="off"):
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_train=80, n_test=40),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 2),)),
+        solver=api.SolverSpec(n_sweeps=2),
+        backend=api.BackendSpec(checks=checks))
+
+
+def test_batch_fit_raise_matches_off():
+    rs_off = api.batch_fit(_mc_spec("off"), 2)
+    rs_on = api.batch_fit(_mc_spec("raise"), 2)
+    for field in ("train_mse", "test_mse", "eta", "bytes_transmitted"):
+        np.testing.assert_array_equal(rs_on.stack(field), rs_off.stack(field),
+                                      err_msg=field)
+
+
+# ------------------------------------------- shard_map backend (subprocess)
+
+_SHARD_CHECKS_SCRIPT = r"""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental import checkify
+from repro import transport as transport_lib
+from repro.agents import LinearFamily
+from repro.core import icoa
+from repro.core.distributed import run_distributed
+from repro.transport import codecs
+
+assert len(jax.devices()) == 4, jax.devices()
+d, n = 4, 64
+kx, ky = jax.random.split(jax.random.PRNGKey(0))
+x = jax.random.normal(kx, (n, d))
+y = x @ jnp.arange(1.0, d + 1.0) + 0.1 * jax.random.normal(ky, (n,))
+xcols = jnp.stack([x[:, [i]] for i in range(d)])
+fam = LinearFamily(n_cols=1)
+
+base = icoa.ICOAConfig(n_sweeps=2)
+_, w_off, h_off = run_distributed(fam, base, xcols, y, xcols, y)
+_, w_on, h_on = run_distributed(fam, dataclasses.replace(base, checks="raise"),
+                                xcols, y, xcols, y)
+assert h_on == h_off, (h_on, h_off)
+np.testing.assert_array_equal(np.asarray(w_on), np.asarray(w_off))
+
+@dataclasses.dataclass(frozen=True)
+class NaNCodec(codecs.Codec):
+    def decode(self, payload):
+        return payload * jnp.nan
+    def nbytes(self, n_elems):
+        return float(8 * n_elems)
+    def is_identity_for(self, dtype):
+        return False
+
+tp = transport_lib.Transport(topology=transport_lib.build_topology("full", d),
+                             codec=NaNCodec(name="nan_injector"))
+cfg = icoa.ICOAConfig(n_sweeps=1, transport=tp, checks="raise")
+try:
+    run_distributed(fam, cfg, xcols, y, xcols, y)
+except checkify.JaxRuntimeError as e:
+    assert "non-finite" in str(e), str(e)
+else:
+    raise SystemExit("NaN codec did not raise on the shard_map path")
+
+# local backend, 4 trial devices, 6 trials: the padded tail exercises the
+# OOB check site and shard_map-over-vmap-of-checkify — still bit-for-bit
+from repro import api
+spec_off = api.ExperimentSpec(
+    data=api.DataSpec(n_train=80, n_test=40),
+    agent=api.AgentSpec(family="polynomial", options=(("degree", 2),)),
+    solver=api.SolverSpec(n_sweeps=2),
+    backend=api.BackendSpec(checks="off"))
+spec_on = dataclasses.replace(spec_off, backend=api.BackendSpec(checks="raise"))
+rs_off = api.batch_fit(spec_off, 6)
+rs_on = api.batch_fit(spec_on, 6)
+for field in ("train_mse", "test_mse", "eta"):
+    np.testing.assert_array_equal(rs_on.stack(field), rs_off.stack(field),
+                                  err_msg=field)
+print("SHARD_CHECKS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_shard_map_checks_parity_and_raise():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SHARD_CHECKS_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARD_CHECKS_OK" in out.stdout
+
+
+# ------------------------------------- error-message regressions (ISSUE 6f)
+
+
+def test_spec_pairs_error_names_exact_key_path():
+    with pytest.raises(SpecError) as ei:
+        spec_from_dict({"data": {"source_options": 7}})
+    assert "spec['data']['source_options']" in str(ei.value)
+    with pytest.raises(SpecError) as ei:
+        spec_from_dict({"agent": {"options": [["degree", 2, 9]]}})
+    assert "spec['agent']['options'][0]" in str(ei.value)
+    with pytest.raises(SpecError) as ei:
+        spec_from_dict({"transport": {"codec_options": [["k", 4], [7]]}})
+    assert "spec['transport']['codec_options'][1]" in str(ei.value)
+
+
+def _result_with_bytes(bytes_hist):
+    h = History(train_mse=[1.0, 0.5], test_mse=[1.1, 0.6], eta=[1.0, 0.9],
+                bytes_transmitted=list(bytes_hist))
+    return Result(spec=None, family=None, params=None, weights=None, f=None,
+                  history=h)
+
+
+def test_cumulative_bytes_divergence_names_trial_and_record():
+    rs = ResultSet(spec=None, results=[_result_with_bytes([0.0, 10.0]),
+                                       _result_with_bytes([0.0, 12.0])])
+    with pytest.raises(ValueError) as ei:
+        rs.cumulative_bytes
+    msg = str(ei.value)
+    assert "trial 1 record 1" in msg
+    assert "12" in msg and "10" in msg
+    assert "stack('bytes_transmitted')" in msg
+
+
+def test_cumulative_bytes_agreeing_ledgers_cumsum():
+    rs = ResultSet(spec=None, results=[_result_with_bytes([0.0, 10.0]),
+                                       _result_with_bytes([0.0, 10.0])])
+    np.testing.assert_allclose(rs.cumulative_bytes, [0.0, 10.0])

@@ -35,15 +35,15 @@ def test_adamw_matches_manual_reference():
 
 def test_weight_decay_shrinks_params():
     cfg = AdamWConfig(weight_decay=0.1)
-    p = {"w": jnp.ones((4,))}
-    g = {"w": jnp.zeros((4,))}
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    g = {"w": jnp.zeros((4,), jnp.float32)}
     st = adamw_init(p, cfg)
     new_p, _ = adamw_update(g, st, p, cfg, lr=jnp.float32(0.1))
     assert float(new_p["w"][0]) < 1.0
 
 
 def test_clip_by_global_norm():
-    tree = {"a": jnp.ones((3,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    tree = {"a": jnp.ones((3,), jnp.float32) * 3.0, "b": jnp.ones((4,), jnp.float32) * 4.0}
     gn = float(global_norm(tree))
     clipped, gn2 = clip_by_global_norm(tree, 1.0)
     assert abs(gn - float(gn2)) < 1e-5

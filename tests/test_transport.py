@@ -108,7 +108,7 @@ def test_codec_bytes_model():
 
 def test_codec_sparse_exact_when_support_fits():
     codec = tlib.build_codec("topk_sparse", options=(("k", 8),))
-    x = jnp.zeros((30,)).at[jnp.array([2, 11, 29])].set(jnp.array([1.0, -2.0, 0.5]))
+    x = jnp.zeros((30,), jnp.float32).at[jnp.array([2, 11, 29])].set(jnp.array([1.0, -2.0, 0.5]))
     np.testing.assert_allclose(codec.roundtrip(x), x, rtol=1e-6)
 
 

@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Recompilation-budget CLI: check audit JSONs against the checked-in budget.
+
+Producing an audit: run any audited process with REPRO_RECOMPILE_AUDIT set to
+an output path — tests/conftest.py and benchmarks/run.py install the counter
+from that env var and write `{"entry": ..., "total": N, "counts": {...}}` at
+exit:
+
+    REPRO_RECOMPILE_AUDIT=audit_tier1.json python -m pytest -x -q
+
+Checking it (CI's budget gate; exit 1 on regression):
+
+    python tools/recompile_audit.py check audit_tier1.json \
+        --budget tools/recompile_budget.json
+
+The budget carries ~30% headroom over measured totals: a failure means a
+change introduced systematically more retraces (a broken static key, a
+per-call closure), not run-to-run noise — re-measure and update the budget
+only when the growth is intentional.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_DEFAULT_BUDGET = os.path.join(os.path.dirname(__file__),
+                               "recompile_budget.json")
+
+
+def main(argv=None) -> int:
+    from repro.analysis import recompile
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    chk = sub.add_parser("check", help="compare audit JSON(s) to the budget")
+    chk.add_argument("audits", nargs="+", help="audit JSON files")
+    chk.add_argument("--budget", default=_DEFAULT_BUDGET)
+    args = ap.parse_args(argv)
+
+    budget = recompile.load_budget(args.budget)
+    failures = []
+    for path in args.audits:
+        with open(path, "r", encoding="utf-8") as fh:
+            audit = json.load(fh)
+        entry, total = audit["entry"], int(audit["total"])
+        ceiling = budget.get(entry, {}).get("max_compiles", "∅")
+        print(f"{entry}: {total} compiles (budget {ceiling})")
+        failures.extend(recompile.check_budget(entry, total, budget))
+    for f in failures:
+        print(f"BUDGET VIOLATION: {f}", file=sys.stderr)
+    if not failures:
+        print("recompile audit: within budget")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""reprolint CLI — run the repo-specific JAX-contract lint pass.
+
+    python tools/reprolint.py src/repro            # lint the live tree
+    python tools/reprolint.py --list-rules         # rule catalog
+    python tools/reprolint.py path.py --no-config  # ignore pyproject excludes
+
+Exit status: 0 when clean, 1 when violations were found.  Excluded paths come
+from `[tool.reprolint] exclude` in pyproject.toml; per-line suppression is
+`# reprolint: disable=<rule>[,<rule>...]` (or `disable=all`).  DESIGN.md §9.1
+documents every rule with rationale.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import lint  # noqa: E402  (path bootstrap above)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=(), help="files/dirs to lint")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--no-config", action="store_true",
+                    help="ignore [tool.reprolint] in pyproject.toml")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(lint.RULES.items()):
+            print(f"{rule}\n    {desc}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (try: python tools/reprolint.py src/repro)")
+
+    config = lint.LintConfig()
+    if not args.no_config:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        config = lint.load_config(os.path.join(root, "pyproject.toml"))
+
+    violations = lint.lint_paths(args.paths, config=config)
+    for v in violations:
+        print(v.format())
+    n = len(violations)
+    print(f"reprolint: {n} violation(s)" if n else "reprolint: clean")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
