@@ -1,46 +1,159 @@
-"""Kernel micro-benchmarks.
+"""Kernel micro-benchmarks: the ACTUAL Pallas kernels, timed per call.
 
-Wall-clock on this CPU box times the *reference* path (the Pallas kernels
-target TPU; interpret=True executes the kernel body in Python and is a
-correctness tool, not a performance number). Derived column reports the
-arithmetic intensity the TPU kernel claims per the BlockSpec tiling —
-the quantity the roofline analysis consumes.
+Every row times a real invocation of the public kernel op (``use_pallas=True``
+through the padded wrapper), next to the jnp reference path on the same
+shape.  On this CPU box ``interpret=None`` auto-resolves to the Pallas
+interpreter (kernels.runtime.resolve_interpret), so the ``pallas`` rows are
+the *correctness-path* cost — the number CI tracks so an accidental
+eager-interpreter regression (or a kernel-body blowup) is visible per PR —
+while the ``ref`` rows are the CPU performance numbers.  On a TPU backend the
+same suite times compiled Mosaic kernels with no code change.
+
+The derived column reports ACHIEVED arithmetic intensity: the FLOPs the
+kernel executes over the bytes it streams, both computed from the padded
+geometry the wrapper actually ships to the kernel (lane-padded D/N, zero
+blocks included) — not the ideal unpadded ratio.  That is the x-coordinate
+the roofline suite (benchmarks.roofline) places each kernel at.
+
+Writes ``BENCH_kernels.json`` at the repo root.  ``BENCH_SMOKE=1`` shrinks
+shapes/reps to CI scale.
 """
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.flash_decode.ref import decode_ref
-from repro.kernels.gram.ref import gram_ref
-from benchmarks.common import row, timed
+from benchmarks.common import row
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.gram.ops import gram, row_gram
+from repro.kernels.sweep.ops import commit_sweep, probe_sweep
+
+__all__ = ["run"]
+
+_LANE = 128
+_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
 
 
-def run() -> list[str]:
-    out = []
-    # gram: paper shape D=5, N=4000 and a production-ish D=64, N=1M
-    for d, n in ((5, 4000), (64, 262144)):
-        r = jax.random.normal(jax.random.PRNGKey(0), (d, n))
-        f = jax.jit(gram_ref)
-        f(r).block_until_ready()
-        _, us = timed(lambda: f(r).block_until_ready())
-        flops = 2 * d * d * n
-        bytes_ = 4 * d * n
-        out.append(row(f"kernel/gram/d{d}_n{n}", us,
-                       f"ai={flops / bytes_:.1f}flops_per_byte"))
-    # flash attention 1k seq
-    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1024, 8, 64), jnp.float32)
-    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1024, 2, 64), jnp.float32)
-    f = jax.jit(lambda q, k: attention_ref(q, k, k, causal=True))
-    f(q, k).block_until_ready()
-    _, us = timed(lambda: f(q, k).block_until_ready())
-    out.append(row("kernel/flash_attention/s1024_h8kv2", us, "vmem_tiles=128x128"))
-    # flash decode 32k cache
-    qd = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 64), jnp.float32)
-    kd = jax.random.normal(jax.random.PRNGKey(4), (4, 32768, 2, 64), jnp.float32)
-    f = jax.jit(lambda q, k: decode_ref(q, k, k, 30000))
-    f(qd, kd).block_until_ready()
-    _, us = timed(lambda: f(qd, kd).block_until_ready())
-    out.append(row("kernel/flash_decode/s32768", us, "cache_stream=1pass_per_kv_head"))
-    return out
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def _pad(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _median_us(fn, reps: int) -> float:
+    jax.block_until_ready(fn())          # compile + warm outside the clock
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+def _geometry(d: int, n: int, block_n: int = 2048):
+    """Padded (dp, np) exactly as kernels.gram/sweep ops pad before the call."""
+    bn = min(block_n, _pad(n, _LANE))
+    return _pad(d, _LANE), _pad(n, bn)
+
+
+def _entry(results, name: str, us: float, flops: float, bytes_: float,
+           path: str) -> str:
+    ai = flops / bytes_
+    results.append({"name": name, "path": path, "us_per_op": round(us, 1),
+                    "flops": flops, "bytes": bytes_,
+                    "achieved_ai": round(ai, 3)})
+    return row(f"kernel/{name}/{path}", us, f"ai={ai:.2f}flops_per_byte")
+
+
+def run():
+    smoke = _smoke()
+    reps = 3 if smoke else 7
+    results: list = []
+    itemsize = jnp.zeros((), jnp.float32).dtype.itemsize
+
+    # ---- gram / row_gram: the covariance engines' O(D^2 N) / O(D N) products
+    gram_shapes = ((5, 1024), (16, 8192)) if smoke else ((5, 4000), (64, 65536))
+    for d, n in gram_shapes:
+        r = jax.random.normal(jax.random.PRNGKey(0), (d, n), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+        dp, np_ = _geometry(d, n)
+        for use_pallas, path in ((False, "ref"), (True, "pallas")):
+            us = _median_us(lambda up=use_pallas: gram(r, use_pallas=up), reps)
+            # kernel streams the padded R once, accumulates dp x dp in VMEM
+            flops = 2.0 * dp * dp * np_ if use_pallas else 2.0 * d * d * n
+            byt = float(itemsize) * ((dp * np_ + dp * dp) if use_pallas
+                                     else (d * n + d * d))
+            yield _entry(results, f"gram/d{d}_n{n}", us, flops, byt, path)
+            us = _median_us(
+                lambda up=use_pallas: row_gram(v, r, use_pallas=up), reps)
+            flops = 2.0 * dp * np_ if use_pallas else 2.0 * d * n
+            byt = float(itemsize) * ((dp * np_ + np_ + dp) if use_pallas
+                                     else (d * n + n + d))
+            yield _entry(results, f"row_gram/d{d}_n{n}", us, flops, byt, path)
+
+    # ---- fused sweep kernels (this PR): probe/back-search + accept/commit
+    d, n, k = (20, 512, 4) if smoke else (100, 2000, 8)
+    key = jax.random.PRNGKey(2)
+    r = jax.random.normal(key, (d, n), jnp.float32)
+    m_inv = jnp.eye(d, dtype=jnp.float32) + 0.01 * gram(r) / n
+    s = jnp.sum(m_inv, axis=1)
+    eta = jnp.sum(s)
+    steps = 0.5 ** jnp.arange(1, k + 1, dtype=jnp.float32)
+    delta = 0.01 * jax.random.normal(jax.random.PRNGKey(3), (n,), jnp.float32)
+    dp, np_ = _geometry(d, n)
+    for use_pallas, path in ((False, "ref"), (True, "pallas")):
+        us = _median_us(lambda up=use_pallas: probe_sweep(
+            r, m_inv, s, eta, 0, steps, use_pallas=up), reps)
+        # single pass: cross = s @ R and p_acc = R @ cross^T per block (4DN),
+        # plus the in-core m_inv matvec + closed-form K-step schedule
+        de, ne = (dp, np_) if use_pallas else (d, n)
+        flops = 4.0 * de * ne + 2.0 * de * de + 20.0 * k
+        byt = float(itemsize) * (de * ne + de * de + 2 * de + ne)
+        yield _entry(results, f"sweep_probe/d{d}_n{n}_k{k}", us, flops, byt,
+                     path)
+        us = _median_us(lambda up=use_pallas: commit_sweep(
+            r, m_inv, s, eta, 0, delta, 1.0, 0.0, eta, 1.0,
+            use_pallas=up), reps)
+        # one pass for w = R @ delta / m, then the rank-2 SMW update of
+        # m_inv (read + write D^2) and the outer-product corrections (~8 D^2)
+        flops = 2.0 * de * ne + 12.0 * de * de
+        byt = float(itemsize) * (de * ne + ne + 3 * de * de + 4 * de)
+        yield _entry(results, f"sweep_commit/d{d}_n{n}", us, flops, byt, path)
+
+    # ---- flash attention / decode: the sequence-model kernels
+    sq = 256 if smoke else 1024
+    q = jax.random.normal(jax.random.PRNGKey(4), (1, sq, 8, 64), jnp.float32)
+    kv = jax.random.normal(jax.random.PRNGKey(5), (1, sq, 2, 64), jnp.float32)
+    for use_pallas, path in ((False, "ref"), (True, "pallas")):
+        us = _median_us(lambda up=use_pallas: flash_attention(
+            q, kv, kv, causal=True, use_pallas=up), reps)
+        flops = 4.0 * sq * sq * 8 * 64 / 2        # QK^T + PV, causal halves
+        byt = float(itemsize) * (sq * 8 * 64 + 2 * sq * 2 * 64 + sq * 8 * 64)
+        yield _entry(results, f"flash_attention/s{sq}_h8kv2", us, flops, byt,
+                     path)
+    sd = 4096 if smoke else 32768
+    qd = jax.random.normal(jax.random.PRNGKey(6), (4, 8, 64), jnp.float32)
+    kd = jax.random.normal(jax.random.PRNGKey(7), (4, sd, 2, 64), jnp.float32)
+    fill = sd - 100
+    for use_pallas, path in ((False, "ref"), (True, "pallas")):
+        us = _median_us(lambda up=use_pallas: flash_decode(
+            qd, kd, kd, fill, use_pallas=up), reps)
+        flops = 4.0 * 4 * 8 * 64 * fill
+        byt = float(itemsize) * (2 * 4 * sd * 2 * 64 + 2 * 4 * 8 * 64)
+        yield _entry(results, f"flash_decode/s{sd}", us, flops, byt, path)
+
+    with open(_OUT, "w") as fh:
+        json.dump({"backend": jax.default_backend(),
+                   "interpret_note": "pallas rows run the interpreter on "
+                   "non-TPU backends (correctness-path timing); ref rows are "
+                   "the CPU perf numbers", "smoke": smoke,
+                   "unit": "us_per_op", "results": results}, fh, indent=2)
+        fh.write("\n")
+    yield row("kernels_json", 0, os.path.basename(_OUT))

@@ -1,41 +1,135 @@
-"""Roofline table: reads the dry-run JSONL artifacts (single-pod baseline,
-multi-pod, and any perf-iteration runs) and emits the per-(arch x shape)
-three-term roofline rows used by EXPERIMENTS.md §Roofline.
+"""Roofline analysis of the ACTUAL sweep engines (DESIGN.md §10.3).
+
+For each covariance engine this suite lowers one compiled `icoa.sweep`
+(LinearFamily, the BENCH_sweep.json shape), walks the optimized HLO with
+launch.hlo_analysis — the same three-term extractor the dry-run launch rail
+uses — and reports:
+
+  * total FLOPs / HBM bytes / collective bytes per sweep (per device),
+  * the three roofline terms in seconds on the reference TPU-v5e-like chip,
+  * the arithmetic intensity the compiled program actually has, and
+  * the measured wall time on THIS box next to the memory-bound bound —
+    i.e. how far the engine sits from its bandwidth floor (§10.3: the fused
+    engine's floor is the two residual passes per agent update that remain
+    after the back-search leaves the wire).
+
+Writes ``BENCH_roofline.json`` at the repo root.  ``BENCH_SMOKE=1`` shrinks
+the shape.  The legacy dry-run JSONL rows (single/multi-pod launch plans)
+still print when their artifacts exist.
 """
 from __future__ import annotations
 
 import json
 import os
+import time
+
+import jax
+import jax.numpy as jnp
 
 from benchmarks.common import row
+from repro.agents import LinearFamily
+from repro.core import icoa
+from repro.launch.hlo_analysis import HW, analyze_hlo, roofline_terms
+
+__all__ = ["run"]
 
 BASELINE = "dryrun_baseline.jsonl"
 MULTIPOD = "dryrun_multipod.jsonl"
+
+_ENGINES = ("incremental", "fused", "dense")
+_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_roofline.json")
 
 
 def _load(path):
     if not os.path.exists(path):
         return []
     with open(path) as f:
-        return [json.loads(l) for l in f if l.strip()]
+        return [json.loads(line) for line in f if line.strip()]
 
 
-def run(root: str = ".") -> list[str]:
-    out = []
+def _legacy_rows(root: str):
     for fname, tag in ((BASELINE, "pod1"), (MULTIPOD, "pod2")):
         for r in _load(os.path.join(root, fname)):
             name = f"roofline/{tag}/{r['arch']}/{r['shape']}"
             if r["status"] == "skipped":
-                out.append(row(name, 0, f"skipped:{r['reason'][:60]}"))
+                yield row(name, 0, f"skipped:{r['reason'][:60]}")
                 continue
             if r["status"] != "ok":
-                out.append(row(name, 0, f"ERROR:{r.get('error','')[:80]}"))
+                yield row(name, 0, f"ERROR:{r.get('error', '')[:80]}")
                 continue
             t = r["roofline"]
             ratio = r.get("useful_flops_ratio")
-            out.append(row(
+            yield row(
                 name, r["compile_s"] * 1e6,
                 f"tc={t['t_compute']:.4f};tm={t['t_memory']:.4f};"
                 f"tcoll={t['t_collective']:.4f};dom={r['dominant'][2:]};"
-                f"useful={ratio and round(ratio, 3)}"))
-    return out
+                f"useful={ratio and round(ratio, 3)}")
+
+
+def _sweep_fn(fam, cfg, xcols, y):
+    def fn(params, f, key):
+        return icoa.sweep(fam, cfg, params, f, xcols, y, key)
+    return jax.jit(fn)
+
+
+def run(root: str = "."):
+    yield from _legacy_rows(root)
+
+    d, n = (20, 512) if os.environ.get("BENCH_SMOKE", "") == "1" else (100, 2000)
+    key = jax.random.PRNGKey(d)
+    kx, ke = jax.random.split(key)
+    xcols = jax.random.normal(kx, (d, n, 1))
+    y = jnp.sum(xcols[:, :, 0], axis=0) / jnp.sqrt(float(d)) \
+        + 0.3 * jax.random.normal(ke, (n,))
+    fam = LinearFamily(n_cols=1)
+    keys = jax.random.split(jax.random.PRNGKey(0), d)
+    state = icoa.init_state(fam, keys, xcols, y)
+    kr = jax.random.PRNGKey(1)
+
+    results = []
+    for engine in _ENGINES:
+        cfg = icoa.ICOAConfig(engine=engine, n_sweeps=1)
+        fn = _sweep_fn(fam, cfg, xcols, y)
+        compiled = fn.lower(state.params, state.f, kr).compile()
+        stats = analyze_hlo(compiled.as_text())
+        terms = roofline_terms(stats.flops, stats.bytes_accessed,
+                               stats.collective_bytes)
+        out = fn(state.params, state.f, kr)        # warm (cache hit)
+        jax.block_until_ready(out[1])
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(state.params, state.f, kr)[1])
+        meas_s = (time.perf_counter() - t0) / reps
+        ai = stats.flops / max(stats.bytes_accessed, 1.0)
+        bound = max(terms["t_compute"], terms["t_memory"],
+                    terms["t_collective"])
+        dominant = max(terms, key=lambda k: terms[k])[2:]
+        results.append({
+            "engine": engine, "d": d, "n": n,
+            "flops_per_sweep": stats.flops,
+            "hbm_bytes_per_sweep": stats.bytes_accessed,
+            "collective_bytes_per_sweep": stats.collective_bytes,
+            "arithmetic_intensity": round(ai, 3),
+            "t_compute_s": terms["t_compute"],
+            "t_memory_s": terms["t_memory"],
+            "t_collective_s": terms["t_collective"],
+            "dominant": dominant,
+            "roofline_bound_us": round(bound * 1e6, 2),
+            "measured_us_this_box": round(meas_s * 1e6, 1),
+        })
+        yield row(f"roofline/sweep_{engine}_d{d}",
+                  meas_s * 1e6,
+                  f"ai={ai:.2f};dom={dominant};"
+                  f"bound_us={bound * 1e6:.1f};"
+                  f"gflops={stats.flops / 1e9:.3f}")
+    with open(_OUT, "w") as fh:
+        json.dump({"backend": jax.default_backend(),
+                   "hw_model": {k: v for k, v in HW.items()},
+                   "note": "FLOPs/bytes from optimized-HLO walk "
+                   "(launch.hlo_analysis); bound_us is the max roofline "
+                   "term on the reference chip; measured_us is this box "
+                   "(CPU in CI) for trajectory tracking only",
+                   "results": results}, fh, indent=2)
+        fh.write("\n")
+    yield row("roofline_json", 0, os.path.basename(_OUT))

@@ -4,9 +4,18 @@ Prints ``name,us_per_call,derived`` CSV rows. Usage:
 
     PYTHONPATH=src python -m benchmarks.run              # everything
     PYTHONPATH=src python -m benchmarks.run table1 fig5  # a subset
+
+Numbers destined for a checked-in BENCH_*.json should run under the pinned
+environment (allocator, host-device topology, persistent compilation cache):
+
+    PYTHONPATH=src tools/bench_env.sh python -m benchmarks.run sweep
+
+The harness prints a ``bench_env`` row recording which parts of that regime
+were active, so every CSV capture is self-describing.
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -35,12 +44,24 @@ SUITES = {
 }
 
 
+def _env_row() -> str:
+    """One self-describing row: which parts of tools/bench_env.sh are active."""
+    alloc = "tcmalloc" if "tcmalloc" in os.environ.get("LD_PRELOAD", "") \
+        else "glibc"
+    cache = "on" if os.environ.get("JAX_COMPILATION_CACHE_DIR") else "off"
+    xla = os.environ.get("XLA_FLAGS", "")
+    return f"bench_env,0,alloc={alloc};jax_cache={cache};xla_flags={xla or '-'}"
+
+
 def main() -> int:
-    # recompilation audit (DESIGN.md §9.3): active only when
-    # REPRO_RECOMPILE_AUDIT names a JSON path — the audit is written at exit
-    recompile.install_from_env("bench_batch")
     which = sys.argv[1:] or list(SUITES)
+    # recompilation audit (DESIGN.md §9.3): active only when
+    # REPRO_RECOMPILE_AUDIT names a JSON path — the audit is written at exit,
+    # tagged per suite selection so tools/recompile_budget.json can hold one
+    # entry per benchmark entry point (bench_batch, bench_kernels, ...)
+    recompile.install_from_env("bench_" + "_".join(sorted(which)))
     print("name,us_per_call,derived")
+    print(_env_row(), flush=True)
     failed = 0
     for name in which:
         try:

@@ -1,12 +1,15 @@
-"""Per-sweep wall time vs ensemble size D for both covariance engines.
+"""Per-sweep wall time vs ensemble size D for all three covariance engines.
 
-The engine trade the repo is built on (DESIGN.md §5): the dense oracle pays
-O(N*D^2 + D^3) per objective probe, the incremental CovState engine
-O(N*D + D^2).  This suite times ONE compiled `icoa.sweep` per (D, engine) on
-synthetic attribute-split data (LinearFamily agents, so projection cost is
-negligible and the covariance algebra dominates) and records the curve in
-``BENCH_sweep.json`` at the repo root — the file CI and future PRs diff to
-keep the perf trajectory honest.
+The engine trade the repo is built on (DESIGN.md §5/§10): the dense oracle
+pays O(N*D^2 + D^3) per objective probe, the incremental CovState engine
+O(N*D + D^2) per probe, and the fused engine removes the O(N*D) work from
+the back-search entirely — two residual passes per agent update total, with
+the whole probe schedule in closed form.  This suite times ONE compiled
+`icoa.sweep` per (D, engine) on synthetic attribute-split data
+(LinearFamily agents, so projection cost is negligible and the covariance
+algebra dominates) and records the curve in ``BENCH_sweep.json`` at the
+repo root — the file CI and future PRs diff to keep the perf trajectory
+honest.
 """
 from __future__ import annotations
 
@@ -25,7 +28,15 @@ __all__ = ["run"]
 
 _DS = (5, 25, 50, 100)
 _N = 2000
+_ENGINES = ("incremental", "fused", "dense")
 _OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
+
+# the PR 6 checked-in incremental number at D=100 (mean-of-2, unpinned env) —
+# the historical reference the fused engine's headline is measured against.
+# Same-run fused-vs-incremental ratios are also recorded and are smaller
+# (~1.1-1.6x on the CI box): the incremental engine benefits from the PR 7
+# timing regime (min-of-N under tools/bench_env.sh) too.  DESIGN.md §10.3.
+_PR6_BASELINE_D100_US = 14262.3
 
 
 def _synthetic(d: int, n: int):
@@ -37,15 +48,19 @@ def _synthetic(d: int, n: int):
     return xcols, y
 
 
-def _time_sweep(cfg, fam, params, f, xcols, y, reps: int = 2) -> float:
+def _time_sweep(cfg, fam, params, f, xcols, y, reps: int = 12) -> float:
     key = jax.random.PRNGKey(1)
     out = icoa.sweep(fam, cfg, params, f, xcols, y, key)   # compile + warm
     jax.block_until_ready(out[1])
-    t0 = time.perf_counter()
+    best = float("inf")
+    # min over reps (the `timeit` convention): scheduler noise on a shared
+    # box only ever ADDS time, so the minimum is the steady-state estimate
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = icoa.sweep(fam, cfg, params, f, xcols, y, key)
         jax.block_until_ready(out[1])
-    return (time.perf_counter() - t0) / reps * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def run():
@@ -56,7 +71,7 @@ def run():
         keys = jax.random.split(jax.random.PRNGKey(0), d)
         state = icoa.init_state(fam, keys, xcols, y)
         per_engine = {}
-        for engine in ("incremental", "dense"):
+        for engine in _ENGINES:
             cfg = icoa.ICOAConfig(engine=engine, n_sweeps=1)
             us = _time_sweep(cfg, fam, state.params, state.f, xcols, y)
             per_engine[engine] = us
@@ -64,9 +79,17 @@ def run():
                             "us_per_sweep": round(us, 1)})
             yield row(f"sweep_{engine}_d{d}", us, f"n={_N}")
         speedup = per_engine["dense"] / per_engine["incremental"]
-        results.append({"d": d, "n": _N,
-                        "incremental_speedup_over_dense": round(speedup, 2)})
-        yield row(f"sweep_speedup_d{d}", 0, f"{speedup:.2f}x")
+        fused_speedup = per_engine["incremental"] / per_engine["fused"]
+        rec = {"d": d, "n": _N,
+               "incremental_speedup_over_dense": round(speedup, 2),
+               "fused_speedup_over_incremental": round(fused_speedup, 2)}
+        if d == 100:
+            rec["pr6_checked_in_incremental_us"] = _PR6_BASELINE_D100_US
+            rec["fused_speedup_over_pr6_baseline"] = round(
+                _PR6_BASELINE_D100_US / per_engine["fused"], 2)
+        results.append(rec)
+        yield row(f"sweep_speedup_d{d}", 0,
+                  f"{speedup:.2f}x inc/dense {fused_speedup:.2f}x fused/inc")
     with open(_OUT, "w") as fh:
         json.dump({"n": _N, "backend": jax.default_backend(),
                    "unit": "us_per_sweep", "results": results}, fh, indent=2)

@@ -78,7 +78,7 @@ def comm_floats_per_sweep(solver: SolverSpec, d: int, n: int) -> int:
         return 0
     if solver.name == "residual_refitting":
         return n * d
-    row_wise = solver.row_broadcast or solver.engine == "incremental"
+    row_wise = solver.row_broadcast or solver.engine in ("incremental", "fused")
     m = cov.subsample_size(n, solver.alpha) if solver.alpha > 1.0 else n
     diag = (2 * d if row_wise else d * d) if solver.alpha > 1.0 else 0
     if row_wise:

@@ -197,8 +197,12 @@ class SolverSpec:
     delta: float = 0.0          # Minimax Protection box half-width (0 = off)
     engine: str = "incremental"  # covariance engine: "incremental" carries a
                                 # rank-2 updated CovState (O(N*D + D^2) per
-                                # probe); "dense" recomputes every probe from
-                                # scratch — the parity oracle (DESIGN.md §5)
+                                # probe); "fused" collapses the back-search
+                                # to a closed-form schedule and the commit to
+                                # one fused pass (Pallas-kernel backed,
+                                # DESIGN.md §10); "dense" recomputes every
+                                # probe from scratch — the parity oracle
+                                # (DESIGN.md §5)
     row_broadcast: bool = False  # O(N*D)/sweep collective schedule (§Perf C)
     use_kernel: bool = False    # route Gram products through the Pallas kernel
     accept_reject: bool = True  # reject projections that worsen the objective
@@ -217,9 +221,10 @@ class SolverSpec:
             raise SpecError(f"delta must be >= 0 (got {self.delta})")
         if self.n_sweeps < 1:
             raise SpecError("need n_sweeps >= 1")
-        if self.engine not in ("dense", "incremental"):
+        if self.engine not in ("dense", "incremental", "fused"):
             raise SpecError(
-                f"unknown engine {self.engine!r}; pick 'dense' or 'incremental'")
+                f"unknown engine {self.engine!r}; pick 'dense', "
+                f"'incremental' or 'fused'")
         if self.name != "icoa" and (self.alpha != 1.0 or self.delta != 0.0):
             raise SpecError(
                 f"alpha/delta implement ICOA's Minimax Protection; solver "
@@ -376,13 +381,14 @@ class ExperimentSpec:
         self.backend.validate()
         self.transport.validate()
         if self.transport.byte_budget is not None:
-            if self.solver.name != "icoa" or self.solver.engine != "incremental":
+            if (self.solver.name != "icoa"
+                    or self.solver.engine not in ("incremental", "fused")):
                 raise SpecError(
                     "byte_budget schedules gate per-row broadcasts off the "
                     "carried CovState — they need solver 'icoa' with "
-                    "engine='incremental' (averaging transmits nothing; the "
-                    "refit ring and the dense oracle have no per-row "
-                    "broadcast to skip)")
+                    "engine='incremental' or 'fused' (averaging transmits "
+                    "nothing; the refit ring and the dense oracle have no "
+                    "per-row broadcast to skip)")
 
     def resolved_transport(self) -> transport_lib.Transport:
         return self.transport.resolve(self.data.resolved_n_agents)

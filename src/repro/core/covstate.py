@@ -42,8 +42,8 @@ from repro.core import covariance as cov
 from repro.core.ensemble import _JITTER
 
 __all__ = ["CovState", "build", "refresh", "row_product", "row_update_vector",
-           "eta_probe", "s_probe", "robust_eta_probe", "apply_row_update",
-           "replace_row"]
+           "eta_probe", "s_probe", "robust_eta_probe", "apply_inverse_update",
+           "apply_row_update", "replace_row"]
 
 
 class CovState(NamedTuple):
@@ -159,10 +159,16 @@ def robust_eta_probe(state: CovState, i, u: jnp.ndarray, delta: float,
     return -minimax.robust_objective(ap, a0p, delta)
 
 
-def apply_row_update(state: CovState, i, r_new_sub: jnp.ndarray,
-                     u: jnp.ndarray) -> CovState:
-    """Commit a row change whose update vector u is already in hand — O(D^2)."""
-    a0 = state.a0.at[i, :].add(u).at[:, i].add(u)   # (i,i) gains 2 u_i: correct
+def apply_inverse_update(state: CovState, i, u: jnp.ndarray):
+    """The solve-state half of a commit: (m_inv', s', eta_tilde') after the
+    rank-2 row-i perturbation u — O(D^2), no residual/a0 bookkeeping.
+
+    Split out of `apply_row_update` so the fused sweep engine (and the Pallas
+    commit kernel's reference path, kernels.sweep.ref) can fold accept/reject
+    into the SAME pieces it used for the post-projection objective probe:
+    both read one `_smw_pieces` evaluation, so a rejected candidate is an
+    exact no-op and an accepted one bit-matches the incremental engine.
+    """
     z1, z2, k11, k12, k22, det = _smw_pieces(state, i, u)
     m_inv = state.m_inv - (k22 * jnp.outer(z1, z1)
                            - k12 * (jnp.outer(z1, z2) + jnp.outer(z2, z1))
@@ -171,8 +177,16 @@ def apply_row_update(state: CovState, i, r_new_sub: jnp.ndarray,
     c1 = (k22 * t1 - k12 * t2) / det
     c2 = (k11 * t2 - k12 * t1) / det
     s = state.s - c1 * z1 - c2 * z2
+    return m_inv, s, jnp.sum(s)
+
+
+def apply_row_update(state: CovState, i, r_new_sub: jnp.ndarray,
+                     u: jnp.ndarray) -> CovState:
+    """Commit a row change whose update vector u is already in hand — O(D^2)."""
+    a0 = state.a0.at[i, :].add(u).at[:, i].add(u)   # (i,i) gains 2 u_i: correct
+    m_inv, s, eta = apply_inverse_update(state, i, u)
     return CovState(r_sub=state.r_sub.at[i].set(r_new_sub), a0=a0,
-                    m_inv=m_inv, s=s, eta_tilde=jnp.sum(s))
+                    m_inv=m_inv, s=s, eta_tilde=eta)
 
 
 def replace_row(state: CovState, i, r_new_sub: jnp.ndarray,

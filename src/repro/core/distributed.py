@@ -367,7 +367,10 @@ def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
     d = mesh.devices.size
     tp = (cfg.transport or transport_lib.default_transport(d)).validate_for(d)
     transport_lib.require_budget_engine(tp, cfg.engine)
-    body_fn = (_sweep_body_incremental if cfg.engine == "incremental"
+    # "fused" is a single-host engine (its fusion lives inside one device's
+    # agent loop); across the mesh its row-wise schedule IS the incremental
+    # body, so it maps there rather than to the dense all-gather body
+    body_fn = (_sweep_body_incremental if cfg.engine in ("incremental", "fused")
                else _sweep_body)
     body = partial(body_fn, cfg, tp, family)
     sm = _shmap(

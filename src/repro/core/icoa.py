@@ -18,13 +18,21 @@ N/alpha subsample (fresh each sweep — the paper re-transmits a new random
 subsample every iteration), and the reported weights come from the robust
 minimax solver instead of the closed form.
 
-Two engines compute the same sweep (DESIGN.md §5):
+Three engines compute the same sweep (DESIGN.md §5/§10):
 
   * "incremental" (default): carries a core.covstate.CovState through the
     agent loop — closed-form gradient off the cached (A0+jitter)^{-1} 1,
     O(D^2) rank-2 SMW probes in the back-search, one fused row-Gram product
     per accept/commit.  O(N*D + D^2) per objective probe.
-  * "dense": the parity oracle — rebuilds the D x D Gram and re-solves
+  * "fused": the incremental engine with its per-agent update chain fused
+    into two passes over the residual matrix — the ENTIRE back-search
+    collapses to a closed-form schedule (kernels.sweep.ref) off one cached
+    matvec, and accept/commit folds into a single row-Gram + rank-2 SMW
+    evaluation.  With cfg.use_kernel these two passes are the Pallas kernels
+    of kernels.sweep.  Per agent update: O(N*D) twice + O(D^2), with NO
+    O(N*D) work inside the back-search.  The incremental engine is its
+    parity oracle (tests enforce 1e-10 relative f64 history parity).
+  * "dense": the ground-truth oracle — rebuilds the D x D Gram and re-solves
     A^{-1} 1 from scratch at every probe, O(N*D^2 + D^3) each.  Retained
     because every incremental answer must match it (tests enforce 1e-5
     relative history parity).
@@ -73,6 +81,8 @@ class ICOAConfig:
                                # O(N*D) traffic/sweep instead of the paper's
                                # O(N*D^2), with identical math (§Perf C)
     engine: str = "incremental"  # "incremental" (rank-2 CovState updates) |
+                               # "fused" (closed-form back-search + fused
+                               # accept/commit, Pallas-kernel backed) |
                                # "dense" (recompute-from-scratch parity oracle)
     transport: Optional[transport_lib.Transport] = None  # resolved comm regime
                                # (topology + codec + byte budget); None = the
@@ -168,7 +178,7 @@ def _sweep_impl(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
     m = cov.subsample_size(n, cfg.alpha) if cfg.alpha > 1.0 else n
     ledger_mod.ensure_sweep_capacity(
         tp, cfg.n_sweeps, m, split=cfg.alpha > 1.0,
-        row_wise=cfg.engine == "incremental" or cfg.row_broadcast,
+        row_wise=cfg.engine in ("incremental", "fused") or cfg.row_broadcast,
         ledger=ledger)
     idx = None
     if cfg.alpha > 1.0:
@@ -177,6 +187,9 @@ def _sweep_impl(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
 
     if cfg.engine == "incremental":
         params, f, ledger = _sweep_incremental(
+            family, cfg, tp, params, f, xcols, y, idx, ledger)
+    elif cfg.engine == "fused":
+        params, f, ledger = _sweep_fused(
             family, cfg, tp, params, f, xcols, y, idx, ledger)
     else:
         params, f, ledger = _sweep_dense(
@@ -415,6 +428,213 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
 
     params, f, _, ledger = jax.lax.fori_loop(
         0, d, update_agent, (params, f, cs0, ledger))
+    return params, f, ledger
+
+
+def _small_inv(gm: jnp.ndarray) -> jnp.ndarray:
+    """Closed-form batched inverse for trailing (P, P), P static and tiny.
+
+    The fused engine's projector precompute inverts D feature Grams of the
+    agent family's (static) feature count P; for the paper's families P <= 5,
+    and for P <= 2 the cofactor form beats the batched LAPACK dispatch by
+    ~8x on CPU without a dtype change."""
+    p = gm.shape[-1]
+    if p == 1:
+        return 1.0 / gm
+    if p == 2:
+        a, b = gm[..., 0, 0], gm[..., 0, 1]
+        c, d = gm[..., 1, 0], gm[..., 1, 1]
+        det = a * d - b * c
+        return jnp.stack([jnp.stack([d, -b], -1),
+                          jnp.stack([-c, a], -1)], -2) / det[..., None, None]
+    return jnp.linalg.inv(gm)
+
+
+def _poly_projector(xcols: jnp.ndarray, degree: int, ridge: float):
+    """Per-agent ridge projector for PolynomialFamily, precomputed once per
+    sweep: phiT (D, P, N) transposed features (row-major contiguous for the
+    in-loop matvecs) and Ginv (D, P, P) = (phi^T phi + ridge I)^{-1}.
+
+    The P x P Gram is assembled by a static python loop over contiguous phiT
+    rows — for tiny static P this lowers to P^2 fused row products, an order
+    of magnitude cheaper on CPU than the batched einsum path."""
+    from repro.agents.polynomial import _features  # agents -> jax only: no cycle
+
+    phi_t = jax.vmap(lambda x: _features(x, degree).T)(xcols)
+    p = phi_t.shape[1]
+    rows = []
+    for a in range(p):
+        rows.append(jnp.stack([jnp.sum(phi_t[:, a, :] * phi_t[:, b, :], axis=-1)
+                               for b in range(p)], -1))
+    gm = jnp.stack(rows, -2) + ridge * jnp.eye(p, dtype=phi_t.dtype)
+    return phi_t, _small_inv(gm)
+
+
+def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
+                 xcols: jnp.ndarray, y: jnp.ndarray,
+                 idx: Optional[jnp.ndarray], ledger: Ledger):
+    """Fused engine: the incremental sweep with every per-agent O(N*D) pass
+    either eliminated or fused (kernels.sweep; DESIGN.md §10).
+
+    Three fusions relative to `_sweep_incremental`, same math throughout:
+
+      * closed-form back-search — the probe direction is fixed, so the whole
+        step schedule is evaluated at once from one cached matvec
+        (kernels.sweep.ref.probe_etas_closed) instead of an O(D^2) SMW probe
+        per while_loop iteration;
+      * algebraic probe product — for alpha = 1 the row product R @ g_unit
+        equals (2 s_i / (m gnorm)) * (A0 @ s) on the CARRIED Gram, deleting
+        the probe-side O(N*D) pass entirely (the Sec 4.1 split keeps the
+        pass: its spliced diagonal breaks the identity);
+      * fused accept/commit — row-Gram, post-projection objective probe,
+        accept/reject and the rank-2 SMW update evaluate as one operation
+        (kernels.sweep commit) with accept folded into the coefficients, so
+        rejection is an exact no-op instead of a whole-state double-buffer.
+
+    `cfg.use_kernel` routes the two remaining O(N*D) passes through the
+    Pallas kernels: the alpha=1 probe pass (cross/p/||g|| in ONE pass over
+    the VMEM-resident residual tile) and the commit pass.  PolynomialFamily
+    projections use a once-per-sweep precomputed (phiT, Ginv) projector;
+    other families fall back to family.fit inside the loop.
+
+    Transport/ledger semantics are the incremental engine's, call for call:
+    gather + budget_setup at sweep start, one gated candidate-row broadcast
+    per agent update.  Minimax protection (cfg.delta > 0) delegates to the
+    incremental engine — its robust inner solve iterates on the full A0 and
+    has no closed-form schedule.
+    """
+    from repro.kernels.sweep import ops as sweep_ops
+    from repro.kernels.sweep import ref as sweep_ref
+
+    if cfg.delta > 0.0:
+        return _sweep_incremental(family, cfg, tp, params, f, xcols, y, idx,
+                                  ledger)
+
+    d, n = f.shape
+    m = n if idx is None else idx.shape[0]
+    uk = cfg.use_kernel
+    budget = tp.byte_budget
+
+    r0 = y[None, :] - f
+    if idx is None:
+        cs0 = covstate.build(tp.relay_rows(r0), use_kernel=uk)
+    else:
+        cs0 = covstate.build(tp.relay_rows(r0[:, idx]),
+                             exact_diag=tp.relay_scalars(jnp.sum(r0 * r0, axis=1) / n),
+                             use_kernel=uk)
+
+    step0 = cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype))
+    live, order, bcosts, ledger = transport_lib.budget_setup(
+        tp, cs0, ledger, m, idx is not None, step0=step0)
+
+    # steps[k] = step0 * backtrack^k via cumprod — the same left-associated
+    # multiply chain the incremental while_loop performs, so knife-edge step
+    # selections cannot drift on association order
+    steps = jnp.cumprod(jnp.concatenate(
+        [step0[None], jnp.full((cfg.max_probes - 1,), cfg.backtrack, f.dtype)]))
+    neg_inf = jnp.asarray(-jnp.inf, f.dtype)
+
+    from repro.agents.polynomial import PolynomialFamily  # agents -> jax only
+
+    if isinstance(family, PolynomialFamily):
+        phi_t, ginv = _poly_projector(xcols, family.degree, family.ridge)
+
+        def project(i, p_old, f_hat):
+            del p_old  # closed form
+            p_new = ginv[i] @ (phi_t[i] @ f_hat)
+            return p_new, p_new @ phi_t[i]
+    else:
+        def project(i, p_old, f_hat):
+            p_new = family.fit(p_old, xcols[i], f_hat)
+            return p_new, family.predict(p_new, xcols[i])
+
+    def update_agent(slot, carry):
+        params, f, rs, a0, m_inv, s, eta, led = carry
+        i = slot if order is None else order[slot]
+        eta0 = eta
+
+        # --- probe: gradient + the whole back-search schedule ---
+        if idx is None:
+            if uk:
+                etas, cross, _, gnorm = sweep_ops.probe_sweep(
+                    rs, m_inv, s, eta, i, steps, use_pallas=True)
+                g_unit = ((2.0 / m) * s[i] / gnorm) * cross
+            else:
+                g = gradient.cached_row_gradient(s, rs, i)
+                gnorm = jnp.linalg.norm(g) + 1e-30
+                g_unit = g / gnorm
+                # R @ g_unit = (2 s_i / (m gnorm)) * (A0 @ s): zero-pass probe
+                p = (2.0 * s[i] / (m * gnorm)) * (a0 @ s)
+                gg = jnp.vdot(g_unit, g_unit)
+                etas = sweep_ref.probe_etas_closed(
+                    m_inv, s, eta, i, steps, p,
+                    jnp.zeros((), f.dtype), gg / (2.0 * m))
+        else:
+            r_i = y - f[i]
+            g = (2.0 / n) * (s[i] * s[i]) * r_i
+            g = g.at[idx].add(
+                gradient.cached_row_gradient(s, rs, i, exclude_self=True))
+            gnorm = jnp.linalg.norm(g) + 1e-30
+            g_unit = g / gnorm
+            g_sub = g_unit[idx]
+            p = covstate.row_product(g_sub, rs, use_kernel=uk) / m
+            c1 = jnp.vdot(r_i, g_unit)          # exact-diagonal cross term
+            etas = sweep_ref.probe_etas_closed(
+                m_inv, s, eta, i, steps, p.at[i].set(0.0),
+                -c1 / n, 0.5 / jnp.asarray(n, f.dtype))
+
+        improved = etas > eta0
+        kstar = jnp.argmax(improved)            # first improving step wins
+        step = jnp.where(jnp.any(improved), steps[kstar],
+                         jnp.zeros((), f.dtype))
+
+        # --- projection onto H_i ---
+        f_hat = f[i] + step * g_unit
+        p_old = jax.tree.map(lambda t: t[i], params)
+        p_new, f_new = project(i, p_old, f_hat)
+
+        # --- fused accept/commit ---
+        r_new = y - f_new
+        r_new_sub = tp.relay_row(r_new if idx is None else r_new[idx], i)
+        delta = r_new_sub - rs[i]
+        if idx is None:
+            diag_keep = jnp.ones((), f.dtype)
+            diag_add = jnp.zeros((), f.dtype)
+        else:
+            ddiag_acc = tp.relay_scalar(jnp.vdot(r_new, r_new) / n, i) - a0[i, i]
+            diag_keep = jnp.zeros((), f.dtype)
+            diag_add = 0.5 * ddiag_acc
+        threshold = eta0 if cfg.accept_reject else neg_inf
+        if budget is not None:
+            can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
+                                                       budget)
+        else:
+            can_tx = jnp.bool_(True)
+        # uk=False calls the oracle directly (no nested-jit call boundary in
+        # the loop body — XLA fuses the commit chain into the surrounding
+        # program); uk=True pays the boundary to reach the Pallas kernel
+        if uk:
+            m_inv, s, u_eff, accept, _ = sweep_ops.commit_sweep(
+                rs, m_inv, s, eta, i, delta, diag_keep, diag_add, threshold,
+                can_tx, use_pallas=True)
+        else:
+            m_inv, s, u_eff, accept, _ = sweep_ref.commit_sweep_ref(
+                rs, m_inv, s, eta, i, delta, diag_keep, diag_add, threshold,
+                can_tx)
+        eta = jnp.sum(s)
+
+        p_i = jax.tree.map(lambda new, old: jnp.where(accept, new, old),
+                           p_new, p_old)
+        params = jax.tree.map(lambda t, u_: t.at[i].set(u_), params, p_i)
+        f = f.at[i].set(jnp.where(accept, f_new, f[i]))
+        a0 = a0.at[i, :].add(u_eff).at[:, i].add(u_eff)   # u_eff = 0 on reject
+        rs = rs.at[i].set(jnp.where(accept, r_new_sub, rs[i]))
+        return params, f, rs, a0, m_inv, s, eta, led
+
+    params, f, _, _, _, _, _, ledger = jax.lax.fori_loop(
+        0, d, update_agent,
+        (params, f, cs0.r_sub, cs0.a0, cs0.m_inv, cs0.s, cs0.eta_tilde,
+         ledger))
     return params, f, ledger
 
 

@@ -2,25 +2,29 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.runtime import resolve_interpret
 
 __all__ = ["flash_attention"]
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "use_pallas", "interpret", "bq", "bk"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    use_pallas: bool = False, interpret: bool = True,
+                    use_pallas: bool = False,
+                    interpret: Optional[bool] = None,
                     bq: int = 128, bk: int = 128) -> jnp.ndarray:
     """Public GQA attention op. Pads Sq/Skv to block multiples when needed.
 
     Padding correctness: padded KV rows sit at positions > every real q
     position, so the causal mask removes them; padded q rows produce garbage
-    rows that are sliced off.
+    rows that are sliced off.  `interpret=None` auto-selects compiled on TPU
+    / interpreter elsewhere (kernels.runtime.resolve_interpret).
     """
     if not use_pallas:
         return attention_ref(q, k, v, causal=causal, window=window)
@@ -37,5 +41,6 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         raise ValueError("non-causal flash path requires Skv % bk == 0 "
                          "(padded KV would leak into the softmax)")
     out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
-                                 bq=bq_, bk=bk_, interpret=interpret)
+                                 bq=bq_, bk=bk_,
+                                 interpret=resolve_interpret(interpret))
     return out[:, :sq]

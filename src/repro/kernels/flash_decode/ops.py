@@ -2,20 +2,27 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_decode.kernel import flash_decode_pallas
 from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.runtime import resolve_interpret
 
 __all__ = ["flash_decode"]
 
 
 @partial(jax.jit, static_argnames=("window", "use_pallas", "interpret", "bk"))
 def flash_decode(q, k, v, idx, *, window: int = 0, use_pallas: bool = False,
-                 interpret: bool = True, bk: int = 512) -> jnp.ndarray:
-    """q: (B,Hq,dh); k,v: (B,S,Hkv,dh); idx scalar fill position (inclusive)."""
+                 interpret: Optional[bool] = None,
+                 bk: int = 512) -> jnp.ndarray:
+    """q: (B,Hq,dh); k,v: (B,S,Hkv,dh); idx scalar fill position (inclusive).
+
+    `interpret=None` auto-selects compiled on TPU / interpreter elsewhere
+    (kernels.runtime.resolve_interpret).
+    """
     if not use_pallas:
         return decode_ref(q, k, v, idx, window=window)
     b, hq, dh = q.shape
@@ -28,5 +35,5 @@ def flash_decode(q, k, v, idx, *, window: int = 0, use_pallas: bool = False,
     qg = q.reshape(b, hkv, g, dh)
     idx_arr = jnp.asarray(idx, jnp.int32).reshape(1)
     out = flash_decode_pallas(qg, kp, vp, idx_arr, window=window, bk=bk_,
-                              interpret=interpret)
+                              interpret=resolve_interpret(interpret))
     return out.reshape(b, hq, dh)

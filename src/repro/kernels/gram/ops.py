@@ -1,7 +1,12 @@
 """jit'd public wrapper for the Gram kernel: padding, dtype, batching, fallback.
 
-TPU is the target; on CPU we validate through interpret=True (exercised in
-tests) but default to the ref oracle for speed inside ICOA itself.
+TPU is the target; on CPU we validate through the interpreter (exercised in
+tests) but default to the ref oracle for speed inside ICOA itself.  The
+compiled-vs-interpreter choice defaults to `interpret=None` = auto-select
+from the JAX backend via kernels.runtime.resolve_interpret (compiled Mosaic
+on TPU, interpreter elsewhere; REPRO_KERNEL_INTERPRET overrides process-wide)
+— previously these ops hardcoded interpret=True, which silently ran the
+Python interpreter on real TPUs.
 
 Batching: `pallas_call` has no built-in vmap rule, so the Pallas paths are
 wrapped in `jax.custom_batching.custom_vmap` — `jax.vmap(gram)` (the Monte-
@@ -14,6 +19,7 @@ from __future__ import annotations
 
 import functools
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +28,7 @@ from jax.custom_batching import custom_vmap
 from repro.kernels.gram.kernel import (gram_pallas, gram_pallas_batched,
                                        row_gram_pallas, row_gram_pallas_batched)
 from repro.kernels.gram.ref import gram_ref, row_gram_ref
+from repro.kernels.runtime import resolve_interpret
 
 __all__ = ["gram", "row_gram"]
 
@@ -96,13 +103,15 @@ def _row_gram_vmappable(block_n: int, interpret: bool):
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_n"))
-def gram(r: jnp.ndarray, use_pallas: bool = False, interpret: bool = True,
-         block_n: int = 2048) -> jnp.ndarray:
+def gram(r: jnp.ndarray, use_pallas: bool = False,
+         interpret: Optional[bool] = None, block_n: int = 2048) -> jnp.ndarray:
     """(D, N) -> (D, D) = R @ R^T with fp32 accumulation.
 
-    `use_pallas=True` routes through the TPU kernel (interpret=True executes
-    the kernel body in Python on CPU — correctness validation path).  Safe
-    under `jax.vmap` (any depth): batches lower to the batch-gridded kernel.
+    `use_pallas=True` routes through the TPU kernel; `interpret=None` (the
+    default) auto-selects compiled-vs-interpreter from the backend (compiled
+    on TPU, the Python interpreter as the CPU correctness-validation path —
+    kernels.runtime.resolve_interpret).  Safe under `jax.vmap` (any depth):
+    batches lower to the batch-gridded kernel.
     """
     d, n = r.shape
     if not use_pallas:
@@ -111,20 +120,22 @@ def gram(r: jnp.ndarray, use_pallas: bool = False, interpret: bool = True,
     dp = _pad_to(d, _LANE)
     np_ = _pad_to(n, bn)
     rp = jnp.zeros((dp, np_), r.dtype).at[:d, :n].set(r)
-    out = _gram_vmappable(bn, interpret)(rp)
+    out = _gram_vmappable(bn, resolve_interpret(interpret))(rp)
     return out[:d, :d]
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_n"))
 def row_gram(v: jnp.ndarray, r: jnp.ndarray, use_pallas: bool = False,
-             interpret: bool = True, block_n: int = 2048) -> jnp.ndarray:
+             interpret: Optional[bool] = None,
+             block_n: int = 2048) -> jnp.ndarray:
     """(N,), (D, N) -> (D,) = R @ v with fp32 accumulation.
 
     The incremental covariance engine's hot product: one residual-row delta
     against every agent's transmitted residuals (the rank-2 update of
     core.covstate). Padding/fallback mirror `gram`: `use_pallas=True` routes
-    through the TPU kernel (interpret=True executes on CPU for validation).
-    Safe under `jax.vmap` (any depth) via the batch-gridded kernel.
+    through the TPU kernel, `interpret=None` auto-selects compiled on TPU /
+    interpreter elsewhere (kernels.runtime.resolve_interpret).  Safe under
+    `jax.vmap` (any depth) via the batch-gridded kernel.
     """
     d, n = r.shape
     if not use_pallas:
@@ -134,5 +145,5 @@ def row_gram(v: jnp.ndarray, r: jnp.ndarray, use_pallas: bool = False,
     np_ = _pad_to(n, bn)
     rp = jnp.zeros((dp, np_), r.dtype).at[:d, :n].set(r)
     vp = jnp.zeros((8, np_), v.dtype).at[0, :n].set(v)
-    out = _row_gram_vmappable(bn, interpret)(rp, vp)
+    out = _row_gram_vmappable(bn, resolve_interpret(interpret))(rp, vp)
     return out[:d, 0]

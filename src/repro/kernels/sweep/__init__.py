@@ -1,0 +1,3 @@
+from repro.kernels.sweep.ops import commit_sweep, probe_sweep
+
+__all__ = ["probe_sweep", "commit_sweep"]

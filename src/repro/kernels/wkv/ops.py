@@ -2,10 +2,12 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.wkv.kernel import wkv_chunked_pallas
 from repro.kernels.wkv.ref import wkv_ref
 
@@ -14,9 +16,11 @@ __all__ = ["wkv_chunked"]
 
 @partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
 def wkv_chunked(r, k, v, w, u, *, chunk: int = 64, use_pallas: bool = False,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: Optional[bool] = None) -> jnp.ndarray:
     """RWKV-6 WKV over a full sequence. Pads S to a chunk multiple (padded
-    tail tokens have w=1, k=0 — they don't disturb the state)."""
+    tail tokens have w=1, k=0 — they don't disturb the state).
+    `interpret=None` auto-selects compiled on TPU / interpreter elsewhere
+    (kernels.runtime.resolve_interpret)."""
     if not use_pallas:
         return wkv_ref(r, k, v, w, u)
     b, s, h, dh = r.shape
@@ -25,5 +29,6 @@ def wkv_chunked(r, k, v, w, u, *, chunk: int = 64, use_pallas: bool = False,
     pad = ((0, 0), (0, s_p - s), (0, 0), (0, 0))
     rp, kp, vp = (jnp.pad(x, pad) for x in (r, k, v))
     wp = jnp.pad(w, pad, constant_values=1.0)
-    out = wkv_chunked_pallas(rp, kp, vp, wp, u, chunk=c, interpret=interpret)
+    out = wkv_chunked_pallas(rp, kp, vp, wp, u, chunk=c,
+                             interpret=resolve_interpret(interpret))
     return out[:, :s]

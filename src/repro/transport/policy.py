@@ -33,11 +33,12 @@ def require_budget_engine(transport, engine: str) -> None:
     """Trace-time guard shared by the local and shard_map sweeps.  The spec
     layer (api.ExperimentSpec.validate) raises its own SpecError twin naming
     the solver/engine fields — keep the two conditions in lockstep."""
-    if transport.byte_budget is not None and engine != "incremental":
+    if transport.byte_budget is not None and engine not in ("incremental",
+                                                            "fused"):
         raise ValueError(
             "byte_budget schedules gate row broadcasts off the carried "
             "CovState; the dense engine re-transmits everything by "
-            "construction — use engine='incremental'")
+            "construction — use engine='incremental' or 'fused'")
 
 
 def budget_setup(transport, cs0, ledger, m: int, split: bool, step0):
