@@ -1,18 +1,23 @@
 """Paper Fig. 3/4: unprotected vs protected ICOA under heavy compression.
 
-Runs the PAPER-FAITHFUL sweep (accept_reject=False) at alpha=100:
+Runs the PAPER-FAITHFUL sweep (accept_reject=False) at alpha=100 through the
+declarative api layer (one spec per curve, `api.fit` executes it):
   * delta = 0      -> training/test error oscillates (paper Fig. 3),
   * delta = d_opt  -> near-monotone convergence (paper Fig. 4).
 Derived metric: oscillation = std of successive test-error diffs, plus the
 full curves; the guard variant (accept_reject=True, beyond-paper) is shown
-for comparison.
+for comparison.  d_opt needs the non-cooperative residual spread s2max —
+recovered from the averaging baseline's fit (its final f IS the
+non-cooperative init: every agent fits y directly, no sweeps).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from repro.core import icoa, minimax
-from benchmarks.common import load_friedman, poly_family, row, timed
+from repro.core import minimax
+from benchmarks.common import row, timed
 
 
 def _osc(series):
@@ -20,13 +25,19 @@ def _osc(series):
 
 
 def run(n: int = 4000, sweeps: int = 10, alpha: float = 100.0) -> list[str]:
-    import jax
     import jax.numpy as jnp
 
-    fam = poly_family()
-    xc, y, xct, yt = load_friedman(1, n=n)
-    state0 = icoa.init_state(fam, jax.random.split(jax.random.PRNGKey(0), 5), xc, y)
-    s2max = float(jnp.max(jnp.mean((y[None] - state0.f) ** 2, axis=1)))
+    from repro import api
+
+    base = api.ExperimentSpec(
+        data=api.DataSpec(source="friedman1", n_train=n, n_test=n),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)))
+
+    # s2max = max per-agent MSE of the non-cooperative init (averaging's f)
+    avg = api.fit(dataclasses.replace(
+        base, solver=api.SolverSpec(name="averaging")))
+    y = avg.data.y
+    s2max = float(jnp.max(jnp.mean((y[None] - avg.f) ** 2, axis=1)))
     d_opt = minimax.delta_opt(alpha, n, s2max, t_correct=True)
 
     out = []
@@ -35,10 +46,11 @@ def run(n: int = 4000, sweeps: int = 10, alpha: float = 100.0) -> list[str]:
         ("fig4/protected_dopt", d_opt, False),
         ("fig4/protected_dopt_guarded", d_opt, True),
     ]:
-        cfg = icoa.ICOAConfig(n_sweeps=sweeps, alpha=alpha, delta=delta,
-                              accept_reject=guard)
-        (_, _, hist), t = timed(icoa.run, fam, cfg, xc, y, xct, yt)
-        tm = hist["test_mse"]
+        spec = dataclasses.replace(base, solver=api.SolverSpec(
+            name="icoa", n_sweeps=sweeps, alpha=alpha, delta=float(delta),
+            accept_reject=guard))
+        res, t = timed(api.fit, spec)
+        tm = res.history.test_mse
         out.append(row(label, t, f"final={tm[-1]:.4f};osc={_osc(tm):.4f}"))
         out.append(row(label + "_curve", 0, ";".join(f"{v:.4f}" for v in tm)))
     return out

@@ -23,8 +23,8 @@ from repro.analysis import recompile
 
 from benchmarks import (batch_bench, comm_cost, fig1_overtraining,
                         fig3_divergence, fig5_upper_bound, kernels_bench,
-                        roofline, sweep_engines, table1_algorithms,
-                        table2_minimax, transport_bench)
+                        roofline, serve_bench, sweep_engines,
+                        table1_algorithms, table2_minimax, transport_bench)
 
 SUITES = {
     "table1": table1_algorithms.run,     # paper Table 1
@@ -41,6 +41,8 @@ SUITES = {
                                          # (writes BENCH_batch.json)
     "transport": transport_bench.run,    # trade-off curves per topology x
                                          # codec (writes BENCH_transport.json)
+    "serve": serve_bench.run,            # online ingest/resweep/predict
+                                         # latency (writes BENCH_serve.json)
 }
 
 

@@ -1,0 +1,166 @@
+"""Online serving benchmark: ingest throughput, re-sweep cadence cost,
+predict latency percentiles (deliverable of the repro.stream tentpole).
+
+Drives the REAL production path — `stream.Ingestor` + `stream.PredictEngine`
+against a drifting ChunkSource — through a warmup phase (every program
+compiles: ingest, the saturated-window resweep, one predict program per
+bucket) and then a measured steady phase wrapped in the recompilation
+counter.  The steady phase must compile NOTHING: per-arrival retraces are
+the failure mode the static-shape ring buffer exists to prevent, so a
+nonzero steady-state compile count fails the suite (and the process-level
+REPRO_RECOMPILE_AUDIT file is budget-gated in CI on top).
+
+Writes ``BENCH_serve.json`` at the repo root:
+
+    ingest   instances/sec + us per chunk (steady, min-of-reps convention)
+    resweep  us per cadenced re-sweep + its amortized per-instance cost —
+             the price of tracking drift at this cadence
+    predict  per-bucket latency p50/p95/p99 us (per-request block_until_ready)
+
+``BENCH_SMOKE=1`` shrinks the stream to CI scale; the JSON records which
+mode produced it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.analysis import recompile
+from repro.api.specs import (AgentSpec, DataSpec, ExperimentSpec, SolverSpec,
+                             StreamSpec)
+from repro.stream import ChunkSource, PredictEngine
+from repro.stream.run import build_ingestor
+
+__all__ = ["run"]
+
+_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+_WINDOW = 2048
+_CHUNK = 64
+_RESWEEP_EVERY = 1024
+_BUCKETS = (1, 16, 128)
+
+
+def _percentiles(us: np.ndarray) -> dict:
+    return {"p50_us": round(float(np.percentile(us, 50)), 1),
+            "p95_us": round(float(np.percentile(us, 95)), 1),
+            "p99_us": round(float(np.percentile(us, 99)), 1),
+            "reps": int(us.size)}
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    steady_chunks = 32 if smoke else 256
+    predict_reps = 80 if smoke else 400
+
+    spec = StreamSpec(
+        experiment=ExperimentSpec(
+            data=DataSpec(source="cosine", n_train=_WINDOW, n_test=_WINDOW),
+            agent=AgentSpec(family="polynomial"),
+            solver=SolverSpec(name="icoa", engine="fused")),
+        window=_WINDOW, chunk=_CHUNK,
+        total_instances=_WINDOW * 4,      # schedule bound only (manual loop)
+        resweep_every=_RESWEEP_EVERY, sweeps_per_resweep=1,
+        drift_option="freq", drift_start=1.0, drift_end=1.4,
+        serve_buckets=_BUCKETS)
+    ing = build_ingestor(spec)
+    n_attrs = spec.experiment.data.resolved_n_attrs
+    total_chunks = 10_000_000 // _CHUNK   # schedule horizon for drift lerp
+    source = ChunkSource("cosine", _CHUNK, total_chunks,
+                         drift_option="freq", drift_start=1.0, drift_end=1.4)
+    engine = PredictEngine(ing.family, ing.groups, n_attrs, _BUCKETS)
+
+    # ---- warmup: saturate the ring and compile every steady-state program
+    state = ing.init_state()
+    t = 0
+    warm_chunks = 2 * _WINDOW // _CHUNK + 2 * _RESWEEP_EVERY // _CHUNK
+    for _ in range(warm_chunks):
+        x, yc = source(t)
+        state = ing.ingest(state, x, yc)
+        t += 1
+        if (t * _CHUNK) % _RESWEEP_EVERY == 0:
+            state, _rec = ing.resweep(state)
+    engine.update(state.params, state.weights)
+    engine.warmup()
+    req = {b: jnp.asarray(np.random.default_rng(0).uniform(size=(b, n_attrs))
+                          .astype(np.float32)) for b in _BUCKETS}
+    for b in _BUCKETS:
+        engine.predict(req[b]).block_until_ready()   # warm the eager pad/slice
+
+    # ---- steady phase: everything below must hit compiled programs only
+    with recompile.count_compilations() as log:
+        t0 = time.perf_counter()
+        resweep_us = []
+        for _ in range(steady_chunks):
+            x, yc = source(t)
+            state = ing.ingest(state, x, yc)
+            t += 1
+            if (t * _CHUNK) % _RESWEEP_EVERY == 0:
+                jax.block_until_ready(state.f)
+                r0 = time.perf_counter()
+                state, _rec = ing.resweep(state)
+                jax.block_until_ready(state.f)
+                resweep_us.append((time.perf_counter() - r0) * 1e6)
+                engine.update(state.params, state.weights)
+        jax.block_until_ready(state.f)
+        ingest_s = time.perf_counter() - t0
+
+        predict = {}
+        for b in _BUCKETS:
+            lat = np.empty(predict_reps)
+            for i in range(predict_reps):
+                p0 = time.perf_counter()
+                engine.predict(req[b]).block_until_ready()
+                lat[i] = (time.perf_counter() - p0) * 1e6
+            predict[str(b)] = _percentiles(lat)
+
+    steady_compiles = log.total
+    n_inst = steady_chunks * _CHUNK
+    resweep_total_s = sum(resweep_us) / 1e6
+    ingest_only_s = max(ingest_s - resweep_total_s, 1e-9)
+    inst_per_sec = n_inst / ingest_only_s
+    us_per_resweep = float(np.min(resweep_us)) if resweep_us else 0.0
+
+    payload = {
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "stream": {"window": _WINDOW, "chunk": _CHUNK,
+                   "resweep_every": _RESWEEP_EVERY,
+                   "engine": spec.experiment.solver.engine,
+                   "steady_instances": n_inst},
+        "ingest": {"instances_per_sec": round(inst_per_sec, 1),
+                   "us_per_chunk": round(ingest_only_s / steady_chunks * 1e6, 1)},
+        "resweep": {"us_per_resweep": round(us_per_resweep, 1),
+                    "count": len(resweep_us),
+                    "amortized_us_per_instance": round(
+                        us_per_resweep / _RESWEEP_EVERY, 3)},
+        "predict": predict,
+        "steady_compiles": steady_compiles,
+    }
+    with open(_OUT, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+    yield row("serve_ingest", payload["ingest"]["us_per_chunk"],
+              f"inst_per_sec={inst_per_sec:.0f}")
+    yield row("serve_resweep", us_per_resweep,
+              f"amortized_us_per_inst="
+              f"{payload['resweep']['amortized_us_per_instance']}")
+    for b in _BUCKETS:
+        p = predict[str(b)]
+        yield row(f"serve_predict_b{b}", p["p50_us"],
+                  f"p95={p['p95_us']};p99={p['p99_us']}")
+    yield row("serve_steady_compiles", 0, str(steady_compiles))
+    yield row("serve_json", 0, os.path.basename(_OUT))
+    if steady_compiles:
+        raise RuntimeError(
+            f"serving steady state recompiled {steady_compiles} time(s) — "
+            f"the ingest/predict path must be retrace-free (compiled names: "
+            f"{sorted(log.counts)})")

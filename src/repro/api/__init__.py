@@ -45,20 +45,27 @@ from repro.api.solvers import (SOLVERS, Solver, comm_floats_per_sweep,
                                register_solver, run_solver)
 from repro.api.specs import (AgentSpec, BackendSpec, DataSpec, Dataset,
                              ExperimentSpec, SolverSpec, SpecError,
-                             TransportSpec, clear_dataset_cache,
-                             spec_from_dict, spec_to_dict)
+                             StreamSpec, TransportSpec, clear_dataset_cache,
+                             spec_from_dict, spec_to_dict,
+                             stream_spec_from_dict, stream_spec_to_dict)
 from repro.api.sweep import grid_specs, spec_with, sweep, zip_specs
+
+# the online path lives in repro.stream but surfaces here (it consumes
+# api.specs, so this import must come after the spec imports above)
+from repro.stream.run import StreamResult, stream_fit
 
 __all__ = [
     "AgentSpec", "BackendSpec", "CODECS", "DataSpec", "Dataset",
     "ExperimentSpec", "History", "PARTITIONS", "Result", "ResultSet",
-    "SOLVERS", "SOURCES", "Solver", "SpecError", "TOPOLOGIES",
+    "SOLVERS", "SOURCES", "Solver", "SpecError", "StreamResult",
+    "StreamSpec", "TOPOLOGIES",
     "TransportSpec", "batch_fit", "build_distributed_runner",
     "build_runner", "clear_dataset_cache",
     "comm_floats_per_sweep", "fit", "grid_specs", "load", "register_codec",
     "register_partition", "register_solver", "register_source",
     "register_topology", "replace", "save_result",
-    "spec_from_dict", "spec_to_dict", "spec_with", "sweep", "trial_spec",
+    "spec_from_dict", "spec_to_dict", "spec_with", "stream_fit",
+    "stream_spec_from_dict", "stream_spec_to_dict", "sweep", "trial_spec",
     "zip_specs",
 ]
 

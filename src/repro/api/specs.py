@@ -36,7 +36,8 @@ from repro.transport import CODECS, POLICIES, TOPOLOGIES, TransportError
 
 __all__ = [
     "DataSpec", "AgentSpec", "SolverSpec", "BackendSpec", "TransportSpec",
-    "ExperimentSpec", "Dataset", "SpecError", "spec_to_dict", "spec_from_dict",
+    "ExperimentSpec", "StreamSpec", "Dataset", "SpecError", "spec_to_dict",
+    "spec_from_dict", "stream_spec_to_dict", "stream_spec_from_dict",
     "clear_dataset_cache",
 ]
 
@@ -394,6 +395,85 @@ class ExperimentSpec:
         return self.transport.resolve(self.data.resolved_n_agents)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """The online run description (DESIGN.md §11): data ARRIVES, predictions
+    are served while training continues, and the process survives restarts.
+
+    `experiment` supplies the scenario template (source, partition, agent
+    family, solver knobs, transport) — its `n_train`/`n_test` are ignored:
+    the stream's working set is the `window`-instance ring buffer, and
+    evaluation is prequential (each chunk is predicted BEFORE it is
+    ingested).  Instances arrive in `chunk`-sized micro-batches; every
+    `resweep_every` instances the cadenced re-sweep loop runs
+    `sweeps_per_resweep` ICOA sweeps (any engine, transport ledger metered)
+    on the warm window and emits a history record.  `drift_option` names a
+    source option whose value drifts linearly from `drift_start` to
+    `drift_end` over the stream — the non-stationarity the re-sweep cadence
+    trades against.  `checkpoint_every` (with `stream_fit`'s directory
+    argument) saves live state at instance intervals for elastic restarts.
+    """
+
+    experiment: ExperimentSpec = ExperimentSpec()
+    window: int = 2048            # ring-buffer capacity (static shapes)
+    chunk: int = 64               # arrival micro-batch size
+    total_instances: int = 100_000
+    resweep_every: int = 2048     # instances between cadenced re-sweeps
+    sweeps_per_resweep: int = 1
+    drift_option: Optional[str] = None   # source option that drifts over time
+    drift_start: float = 0.0
+    drift_end: float = 0.0
+    checkpoint_every: Optional[int] = None   # instances between state saves
+    serve_buckets: Tuple[int, ...] = (1, 16, 128)  # PredictEngine batch sizes
+
+    def validate(self) -> None:
+        self.experiment.validate()
+        sol = self.experiment.solver
+        if sol.name != "icoa":
+            raise SpecError(
+                f"streaming re-sweeps drive icoa on the warm window; solver "
+                f"{sol.name!r} has no sweep to cadence")
+        if sol.alpha != 1.0 or sol.delta != 0.0:
+            raise SpecError(
+                "the warm stream CovState tracks the full window residuals "
+                "(alpha=1) and serves closed-form live weights (delta=0); "
+                "Minimax Protection knobs are an offline-path feature")
+        if self.experiment.backend.name != "local":
+            raise SpecError("stream_fit runs the local backend only (the "
+                            "ingest/serve loop is a single-process engine)")
+        for name, val in (("window", self.window), ("chunk", self.chunk),
+                          ("total_instances", self.total_instances),
+                          ("resweep_every", self.resweep_every),
+                          ("sweeps_per_resweep", self.sweeps_per_resweep)):
+            if val < 1:
+                raise SpecError(f"need {name} >= 1, got {val}")
+        # chunk-divisibility keeps every compiled program's shapes static and
+        # a chunk from straddling the ring's wrap point (DESIGN.md §11.1)
+        for name, val in (("window", self.window),
+                          ("total_instances", self.total_instances),
+                          ("resweep_every", self.resweep_every)):
+            if val % self.chunk != 0:
+                raise SpecError(
+                    f"{name}={val} must be a multiple of chunk={self.chunk} "
+                    f"(static-shape ring arithmetic)")
+        if self.checkpoint_every is not None \
+                and self.checkpoint_every % self.chunk != 0:
+            raise SpecError(
+                f"checkpoint_every={self.checkpoint_every} must be a "
+                f"multiple of chunk={self.chunk}")
+        if not self.serve_buckets or \
+                any(b < 1 for b in self.serve_buckets):
+            raise SpecError("serve_buckets needs at least one positive "
+                            "batch size")
+        if self.drift_option is not None:
+            src = SOURCES[self.experiment.data.source]
+            if self.drift_option not in src.options:
+                raise SpecError(
+                    f"source {src.name!r} has no option "
+                    f"{self.drift_option!r} to drift; valid: "
+                    f"{sorted(src.options)}")
+
+
 # ------------------------------------------------------------- serialisation
 
 
@@ -461,3 +541,18 @@ def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
         transport=TransportSpec(**trans),
         seed=d.get("seed", 0),
     )
+
+
+def stream_spec_to_dict(spec: StreamSpec) -> Dict[str, Any]:
+    d = dataclasses.asdict(spec)
+    d["experiment"] = spec_to_dict(spec.experiment)
+    return d
+
+
+def stream_spec_from_dict(d: Dict[str, Any]) -> StreamSpec:
+    fields = _checked_fields(StreamSpec, d, "stream spec")
+    fields["experiment"] = spec_from_dict(fields.get("experiment", {}))
+    if "serve_buckets" in fields:
+        fields["serve_buckets"] = tuple(
+            int(b) for b in fields["serve_buckets"])
+    return StreamSpec(**fields)

@@ -25,6 +25,13 @@ carrier of everything a sweep needs:
 one.  The single O(N*D) product per update (delta row against every residual
 row) is served by the fused `row_gram` Pallas op when `use_kernel=True`.
 
+The streaming subsystem (repro.stream) moves along the OTHER axis: one
+*instance* (one column of r_sub) arrives or is evicted, so A0 = R R^T / m
+moves by the symmetric difference (c c^T - c' c'^T)/m — two rank-ONE
+Sherman–Morrison updates of the cached inverse action.  `replace_col`
+commits one such column swap in O(D^2); a zero outgoing column makes it a
+pure append (the ring buffer's warm-up regime).
+
 Numerical contract: m_inv/s drift by O(eps) per committed update, so callers
 refresh once per sweep (rebuilding the state at sweep start — see
 core.icoa/_sweep_incremental) to bound the drift; `refresh` re-solves in
@@ -32,6 +39,7 @@ place for long-lived states.  DESIGN.md §5 has the complexity table.
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple, Optional
 
 import jax
@@ -43,7 +51,7 @@ from repro.core.ensemble import _JITTER
 
 __all__ = ["CovState", "build", "refresh", "row_product", "row_update_vector",
            "eta_probe", "s_probe", "robust_eta_probe", "apply_inverse_update",
-           "apply_row_update", "replace_row"]
+           "apply_row_update", "replace_row", "replace_col"]
 
 
 class CovState(NamedTuple):
@@ -187,6 +195,49 @@ def apply_row_update(state: CovState, i, r_new_sub: jnp.ndarray,
     m_inv, s, eta = apply_inverse_update(state, i, u)
     return CovState(r_sub=state.r_sub.at[i].set(r_new_sub), a0=a0,
                     m_inv=m_inv, s=s, eta_tilde=eta)
+
+
+def _rank1_inverse_update(m_inv: jnp.ndarray, s: jnp.ndarray, v: jnp.ndarray,
+                          sign: float):
+    """(m_inv', s') after A0 += sign * v v^T — one Sherman–Morrison step.
+
+    m_inv is symmetric, so w = M v serves both sides of the correction and
+    s' = M' 1 follows from the same pieces without a fresh solve.  sign is a
+    STATIC +/-1 (update vs downdate), so it folds into the trace."""
+    w = m_inv @ v
+    denom = 1.0 + sign * jnp.vdot(v, w)
+    denom = sanitize.check_nonzero(
+        denom, "covstate._rank1_inverse_update: Sherman-Morrison pivot "
+        "(replace_col divides by it; an exactly-singular downdate means the "
+        "evicted instance carried the whole window's mass)")
+    coef = sign / denom
+    return m_inv - coef * jnp.outer(w, w), s - (coef * jnp.vdot(v, s)) * w
+
+
+def replace_col(state: CovState, j, c_new: jnp.ndarray) -> CovState:
+    """Replace instance column j of r_sub — the streaming ring buffer's
+    per-arrival commit (repro.stream), O(D^2) with NO pass over the window.
+
+    A0' = A0 + (c_new c_new^T - c_old c_old^T)/m: one rank-1 update for the
+    arriving instance, one rank-1 downdate for the evicted one.  A zero
+    outgoing column (the ring's empty-slot placeholder during warm-up) makes
+    the downdate an exact no-op, so append and evict-replace are the same
+    operation.  m_inv/s/eta_tilde drift by O(eps) per commit like the row
+    path; the stream's once-per-resweep `build` refresh bounds it.
+
+    Only the alpha = 1 state shape is supported: the Sec 4.1 spliced
+    diagonal tracks FULL-residual row norms that a window column swap cannot
+    see, so streaming states are built without `exact_diag`.
+    """
+    m = state.r_sub.shape[1]
+    inv_sqrt_m = 1.0 / math.sqrt(m)
+    c_old = state.r_sub[:, j]
+    m_inv, s = _rank1_inverse_update(state.m_inv, state.s,
+                                     c_new * inv_sqrt_m, 1.0)
+    m_inv, s = _rank1_inverse_update(m_inv, s, c_old * inv_sqrt_m, -1.0)
+    a0 = state.a0 + (jnp.outer(c_new, c_new) - jnp.outer(c_old, c_old)) / m
+    return CovState(r_sub=state.r_sub.at[:, j].set(c_new), a0=a0,
+                    m_inv=m_inv, s=s, eta_tilde=jnp.sum(s))
 
 
 def replace_row(state: CovState, i, r_new_sub: jnp.ndarray,

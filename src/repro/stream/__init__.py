@@ -1,0 +1,37 @@
+"""repro.stream — online ICOA: ingestion, cadenced re-sweeps, live serving.
+
+The offline repo answers "what does ICOA converge to on a frozen dataset";
+this subsystem answers the production question: data ARRIVES, predictions
+are served while training continues, and the process survives restarts
+(DESIGN.md §11).
+
+    from repro import api
+    from repro.stream import PredictEngine, stream_fit
+
+    spec = api.StreamSpec(experiment=api.ExperimentSpec(...),
+                          window=4096, chunk=64, resweep_every=2048)
+    result = stream_fit(spec)            # records: train/preq MSE, eta, bytes
+
+Three pillars:
+  * ingest  — `Ingestor` + `StreamState` (ingest.py): a static-shape ring
+    buffer over the instance axis, rank-1 Sherman–Morrison commits into the
+    warm CovState (core.covstate.replace_col), prequential scoring.
+  * serve   — `PredictEngine` (serve.py): pre-jitted bucketed batch predict
+    against the live combination weights; zero steady-state retraces.
+  * elastic — checkpoint/restore of the whole live state (checkpoint.py);
+    arrivals are pure in (seed, chunk), so restarts resume bit-identically.
+"""
+from __future__ import annotations
+
+from repro.stream.checkpoint import (latest_stream_step, restore_stream,
+                                     save_stream)
+from repro.stream.ingest import Ingestor, StreamState
+from repro.stream.run import StreamResult, build_ingestor, stream_fit
+from repro.stream.serve import PredictEngine
+from repro.stream.source import ChunkSource
+
+__all__ = [
+    "ChunkSource", "Ingestor", "PredictEngine", "StreamResult",
+    "StreamState", "build_ingestor", "latest_stream_step", "restore_stream",
+    "save_stream", "stream_fit",
+]

@@ -1,0 +1,42 @@
+"""Elastic restarts: checkpoint/restore of live stream state.
+
+A `StreamState` is one pytree, so checkpoint/io.py's host-gather npz
+discipline covers it whole — CovState rows, params, weights, ring cursor,
+PRNG carry, ledger, prequential accumulators.  The step number IS the ingest
+count, which is what makes resumption deterministic: the arrival stream is a
+pure function of (seed, chunk index) (stream.source.ChunkSource), so a
+restarted process replays from chunk `count / chunk` and every subsequent
+record — ledger bytes included — is bit-identical to the uninterrupted run
+(tests/test_stream.py round-trip).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.checkpoint import io as ckpt_io
+from repro.stream.ingest import StreamState
+
+__all__ = ["save_stream", "restore_stream", "latest_stream_step"]
+
+
+def save_stream(directory: str, state: StreamState) -> str:
+    """Save the live state at step = its own ingest count; returns the path."""
+    return ckpt_io.save_checkpoint(directory, int(state.count), state)
+
+
+def restore_stream(directory: str, like: StreamState,
+                   step: Optional[int] = None) -> Tuple[StreamState, int]:
+    """Restore into the structure of `like` (an Ingestor.init_state template,
+    whose dtypes are the current runtime's canonical ones).  `step=None`
+    picks the newest checkpoint.  Returns (state, step)."""
+    if step is None:
+        step = ckpt_io.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no stream checkpoint found in {directory!r}")
+    state = ckpt_io.restore_checkpoint(directory, step, like)
+    return state, step
+
+
+def latest_stream_step(directory: str) -> Optional[int]:
+    return ckpt_io.latest_step(directory)

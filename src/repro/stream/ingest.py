@@ -1,0 +1,278 @@
+"""Online ingestion: a static-shape ring buffer over the instance axis.
+
+The offline solver consumes a frozen (D, N) prediction matrix; here instances
+ARRIVE.  `StreamState` is the complete live state of an online ICOA process —
+one pytree, so it jits, donates, and checkpoints (repro.stream.checkpoint)
+as a unit.  `Ingestor` drives it with two operations:
+
+    ingest(state, x, y)   one `chunk`-sized micro-batch: prequential predict
+                          (score BEFORE the instances are seen — the stream's
+                          test metric), then commit each instance into the
+                          window ring via covstate.replace_col — O(D^2) per
+                          arrival, NO pass over the window — and refresh the
+                          live combination weights from the warm CovState.
+                          ONE pre-jitted program: shapes are static (window
+                          capacity W, chunk size), the cursor/count/live flag
+                          are traced scalars, so steady-state ingestion never
+                          recompiles (the recompile auditor gates this).
+
+    resweep(state)        the cadenced training step: slice the filled prefix
+                          of the window (pre-saturation it IS the arrival
+                          order; once saturated, always the full W — one
+                          program), run `sweeps_per_resweep` icoa.sweep calls
+                          on the warm params (any engine incl. "fused", the
+                          transport ledger metering re-sweep bytes), record a
+                          history entry, write the swept predictions back and
+                          rebuild the CovState — the once-per-resweep full
+                          solve that bounds rank-1 SMW drift.
+
+Key discipline mirrors core.icoa.run exactly: the FIRST resweep re-inits from
+`icoa.init_state` on the window (the offline non-cooperative warm start) with
+keys split from PRNGKey(seed), then `key, k1, k2 = split(key, 3)` per sweep —
+so a stream whose window holds exactly an offline training set reproduces
+`api.fit`'s history to f64 precision (tests/test_stream.py).
+
+Cold start: before the first resweep the CovState is built from an all-zero
+window (m_inv ~ I/jitter — numerically meaningless), so the state carries a
+`live` flag and serves UNIFORM weights until the first resweep's full rebuild;
+rank-1 commits still maintain a0/r_sub exactly throughout, which is all the
+rebuild reads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov_mod
+from repro.core import covstate, ensemble, icoa
+from repro.core.icoa import ICOAConfig
+from repro.transport import Ledger
+
+__all__ = ["StreamState", "Ingestor"]
+
+
+class StreamState(NamedTuple):
+    """The complete live state of one online ICOA process (a pytree).
+
+    Window arrays are fixed-capacity (`window` slots) so every compiled
+    program's shapes are static; `cursor`/`count` are traced scalars.  Slots
+    beyond `count` hold zeros — a zero residual column is inert in the Gram
+    and `replace_col`'s downdate of it is an exact no-op, so append and
+    evict-replace are one operation.
+    """
+
+    params: Any              # stacked agent params, leading dim D
+    xcols: jnp.ndarray       # (D, W, C) per-agent column views of the window
+    y: jnp.ndarray           # (W,) outcomes (zeros beyond the filled prefix)
+    f: jnp.ndarray           # (D, W) per-agent predictions on the window
+    cov: covstate.CovState   # warm covariance state, r_sub (D, W)
+    weights: jnp.ndarray     # (D,) live combination weights being SERVED
+    cursor: jnp.ndarray      # () int32: next ring slot to write
+    count: jnp.ndarray       # () int32: total instances ever ingested
+    live: jnp.ndarray        # () int32: 1 after the first resweep refresh
+    key: jax.Array           # sweep PRNG carry (core.icoa.run discipline)
+    ledger: Ledger           # cumulative measured re-sweep wire bytes
+    preq_sse: jnp.ndarray    # () prequential squared-error sum since record
+    preq_n: jnp.ndarray      # () int32 prequential instance count since record
+
+
+def _canon_float() -> jnp.dtype:
+    """The runtime's canonical float (f64 under jax_enable_x64, else f32)."""
+    return jnp.result_type(float)  # reprolint: disable=implicit-dtype
+
+
+class Ingestor:
+    """Absorbs (x, y) arrivals and keeps the per-agent CovState warm.
+
+    `groups` is the attribute partition (DataSpec.groups); arrivals come as
+    FULL-attribute rows `x : (chunk, n_attrs)` and are sliced into per-agent
+    column views here — the stream-side twin of Dataset's xcols stacking.
+    `cfg` must be an alpha=1, delta=0 ICOAConfig (StreamSpec.validate
+    enforces this at the spec layer): the window CovState tracks full-window
+    residuals and the live weights are the closed form s / sum(s).
+    """
+
+    def __init__(self, family, groups: Sequence[Sequence[int]],
+                 cfg: ICOAConfig, window: int, chunk: int, seed: int = 0,
+                 sweeps_per_resweep: int = 1):
+        if window % chunk != 0:
+            raise ValueError(f"window={window} must be a multiple of "
+                             f"chunk={chunk} (chunks must never straddle the "
+                             f"ring's wrap point)")
+        if cfg.alpha != 1.0 or cfg.delta != 0.0:
+            raise ValueError("streaming CovState is the alpha=1/delta=0 "
+                             "path (see StreamSpec.validate)")
+        self.family = family
+        self.groups = [list(g) for g in groups]
+        self.cfg = cfg
+        self.window = window
+        self.chunk = chunk
+        self.seed = seed
+        self.sweeps_per_resweep = sweeps_per_resweep
+        self._d = len(self.groups)
+        self._cols = len(self.groups[0])
+        self._gidx = [jnp.asarray(g, jnp.int32) for g in self.groups]
+        self._init_keys = jax.random.split(jax.random.PRNGKey(seed), self._d)
+        self._ingest = jax.jit(self._ingest_impl)
+        self._record = jax.jit(self._record_impl)
+        self._writeback = jax.jit(self._writeback_impl)
+
+    # ------------------------------------------------------------- lifecycle
+
+    def init_state(self) -> StreamState:
+        """Empty-window state — also the restore template (its dtypes are the
+        runtime's canonical ones, which is what checkpoints restore into)."""
+        dt = _canon_float()
+        d, w, c = self._d, self.window, self._cols
+        params = jax.tree.map(
+            lambda t: t.astype(dt),
+            jax.vmap(self.family.init)(self._init_keys))
+        xcols = jnp.zeros((d, w, c), dt)
+        y = jnp.zeros((w,), dt)
+        f = jax.vmap(self.family.predict)(params, xcols)
+        cov = covstate.build(y[None, :] - f)
+        return StreamState(
+            params=params, xcols=xcols, y=y, f=f, cov=cov,
+            weights=jnp.full((d,), 1.0 / d, dt),
+            cursor=jnp.asarray(0, jnp.int32),
+            count=jnp.asarray(0, jnp.int32),
+            live=jnp.asarray(0, jnp.int32),
+            key=jax.random.PRNGKey(self.seed + 1),
+            ledger=Ledger.empty(),
+            preq_sse=jnp.zeros((), dt),
+            preq_n=jnp.asarray(0, jnp.int32))
+
+    # --------------------------------------------------------------- ingest
+
+    def slice_groups(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(n, n_attrs) -> (D, n, C) per-agent column views."""
+        return jnp.stack([x[:, g] for g in self._gidx])
+
+    def _ingest_impl(self, state: StreamState, x: jnp.ndarray,
+                     y_chunk: jnp.ndarray) -> StreamState:
+        w = self.window
+        xc = self.slice_groups(x)                              # (D, chunk, C)
+        preds = jax.vmap(self.family.predict)(state.params, xc)
+        # prequential: score with the weights being SERVED, before ingesting
+        yhat = ensemble.combine(state.weights, preds)
+        preq_sse = state.preq_sse + jnp.sum((y_chunk - yhat) ** 2)
+        preq_n = state.preq_n + jnp.asarray(self.chunk, jnp.int32)
+
+        def commit(t, carry):
+            cov, xcols, yw, f = carry
+            j = jnp.remainder(state.cursor + t, w)
+            cov = covstate.replace_col(cov, j, y_chunk[t] - preds[:, t])
+            xcols = xcols.at[:, j, :].set(xc[:, t, :])
+            yw = yw.at[j].set(y_chunk[t])
+            f = f.at[:, j].set(preds[:, t])
+            return cov, xcols, yw, f
+
+        cov, xcols, yw, f = jax.lax.fori_loop(
+            0, self.chunk, commit, (state.cov, state.xcols, state.y, state.f))
+
+        # live weights off the warm solve state; uniform until the first
+        # resweep's rebuild makes the solve state meaningful
+        w_live = cov.s / jnp.sum(cov.s)
+        uniform = jnp.full((self._d,), 1.0 / self._d, state.weights.dtype)
+        weights = jnp.where(state.live > 0, w_live.astype(state.weights.dtype),
+                            uniform)
+        return state._replace(
+            xcols=xcols, y=yw, f=f, cov=cov, weights=weights,
+            cursor=jnp.remainder(state.cursor + self.chunk, w)
+            .astype(jnp.int32),
+            count=state.count + self.chunk,
+            preq_sse=preq_sse, preq_n=preq_n)
+
+    def ingest(self, state: StreamState, x: jnp.ndarray,
+               y_chunk: jnp.ndarray) -> StreamState:
+        """Absorb one (chunk, n_attrs)/(chunk,) micro-batch — one pre-jitted
+        program, no steady-state recompiles."""
+        return self._ingest(state, x, y_chunk)
+
+    # -------------------------------------------------------------- resweep
+
+    def _record_impl(self, params, f, yw, k2):
+        """Post-sweep record: weights, window train MSE, eta_tilde — the
+        jitted twin of core.icoa.run's record() (alpha=1: k2 is unused by
+        _weights but threaded for discipline parity)."""
+        w = icoa._weights(f, yw, self.cfg, k2)
+        train = jnp.mean((yw - ensemble.combine(w, f)) ** 2)
+        et = ensemble.eta_tilde(cov_mod.gram(yw[None, :] - f,
+                                             use_kernel=self.cfg.use_kernel))
+        return w, train, et
+
+    def _writeback_impl(self, f_full, y_full, f_new):
+        """Write swept predictions back into the window and rebuild the
+        CovState — the once-per-resweep full solve bounding rank-1 drift.
+        `filled` is f_new's static trailing dim, so post-saturation this is
+        ONE compiled program."""
+        filled = f_new.shape[1]
+        f_out = f_full.at[:, :filled].set(f_new)
+        cov = covstate.build(y_full[None, :] - f_out)
+        return f_out, cov
+
+    def resweep(self, state: StreamState) -> Tuple[StreamState, Dict[str, Any]]:
+        """Run the cadenced training step on the warm window; returns the
+        refreshed state and one history record (host floats).
+
+        Host-driven by design: the cadence itself is the stream_fit loop's
+        schedule, and `filled` (min(count, window)) must be a static shape.
+        Pre-saturation each distinct filled value compiles once; once the
+        ring saturates, filled == window forever — one program.
+        """
+        count = int(state.count)
+        if count == 0:
+            raise ValueError("resweep on an empty window — ingest first")
+        filled = min(count, self.window)
+        xw = state.xcols[:, :filled]
+        yw = state.y[:filled]
+
+        if not bool(int(state.live)):
+            # first resweep: the offline non-cooperative warm start, same key
+            # discipline as icoa.run — records from here match api.fit
+            st0 = icoa.init_state(self.family, self._init_keys, xw, yw)
+            params, f = st0.params, st0.f
+            key = jax.random.PRNGKey(self.seed + 1)
+        else:
+            params, f = state.params, state.f[:, :filled]
+            key = state.key
+
+        ledger = state.ledger
+        bytes0 = int(ledger.spent)
+        etas: List[float] = []
+        eta_prev = float("inf")
+        w = train = None                 # sweeps_per_resweep >= 1 sets them
+        for _ in range(self.sweeps_per_resweep):
+            key, k1, k2 = jax.random.split(key, 3)
+            params, f, _, ledger = icoa.sweep(self.family, self.cfg, params,
+                                              f, xw, yw, k1, ledger)
+            w, train, et = self._record(params, f, yw, k2)
+            eta_now = float(1.0 / et)
+            etas.append(eta_now)
+            if abs(eta_prev - eta_now) < self.cfg.eps:
+                break
+            eta_prev = eta_now
+
+        f_full, cov = self._writeback(state.f, state.y, f)
+        preq_n = int(state.preq_n)
+        record = {
+            "count": count,
+            "filled": filled,
+            "train_mse": float(train),
+            "preq_mse": (float(state.preq_sse) / preq_n if preq_n
+                         else float("nan")),
+            "preq_n": preq_n,
+            "eta": etas[-1],
+            "etas": etas,
+            "sweeps": len(etas),
+            "bytes": int(ledger.spent) - bytes0,
+            "bytes_total": int(ledger.spent),
+        }
+        state = state._replace(
+            params=params, f=f_full, cov=cov, weights=w, key=key,
+            ledger=ledger, live=jnp.asarray(1, jnp.int32),
+            preq_sse=jnp.zeros_like(state.preq_sse),
+            preq_n=jnp.zeros_like(state.preq_n))
+        return state, record

@@ -1,0 +1,148 @@
+"""stream_fit: the online run driver (spec in, StreamResult out).
+
+The loop is deliberately plain host Python — generate chunk t (pure in
+(seed, t)), `ingest` it (one pre-jitted program), every `resweep_every`
+instances run the cadenced `resweep` and record, every `checkpoint_every`
+instances save the live state.  All schedule arithmetic is host-side ints;
+everything numeric happens inside the Ingestor's compiled programs, so the
+steady state executes exactly two programs per cadence period (ingest x
+(resweep_every/chunk), resweep x 1) and compiles nothing.
+
+Elasticity: pass `checkpoint_dir` (and set spec.checkpoint_every) to save;
+pass `resume=True` to continue from the newest checkpoint — the arrival
+stream replays from chunk count/chunk, and because chunks are pure in
+(seed, t) the resumed history (ledger bytes included) is bit-identical to
+the uninterrupted run's.
+
+Serving: pass a `stream.PredictEngine` as `engine` and the loop publishes
+fresh (params, weights) to it after every ingest and resweep — request
+threads call `engine.predict()` concurrently against whatever state was
+last published (examples/stream_demo.py drives exactly this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.api.specs import StreamSpec
+from repro.stream.checkpoint import restore_stream, save_stream
+from repro.stream.ingest import Ingestor, StreamState
+from repro.stream.serve import PredictEngine
+from repro.stream.source import ChunkSource
+
+__all__ = ["StreamResult", "stream_fit", "build_ingestor"]
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """One online run: the per-resweep history plus the final live state."""
+
+    spec: StreamSpec
+    family: Any
+    params: Any                 # final stacked agent params
+    weights: jnp.ndarray        # final live combination weights
+    records: List[Dict[str, Any]]   # one dict per resweep (see Ingestor)
+    state: StreamState          # final live state (checkpointable)
+
+    @property
+    def counts(self) -> List[int]:
+        return [r["count"] for r in self.records]
+
+    @property
+    def train_mse(self) -> List[float]:
+        """Windowed train MSE at each resweep record."""
+        return [r["train_mse"] for r in self.records]
+
+    @property
+    def test_mse(self) -> List[float]:
+        """Prequential (predict-then-ingest) MSE per cadence period — the
+        stream's out-of-sample metric: every instance was scored BEFORE the
+        model saw it."""
+        return [r["preq_mse"] for r in self.records]
+
+    @property
+    def eta(self) -> List[float]:
+        return [r["eta"] for r in self.records]
+
+    @property
+    def total_bytes(self) -> int:
+        """Cumulative measured re-sweep wire bytes (transport ledger)."""
+        return self.records[-1]["bytes_total"] if self.records else 0
+
+
+def build_ingestor(spec: StreamSpec) -> Ingestor:
+    """Resolve the spec's family/partition/transport into a live Ingestor."""
+    spec.validate()
+    exp = spec.experiment
+    groups = exp.data.groups
+    cfg = exp.solver.icoa_config(exp.transport.resolve(len(groups)),
+                                 checks=exp.backend.checks)
+    # the ledger-capacity guard reads cfg.n_sweeps as the run's worst case;
+    # for a stream that is every sweep of every cadence period
+    total_sweeps = max(1, (spec.total_instances // spec.resweep_every)
+                       * spec.sweeps_per_resweep)
+    cfg = dataclasses.replace(cfg, n_sweeps=total_sweeps)
+    family = exp.agent.resolve(n_cols=len(groups[0]))
+    return Ingestor(family, groups, cfg, spec.window, spec.chunk,
+                    seed=exp.seed,
+                    sweeps_per_resweep=spec.sweeps_per_resweep)
+
+
+def stream_fit(spec: StreamSpec, *, checkpoint_dir: Optional[str] = None,
+               resume: bool = False,
+               engine: Optional[PredictEngine] = None) -> StreamResult:
+    """Drive `spec.total_instances` arrivals through the online ICOA loop.
+
+    Returns a StreamResult whose records are the per-resweep history
+    (windowed train MSE, prequential test MSE, eta, measured re-sweep
+    bytes).  `resume=True` restores the newest checkpoint in
+    `checkpoint_dir` and continues the stream from there — subsequent
+    records are bit-identical to the uninterrupted run's.
+    """
+    spec.validate()
+    exp = spec.experiment
+    ing = build_ingestor(spec)
+    total_chunks = spec.total_instances // spec.chunk
+    source = ChunkSource(
+        exp.data.source, spec.chunk, total_chunks, seed=exp.data.seed,
+        noise=exp.data.noise, n_attrs=exp.data.n_attrs,
+        options=exp.data.source_options, drift_option=spec.drift_option,
+        drift_start=spec.drift_start, drift_end=spec.drift_end)
+
+    state = ing.init_state()
+    start_chunk = 0
+    if resume:
+        if checkpoint_dir is None:
+            raise ValueError("resume=True needs a checkpoint_dir to "
+                             "restore from")
+        state, step = restore_stream(checkpoint_dir, like=state)
+        if step % spec.chunk != 0:
+            raise ValueError(
+                f"checkpoint step {step} is not chunk-aligned "
+                f"(chunk={spec.chunk}) — was it saved by a different spec?")
+        start_chunk = step // spec.chunk
+
+    if engine is not None:
+        engine.update(state.params, state.weights)
+        engine.warmup()
+
+    records: List[Dict[str, Any]] = []
+    for t in range(start_chunk, total_chunks):
+        x, yc = source(t)
+        state = ing.ingest(state, x, yc)
+        if engine is not None:
+            engine.update(state.params, state.weights)
+        count = (t + 1) * spec.chunk
+        if count % spec.resweep_every == 0:
+            state, rec = ing.resweep(state)
+            records.append(rec)
+            if engine is not None:
+                engine.update(state.params, state.weights)
+        if (checkpoint_dir is not None and spec.checkpoint_every is not None
+                and count % spec.checkpoint_every == 0):
+            save_stream(checkpoint_dir, state)
+
+    return StreamResult(spec=spec, family=ing.family, params=state.params,
+                        weights=state.weights, records=records, state=state)
