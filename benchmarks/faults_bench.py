@@ -1,0 +1,165 @@
+"""Chaos harness: test MSE + retry byte-overhead under injected faults
+(ISSUE 9 acceptance).
+
+For every drop-rate × topology × resilience-policy cell the suite runs the
+Fig. 1 scenario through `api.fit` with a seeded `FaultSpec` and records the
+final test MSE plus the measured-ledger byte overhead versus that
+topology's zero-fault baseline (retransmits charge MORE, give-ups charge
+LESS — both are real wire effects).  On top of the grid: a crash-degraded
+cell (one agent permanently down, survivors re-weighted), a rejoin cell
+(warm rebuild), a replay-identity check (same FaultSpec seed twice must
+reproduce histories AND ledger bytes bit-for-bit), and a
+convergence-under-failure study against the paper's eq. 28 upper bound.
+
+Writes ``BENCH_faults.json`` at the repo root (CI uploads it per PR).  At
+full scale the suite FAILS (raises) if replay identity breaks or if the
+faulted runs stop converging (final test MSE above the eq. 28 bound).
+``BENCH_SMOKE=1`` shrinks the scenario to CI scale, where the noisy
+convergence headline is only recorded, not enforced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+
+from benchmarks.common import row
+from repro import api
+
+__all__ = ["run"]
+
+_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
+_SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+_DROP_RATES = (0.05, 0.2, 0.5)
+_TOPOLOGIES = ("full", "ring")
+# the resilience-policy axis: give up after the first lost broadcast vs
+# retransmit up to 3 times (every attempt charged to the ledger)
+_POLICIES = (("skip", 0), ("retry", 3))
+_FAULT_SEED = 5
+
+
+def _base_spec(n_sweeps: int) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_train=400 if _SMOKE else 2000,
+                          n_test=400 if _SMOKE else 2000, seed=0),
+        agent=api.AgentSpec(family="polynomial", options=(("degree", 4),)),
+        solver=api.SolverSpec(n_sweeps=n_sweeps, eps=0.0))
+
+
+def _cell(res: api.Result) -> dict:
+    return {
+        "test_mse": [float(v) for v in res.history.test_mse],
+        "eta": [float(v) for v in res.history.eta],
+        "bytes": [float(v) for v in res.history.bytes_transmitted],
+        "total_bytes": float(res.history.total_bytes),
+        "final_test_mse": float(res.history.test_mse[-1]),
+    }
+
+
+def run() -> list:
+    n_sweeps = 3 if _SMOKE else 8
+    base = _base_spec(n_sweeps)
+
+    grid = {}
+    baselines = {}
+    for topo in _TOPOLOGIES:
+        clean = api.fit(dataclasses.replace(
+            base, transport=api.TransportSpec(topology=topo)))
+        baselines[topo] = _cell(clean)
+        for policy, retries in _POLICIES:
+            for drop in _DROP_RATES:
+                faults = api.FaultSpec(seed=_FAULT_SEED, drop_rate=drop,
+                                       max_retries=retries)
+                res = api.fit(dataclasses.replace(
+                    base, transport=api.TransportSpec(topology=topo),
+                    faults=faults))
+                cell = _cell(res)
+                cell["byte_overhead"] = (cell["total_bytes"]
+                                         / baselines[topo]["total_bytes"]
+                                         - 1.0)
+                grid[f"{topo}/{policy}/drop{drop}"] = cell
+                yield row(f"faults/{topo}_{policy}_drop{drop}_mse", 0,
+                          f"{cell['final_test_mse']:.4e}")
+                yield row(f"faults/{topo}_{policy}_drop{drop}_overhead", 0,
+                          f"{100.0 * cell['byte_overhead']:+.1f}%")
+
+    # replay identity (acceptance): same FaultSpec seed => identical
+    # histories AND identical measured ledger bytes, retransmits included
+    probe = dataclasses.replace(
+        base, faults=api.FaultSpec(seed=_FAULT_SEED, drop_rate=0.3,
+                                   corrupt_rate=0.2, straggle_rate=0.1,
+                                   max_retries=2))
+    ra, rb = api.fit(probe), api.fit(probe)
+    replay_ok = (ra.history.eta == rb.history.eta
+                 and ra.history.test_mse == rb.history.test_mse
+                 and ra.history.bytes_transmitted
+                 == rb.history.bytes_transmitted)
+    yield row("faults/replay_identical", 0, str(replay_ok))
+
+    # crash + rejoin: one agent down from sweep 1 (forever / until mid-run)
+    crash = api.fit(dataclasses.replace(
+        base, faults=api.FaultSpec(crash=((1, 1, -1),))))
+    rejoin = api.fit(dataclasses.replace(
+        base, faults=api.FaultSpec(crash=((1, 1, max(2, n_sweeps // 2)),))))
+    degraded = {
+        "crash_final_test_mse": float(crash.history.test_mse[-1]),
+        "crash_dead_weight": float(crash.weights[1]),
+        "rejoin_final_test_mse": float(rejoin.history.test_mse[-1]),
+        "rejoin_recovered_weight": float(rejoin.weights[1]),
+        "clean_final_test_mse": baselines["full"]["final_test_mse"],
+    }
+    yield row("faults/crash_degraded_mse", 0,
+              f"{degraded['crash_final_test_mse']:.4e}")
+    yield row("faults/rejoin_mse", 0,
+              f"{degraded['rejoin_final_test_mse']:.4e}")
+
+    # convergence under failure vs the paper's eq. 28 bound: even with every
+    # fault mechanism active the cooperative run must land UNDER the
+    # pre-cooperation high-probability bound (the faults only slow the
+    # descent, they never break it)
+    chaos = api.fit(probe)
+    bound = float(chaos.minimax_upper_bound())
+    converged = chaos.history.test_mse[-1] <= bound
+    convergence = {
+        "final_test_mse": float(chaos.history.test_mse[-1]),
+        "eq28_upper_bound": bound,
+        "under_bound": bool(converged),
+        "test_mse_curve": [float(v) for v in chaos.history.test_mse],
+    }
+    yield row("faults/eq28_bound", 0, f"{bound:.4e}")
+    yield row("faults/under_eq28_bound", 0, str(converged))
+
+    payload = {
+        "scenario": "friedman1",
+        "n_train": base.data.n_train,
+        "n_sweeps": n_sweeps,
+        "fault_seed": _FAULT_SEED,
+        "smoke": _SMOKE,
+        "backend": jax.default_backend(),
+        "drop_rates": list(_DROP_RATES),
+        "topologies": list(_TOPOLOGIES),
+        "policies": [p for p, _ in _POLICIES],
+        "zero_fault_baselines": baselines,
+        "grid": grid,
+        "degraded": degraded,
+        "replay_identical": bool(replay_ok),
+        "convergence_under_failure": convergence,
+    }
+    with open(_OUT, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    yield row("faults/json", 0, os.path.basename(_OUT))
+
+    if not replay_ok:
+        raise AssertionError(
+            "fault replay identity broke: the same FaultSpec seed must "
+            "reproduce histories and ledger bytes bit-for-bit "
+            "(see BENCH_faults.json)")
+    if not _SMOKE and not converged:
+        raise AssertionError(
+            f"convergence under failure regressed: final test MSE "
+            f"{convergence['final_test_mse']:.4e} sits above the eq. 28 "
+            f"bound {bound:.4e} (see BENCH_faults.json)")

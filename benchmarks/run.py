@@ -21,9 +21,9 @@ import traceback
 
 from repro.analysis import recompile
 
-from benchmarks import (batch_bench, comm_cost, fig1_overtraining,
-                        fig3_divergence, fig5_upper_bound, kernels_bench,
-                        roofline, serve_bench, sweep_engines,
+from benchmarks import (batch_bench, comm_cost, faults_bench,
+                        fig1_overtraining, fig3_divergence, fig5_upper_bound,
+                        kernels_bench, roofline, serve_bench, sweep_engines,
                         table1_algorithms, table2_minimax, transport_bench)
 
 SUITES = {
@@ -43,6 +43,9 @@ SUITES = {
                                          # codec (writes BENCH_transport.json)
     "serve": serve_bench.run,            # online ingest/resweep/predict
                                          # latency (writes BENCH_serve.json)
+    "faults": faults_bench.run,          # chaos harness: MSE + retry byte
+                                         # overhead vs drop x topology x
+                                         # policy (writes BENCH_faults.json)
 }
 
 

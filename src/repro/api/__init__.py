@@ -49,6 +49,7 @@ from repro.api.specs import (AgentSpec, BackendSpec, DataSpec, Dataset,
                              spec_from_dict, spec_to_dict,
                              stream_spec_from_dict, stream_spec_to_dict)
 from repro.api.sweep import grid_specs, spec_with, sweep, zip_specs
+from repro.faults import FaultError, FaultSpec
 
 # the online path lives in repro.stream but surfaces here (it consumes
 # api.specs, so this import must come after the spec imports above)
@@ -56,7 +57,8 @@ from repro.stream.run import StreamResult, stream_fit
 
 __all__ = [
     "AgentSpec", "BackendSpec", "CODECS", "DataSpec", "Dataset",
-    "ExperimentSpec", "History", "PARTITIONS", "Result", "ResultSet",
+    "ExperimentSpec", "FaultError", "FaultSpec", "History", "PARTITIONS",
+    "Result", "ResultSet",
     "SOLVERS", "SOURCES", "Solver", "SpecError", "StreamResult",
     "StreamSpec", "TOPOLOGIES",
     "TransportSpec", "batch_fit", "build_distributed_runner",

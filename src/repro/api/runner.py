@@ -127,7 +127,7 @@ def build_runner(spec: ExperimentSpec) -> Callable[[Any], Dict[str, Any]]:
 
         if solver.name == "icoa":
             params, f, weights, hist = icoa.run_scan(
-                family, solver.icoa_config(spec.transport.resolve(d),
+                family, solver.icoa_config(spec.resolved_transport(),
                                            checks=spec.backend.checks),
                 xcols, ytr, xcols_test, yte, seed)
         elif solver.name == "averaging":
@@ -175,7 +175,7 @@ def build_distributed_runner(spec: ExperimentSpec,
 
         if solver.name == "icoa":
             params, f, weights, hist = distributed.run_scan_distributed(
-                family, solver.icoa_config(spec.transport.resolve(d),
+                family, solver.icoa_config(spec.resolved_transport(),
                                            checks=spec.backend.checks),
                 xcols, ytr, xcols_test, yte, seed, mesh)
         elif solver.name == "averaging":

@@ -124,7 +124,7 @@ def _mesh(spec: ExperimentSpec, d: int):
 @register_solver("icoa")
 def _fit_icoa(spec: ExperimentSpec, data: Dataset, family) -> Result:
     d, n = data.xcols.shape[0], data.y.shape[0]
-    cfg = spec.solver.icoa_config(spec.transport.resolve(d),
+    cfg = spec.solver.icoa_config(spec.resolved_transport(),
                                   checks=spec.backend.checks)
     if spec.backend.name == "shard_map":
         params, weights, hist = distributed.run_distributed(

@@ -29,6 +29,7 @@ from repro import transport as transport_lib
 from repro.agents import FAMILIES
 from repro.analysis import sanitize
 from repro.core.icoa import ICOAConfig
+from repro.faults import FaultError, FaultSpec
 from repro.data import sources as data_sources
 from repro.data.partition import PARTITIONS, make_groups, validate_partition
 from repro.data.sources import SOURCES
@@ -373,6 +374,8 @@ class ExperimentSpec:
     solver: SolverSpec = SolverSpec()
     backend: BackendSpec = BackendSpec()
     transport: TransportSpec = TransportSpec()
+    faults: FaultSpec = FaultSpec()   # seeded failure model (repro.faults);
+    #                                   the default injects nothing
     seed: int = 0                   # solver seed (init + subsample streams)
 
     def validate(self) -> None:
@@ -390,9 +393,42 @@ class ExperimentSpec:
                     "engine='incremental' or 'fused' (averaging transmits "
                     "nothing; the refit ring and the dense oracle have no "
                     "per-row broadcast to skip)")
+        try:
+            self.faults.validate()
+        except FaultError as e:
+            raise SpecError(f"faults: {e}") from None
+        if not self.faults.is_inert:
+            # keep in lockstep with faults.require_fault_engine (the trace-
+            # time twin): the spec layer names the offending FIELDS
+            if (self.solver.name != "icoa"
+                    or self.solver.engine not in ("incremental", "fused")):
+                raise SpecError(
+                    "fault injection gates per-row broadcasts inside the "
+                    "carried-CovState sweep — it needs solver 'icoa' with "
+                    "engine='incremental' or 'fused' (averaging transmits "
+                    "nothing; the refit ring and the dense oracle re-transmit "
+                    "everything by construction)")
+            if self.faults.crash and self.solver.delta > 0.0:
+                raise SpecError(
+                    "faults.crash re-weights the ensemble over the survivors "
+                    "(a masked closed form); the minimax-protected weights "
+                    "(delta > 0) have no masked closed form — run crash "
+                    "schedules with delta=0")
+            n_agents = self.data.resolved_n_agents
+            for agent, _, _ in self.faults.crash:
+                if agent >= n_agents:
+                    raise SpecError(
+                        f"faults.crash names agent {agent} but the run has "
+                        f"{n_agents} agents")
 
     def resolved_transport(self) -> transport_lib.Transport:
-        return self.transport.resolve(self.data.resolved_n_agents)
+        """The run's Transport with the spec's FaultSpec riding on it (an
+        inert spec resolves to the plain reliable-wire Transport, so the
+        zero-fault program stays bit-identical to the pre-fault solver)."""
+        tp = self.transport.resolve(self.data.resolved_n_agents)
+        if self.faults.is_inert:
+            return tp
+        return dataclasses.replace(tp, faults=self.faults)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -512,25 +548,47 @@ def _pairs(value, where: str) -> Tuple[Tuple[str, Any], ...]:
     return tuple(out)
 
 
+def _crash_entries(value, where: str) -> Tuple[Tuple[int, int, int], ...]:
+    # JSON turns the crash tuple-of-triples into list-of-lists; restore it.
+    # Same contract as _pairs: malformed entries name their exact key path
+    if isinstance(value, (str, bytes)) or not hasattr(value, "__iter__"):
+        raise SpecError(
+            f"{where} must be a sequence of [agent, down_round, rejoin_round] "
+            f"triples (got {value!r})")
+    out = []
+    for pos, item in enumerate(value):
+        try:
+            agent, down, rejoin = item
+            out.append((int(agent), int(down), int(rejoin)))
+        except (TypeError, ValueError):
+            raise SpecError(
+                f"{where}[{pos}] is not an [agent, down_round, rejoin_round] "
+                f"integer triple (got {item!r})") from None
+    return tuple(out)
+
+
 def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
     top_unknown = sorted(set(d) - {"data", "agent", "solver", "backend",
-                                   "transport", "seed"})
+                                   "transport", "faults", "seed"})
     if top_unknown:
         raise SpecError(
             f"unrecognised section(s) in spec dict: {top_unknown}; "
-            f"valid: ['agent', 'backend', 'data', 'seed', 'solver', "
-            f"'transport']")
+            f"valid: ['agent', 'backend', 'data', 'faults', 'seed', "
+            f"'solver', 'transport']")
     data = _checked_fields(DataSpec, d.get("data", {}), "spec['data']")
     for key in ("source_options", "partition_options"):
         data[key] = _pairs(data.get(key, ()), f"spec['data'][{key!r}]")
     agent = _checked_fields(AgentSpec, d.get("agent", {}), "spec['agent']")
     agent["options"] = _pairs(agent.get("options", ()),
                               "spec['agent']['options']")
-    # "transport" is optional for pre-transport saves: they load as default
+    # "transport"/"faults" are optional for older saves: load as defaults
     trans = _checked_fields(TransportSpec, d.get("transport", {}),
                             "spec['transport']")
     for key in ("topology_options", "codec_options"):
         trans[key] = _pairs(trans.get(key, ()), f"spec['transport'][{key!r}]")
+    faults = _checked_fields(FaultSpec, d.get("faults", {}), "spec['faults']")
+    faults["crash"] = _crash_entries(faults.get("crash", ()),
+                                     "spec['faults']['crash']")
     return ExperimentSpec(
         data=DataSpec(**data),
         agent=AgentSpec(**agent),
@@ -539,6 +597,7 @@ def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
         backend=BackendSpec(**_checked_fields(BackendSpec, d.get("backend", {}),
                                               "spec['backend']")),
         transport=TransportSpec(**trans),
+        faults=FaultSpec(**faults),
         seed=d.get("seed", 0),
     )
 

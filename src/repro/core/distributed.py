@@ -37,6 +37,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import transport as transport_lib
 from repro.analysis import sanitize
+from repro.faults import inject as faults_inject
+from repro.faults import trace as faults_trace
 from repro.core import baselines
 from repro.core import covariance as cov
 from repro.core import covstate
@@ -93,8 +95,9 @@ def _gathered_a0(f_sub_all: jnp.ndarray, y_sub: jnp.ndarray, diag_all: jnp.ndarr
 
 
 def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
-                key, ledger):
+                key, ledger, round_):
     """Runs INSIDE shard_map. Shapes (local): xcol (1,N,C); f_local (1,N)."""
+    del round_   # fault injection requires the carried-CovState body below
     d = jax.lax.psum(1, "agents")
     me = jax.lax.axis_index("agents")
     n = y.shape[0]
@@ -204,7 +207,7 @@ def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
 
 
 def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
-                            params_local, key, ledger):
+                            params_local, key, ledger, round_):
     """Runs INSIDE shard_map: the rank-2 CovState engine.
 
     Identical math to `_sweep_body` (same gradient via the cached closed form,
@@ -220,10 +223,18 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
     payload bytes, and a byte budget gates per-agent broadcasts exactly as
     the local engine does (core.icoa._sweep_incremental) — the gating/order
     state is replicated D x D algebra, so every device takes the same branch.
+
+    Fault semantics (tp.faults set) mirror core.icoa._sweep_incremental —
+    alive-only gather charge, seeded drop/straggle gating with retransmit
+    bytes, wire-view corruption of the delivered candidate row, survivors-only
+    final weights under a crash schedule — with `round_` (replicated int32)
+    as the event coordinate, so both backends replay the SAME fault trace.
     """
     d = jax.lax.psum(1, "agents")
     me = jax.lax.axis_index("agents")
     n = y.shape[0]
+    fl = tp.faults
+    rnd = jnp.asarray(round_, jnp.int32)
 
     if cfg.alpha > 1.0:
         key, ksub = jax.random.split(key)
@@ -235,8 +246,9 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
     protected = cfg.delta > 0.0
     uk = cfg.use_kernel
     budget = tp.byte_budget
-    ledger_mod.ensure_sweep_capacity(tp, cfg.n_sweeps, m, split=split,
-                                     row_wise=True, ledger=ledger)
+    ledger_mod.ensure_sweep_capacity(
+        tp, cfg.n_sweeps, m, split=split, row_wise=True, ledger=ledger,
+        retries=0 if fl is None else fl.max_retries)
 
     # the engine's ONLY full gather: residual rows + local variances, once
     f_sub_all = jax.lax.all_gather(f_local[0][idx], "agents")       # (D, m)
@@ -252,9 +264,18 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
     # f32, vs sqrt(n) in the local engine — mirroring the pre-existing step0
     # conventions of the two sweep bodies, so a budgeted greedy order can
     # differ across backends when alpha > 1 (as their trajectories already do)
-    live, order, bcosts, ledger = transport_lib.budget_setup(
-        tp, cs0, ledger, m, split,
-        step0=cfg.step0 * jnp.sqrt(jnp.asarray(m, jnp.float32)))
+    if fl is not None:
+        # static topology size, NOT the psum'd d: alive_at needs a shape
+        alive = faults_trace.alive_at(fl, tp.topology.n_agents, rnd)
+        live, order, bcosts, ledger = faults_inject.budget_setup(
+            tp, cs0, ledger, m, split,
+            step0=cfg.step0 * jnp.sqrt(jnp.asarray(m, jnp.float32)),
+            alive=alive)
+    else:
+        alive = None
+        live, order, bcosts, ledger = transport_lib.budget_setup(
+            tp, cs0, ledger, m, split,
+            step0=cfg.step0 * jnp.sqrt(jnp.asarray(m, jnp.float32)))
 
     def robust_probe(cs, i, u):
         return covstate.robust_eta_probe(cs, i, u, cfg.delta,
@@ -318,6 +339,10 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
         cand_diag = tp.relay_scalar(jax.lax.psum(
             jnp.where(me == i, jnp.mean((y - new_f) ** 2), 0.0), "agents"), i)
         r_cand = tp.relay_row(y[idx] - cand_sub, i)
+        if fl is not None:
+            # wire-view corruption (see core.icoa._sweep_incremental): the
+            # delivered row may arrive flipped; the owner's f stays clean
+            r_cand = faults_trace.corrupt(fl, r_cand, rnd, i)
         delta_sub = r_cand - cs.r_sub[i]
         # accept is judged with the diag held fixed (exactly as the dense body
         # scores eta_post against the OLD diag_all); the commit then moves it
@@ -328,7 +353,11 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
             else covstate.eta_probe(cs, i, u_eval)
         accept = obj_post > eta0
 
-        if budget is not None:
+        if fl is not None:
+            ok, led = faults_inject.gate_broadcast(fl, led, live, bcosts, i,
+                                                   alive[i], rnd, budget)
+            accept = jnp.logical_and(accept, ok)
+        elif budget is not None:
             can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
                                                        budget)
             accept = jnp.logical_and(accept, can_tx)
@@ -356,6 +385,10 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
     if protected:
         w = minimax.robust_weights(cs.a0, cfg.delta, steps=cfg.minimax_steps,
                                    lr=cfg.minimax_lr)
+    elif fl is not None and fl.crash:
+        # survivors-only combination: dead agents' stale rows stay in the
+        # CovState but are masked out of the served ensemble (DESIGN.md §12)
+        w = ensemble.surviving_weights(cs.a0, alive)
     else:
         w = ensemble.optimal_weights(cs.a0)
     return f_local, params_local, w, ledger
@@ -367,6 +400,7 @@ def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
     d = mesh.devices.size
     tp = (cfg.transport or transport_lib.default_transport(d)).validate_for(d)
     transport_lib.require_budget_engine(tp, cfg.engine)
+    faults_inject.require_fault_engine(tp, cfg)
     # "fused" is a single-host engine (its fusion lives inside one device's
     # agent loop); across the mesh its row-wise schedule IS the incremental
     # body, so it maps there rather than to the dense all-gather body
@@ -375,19 +409,20 @@ def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
     body = partial(body_fn, cfg, tp, family)
     sm = _shmap(
         body, mesh,
-        in_specs=(P("agents"), P(), P("agents"), P("agents"), P(), P()),
+        in_specs=(P("agents"), P(), P("agents"), P("agents"), P(), P(), P()),
         out_specs=(P("agents"), P("agents"), P(), P()),
     )
 
-    def sweep(xcols, y, f, params, key, ledger):
+    def sweep(xcols, y, f, params, key, ledger, round_=None):
         # the scope is open while shard_map traces the body, so the relay /
         # covstate check sites inside it insert iff cfg.checks says so
         # (checkify discharges through shard_map).  Every check on this
         # backend must live INSIDE the body: in-body errors leave the shmap
         # with a per-device axis, and checkify cannot merge them with a
         # scalar check added out here (shape-mismatched error select)
+        rnd = jnp.asarray(0 if round_ is None else round_, jnp.int32)
         with sanitize.sanitize_scope(cfg.checks):
-            f, params, w, ledger = sm(xcols, y, f, params, key, ledger)
+            f, params, w, ledger = sm(xcols, y, f, params, key, ledger, rnd)
         return f, params, w, ledger
 
     return sweep
@@ -434,9 +469,10 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
 
     record(params, f, w)
     eta_prev = float("inf")   # same rule as core.icoa.run: compare post-sweep etas
-    for _ in range(cfg.n_sweeps):
+    for r in range(cfg.n_sweeps):
         key, k1 = jax.random.split(key)
-        f, params, w, led2 = sweep_fn(xcols, y, f, params, k1, ledger)
+        f, params, w, led2 = sweep_fn(xcols, y, f, params, k1, ledger,
+                                      jnp.asarray(r, jnp.int32))
         hist["bytes"].append(float(led2.spent - ledger.spent))
         ledger = led2
         record(params, f, w)
@@ -487,15 +523,16 @@ def run_scan_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray,
     tr0, te0, et0 = record(params, f, w0)
     key0 = jax.random.PRNGKey(seed + 1)
 
-    def step(carry, _):
+    def step(carry, r):
         params, f, key, led = carry
         key, k1 = jax.random.split(key)
-        f, params, w, led2 = sweep_fn(xcols, y, f, params, k1, led)
+        f, params, w, led2 = sweep_fn(xcols, y, f, params, k1, led, r)
         tr, te, et = record(params, f, w)
         return (params, f, key, led2), (w, tr, te, et, led2.spent - led.spent)
 
     (params, f, _, _), (ws, trs, tes, ets, bts) = jax.lax.scan(
-        step, (params, f, key0, Ledger.empty()), None, length=cfg.n_sweeps)
+        step, (params, f, key0, Ledger.empty()),
+        jnp.arange(cfg.n_sweeps))
     hist = {
         "train_mse": jnp.concatenate([tr0[None], trs]),
         "test_mse": jnp.concatenate([te0[None], tes]),

@@ -64,9 +64,19 @@ def surviving_weights(a_mat: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
 
     alive: (D,) boolean. Dead agents get weight exactly 0; the rest solve the
     constrained problem restricted to the principal submatrix.
+
+    Edge cases (jittable — no data-dependent branching):
+      * single survivor: the masked solve collapses to the 1x1 problem and
+        the result is exactly one-hot on the survivor;
+      * degenerate solve (the masked system returns a ~zero-sum solution,
+        e.g. a corrupted A): fall back to uniform over the survivors;
+      * zero survivors: there is no ensemble to weight, but a serving layer
+        must keep answering — return uniform over ALL agents (degraded
+        serving semantics, DESIGN.md §12) rather than 0/0.
     """
     d = a_mat.shape[0]
     alive_f = alive.astype(a_mat.dtype)
+    n_alive = jnp.sum(alive_f)
     # replace dead rows/cols by identity so the solve stays well-posed, then
     # zero dead entries of the solution and renormalise
     mask2 = alive_f[:, None] * alive_f[None, :]
@@ -74,4 +84,11 @@ def surviving_weights(a_mat: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
     s = jnp.linalg.solve(a_masked + _JITTER * jnp.eye(d, dtype=a_mat.dtype),
                          alive_f)
     s = s * alive_f
-    return s / jnp.maximum(jnp.sum(s), 1e-30)
+    tot = jnp.sum(s)
+    solvable = jnp.abs(tot) > jnp.asarray(jnp.finfo(a_mat.dtype).tiny,
+                                          a_mat.dtype)
+    w = jnp.where(solvable,
+                  s / jnp.where(solvable, tot, jnp.ones_like(tot)),
+                  alive_f / jnp.maximum(n_alive, jnp.ones_like(n_alive)))
+    return jnp.where(n_alive > 0.0, w,
+                     jnp.full((d,), 1.0 / d, a_mat.dtype))

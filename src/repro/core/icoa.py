@@ -48,6 +48,8 @@ import jax.numpy as jnp
 
 from repro import transport as transport_lib
 from repro.analysis import sanitize
+from repro.faults import inject as faults_inject
+from repro.faults import trace as faults_trace
 from repro.core import covariance as cov
 from repro.core import covstate
 from repro.core import ensemble
@@ -131,7 +133,7 @@ def init_state(family, keys: jax.Array, xcols: jnp.ndarray, y: jnp.ndarray) -> I
 @partial(jax.jit, static_argnames=("family", "cfg"))
 def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
           xcols: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
-          ledger: Optional[Ledger] = None):
+          ledger: Optional[Ledger] = None, round_=None):
     """One full round-robin sweep over all D agents (jit-compiled).
 
     Unprotected (delta == 0): maximise eta_tilde = 1^T A^{-1} 1 (paper Sec 3.1).
@@ -159,27 +161,36 @@ def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
     the check sites in covstate/transport insert iff the static cfg says so —
     callers with checks="raise" must run under `analysis.checked` (icoa.run
     and api.batch_fit do this) to functionalize them.
+
+    `round_` (optional traced int32) is the global sweep index — the fault
+    layer's event coordinate: with `cfg.transport.faults` set, every drop /
+    corruption / straggle / crash event is a pure function of
+    (FaultSpec.seed, round_, agent), so runs replay bit-identically
+    (repro.faults).  Without faults the round is ignored.
     """
     with sanitize.sanitize_scope(cfg.checks):
         params, f, key, ledger = _sweep_impl(family, cfg, params, f, xcols,
-                                             y, key, ledger)
+                                             y, key, ledger, round_)
         f = sanitize.check_finite(f, "icoa.sweep: prediction matrix f")
     return params, f, key, ledger
 
 
 def _sweep_impl(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
                 xcols: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
-                ledger: Optional[Ledger]):
+                ledger: Optional[Ledger], round_=None):
     d, n = f.shape
     tp = (cfg.transport or transport_lib.default_transport(d)).validate_for(d)
     transport_lib.require_budget_engine(tp, cfg.engine)
+    faults_inject.require_fault_engine(tp, cfg)
     if ledger is None:
         ledger = Ledger.empty()
     m = cov.subsample_size(n, cfg.alpha) if cfg.alpha > 1.0 else n
     ledger_mod.ensure_sweep_capacity(
         tp, cfg.n_sweeps, m, split=cfg.alpha > 1.0,
         row_wise=cfg.engine in ("incremental", "fused") or cfg.row_broadcast,
-        ledger=ledger)
+        ledger=ledger,
+        retries=0 if tp.faults is None else tp.faults.max_retries)
+    rnd = jnp.asarray(0 if round_ is None else round_, jnp.int32)
     idx = None
     if cfg.alpha > 1.0:
         key, sub = jax.random.split(key)
@@ -187,10 +198,10 @@ def _sweep_impl(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
 
     if cfg.engine == "incremental":
         params, f, ledger = _sweep_incremental(
-            family, cfg, tp, params, f, xcols, y, idx, ledger)
+            family, cfg, tp, params, f, xcols, y, idx, ledger, rnd)
     elif cfg.engine == "fused":
         params, f, ledger = _sweep_fused(
-            family, cfg, tp, params, f, xcols, y, idx, ledger)
+            family, cfg, tp, params, f, xcols, y, idx, ledger, rnd)
     else:
         params, f, ledger = _sweep_dense(
             family, cfg, tp, params, f, xcols, y, idx, ledger)
@@ -284,7 +295,7 @@ def _sweep_dense(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
 
 def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
                        xcols: jnp.ndarray, y: jnp.ndarray,
-                       idx: Optional[jnp.ndarray], ledger: Ledger):
+                       idx: Optional[jnp.ndarray], ledger: Ledger, rnd=None):
     """Rank-2 CovState engine: O(N*D + D^2) per objective probe.
 
     The CovState is rebuilt from f at sweep start — that full solve IS the
@@ -301,6 +312,13 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
     gated (an unaffordable broadcast skips the agent's commit — nobody
     received the row) and `greedy_eta` reorders the round-robin by the
     cached-probe priority (transport.policy.greedy_order).
+
+    Fault semantics (tp.faults set; repro.faults, DESIGN.md §12): the gather
+    charges only the alive agents' floods, each candidate broadcast rolls
+    the seeded drop/straggle trace — undelivered or skipped rows forfeit
+    the commit exactly like an unaffordable one, with retransmit attempts
+    charged to the ledger — and delivered rows may arrive bit-flipped
+    (faults.trace.corrupt) before they touch the shared CovState.
     """
     d, n = f.shape
     m = n if idx is None else idx.shape[0]
@@ -308,6 +326,7 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
     protected = cfg.delta > 0.0
     split = idx is not None
     budget = tp.byte_budget
+    fl = tp.faults
 
     r0 = y[None, :] - f
     if idx is None:
@@ -319,9 +338,16 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
 
     # the local engine's back-search starts at step0*sqrt(n), so the greedy
     # priority probes at that scale too (transport.policy.budget_setup)
-    live, order, bcosts, ledger = transport_lib.budget_setup(
-        tp, cs0, ledger, m, split,
-        step0=cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype)))
+    if fl is not None:
+        alive = faults_trace.alive_at(fl, d, rnd)
+        live, order, bcosts, ledger = faults_inject.budget_setup(
+            tp, cs0, ledger, m, split,
+            step0=cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype)), alive=alive)
+    else:
+        alive = None
+        live, order, bcosts, ledger = transport_lib.budget_setup(
+            tp, cs0, ledger, m, split,
+            step0=cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype)))
 
     def robust_probe(cs, i, u):
         return covstate.robust_eta_probe(cs, i, u, cfg.delta,
@@ -399,6 +425,11 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
         # codecs), and under a byte budget its broadcast must be affordable.
         r_new = y - f_new
         r_new_sub = tp.relay_row(r_new if idx is None else r_new[idx], i)
+        if fl is not None:
+            # corruption strikes the delivered wire view only: the agent's
+            # own params/f stay clean (it knows what it sent) — the shared
+            # covariance state is what absorbs the flipped payload
+            r_new_sub = faults_trace.corrupt(fl, r_new_sub, rnd, i)
         if idx is None:
             ddiag_acc = None
         else:
@@ -412,7 +443,11 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
         else:
             accept = jnp.bool_(True)
 
-        if budget is not None:
+        if fl is not None:
+            ok, led = faults_inject.gate_broadcast(fl, led, live, bcosts, i,
+                                                   alive[i], rnd, budget)
+            accept = jnp.logical_and(accept, ok)
+        elif budget is not None:
             can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
                                                        budget)
             accept = jnp.logical_and(accept, can_tx)
@@ -472,7 +507,7 @@ def _poly_projector(xcols: jnp.ndarray, degree: int, ridge: float):
 
 def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
                  xcols: jnp.ndarray, y: jnp.ndarray,
-                 idx: Optional[jnp.ndarray], ledger: Ledger):
+                 idx: Optional[jnp.ndarray], ledger: Ledger, rnd=None):
     """Fused engine: the incremental sweep with every per-agent O(N*D) pass
     either eliminated or fused (kernels.sweep; DESIGN.md §10).
 
@@ -508,12 +543,13 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
 
     if cfg.delta > 0.0:
         return _sweep_incremental(family, cfg, tp, params, f, xcols, y, idx,
-                                  ledger)
+                                  ledger, rnd)
 
     d, n = f.shape
     m = n if idx is None else idx.shape[0]
     uk = cfg.use_kernel
     budget = tp.byte_budget
+    fl = tp.faults
 
     r0 = y[None, :] - f
     if idx is None:
@@ -524,8 +560,14 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
                              use_kernel=uk)
 
     step0 = cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype))
-    live, order, bcosts, ledger = transport_lib.budget_setup(
-        tp, cs0, ledger, m, idx is not None, step0=step0)
+    if fl is not None:
+        alive = faults_trace.alive_at(fl, d, rnd)
+        live, order, bcosts, ledger = faults_inject.budget_setup(
+            tp, cs0, ledger, m, idx is not None, step0=step0, alive=alive)
+    else:
+        alive = None
+        live, order, bcosts, ledger = transport_lib.budget_setup(
+            tp, cs0, ledger, m, idx is not None, step0=step0)
 
     # steps[k] = step0 * backtrack^k via cumprod — the same left-associated
     # multiply chain the incremental while_loop performs, so knife-edge step
@@ -596,6 +638,10 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
         # --- fused accept/commit ---
         r_new = y - f_new
         r_new_sub = tp.relay_row(r_new if idx is None else r_new[idx], i)
+        if fl is not None:
+            # wire-view corruption (see _sweep_incremental): the delivered
+            # row may arrive flipped; the sender's own state stays clean
+            r_new_sub = faults_trace.corrupt(fl, r_new_sub, rnd, i)
         delta = r_new_sub - rs[i]
         if idx is None:
             diag_keep = jnp.ones((), f.dtype)
@@ -605,7 +651,13 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
             diag_keep = jnp.zeros((), f.dtype)
             diag_add = 0.5 * ddiag_acc
         threshold = eta0 if cfg.accept_reject else neg_inf
-        if budget is not None:
+        if fl is not None:
+            # drop/straggle/crash fold into the commit's can_tx coefficient:
+            # an undelivered candidate is an exact no-op commit
+            can_tx, led = faults_inject.gate_broadcast(fl, led, live, bcosts,
+                                                       i, alive[i], rnd,
+                                                       budget)
+        elif budget is not None:
             can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
                                                        budget)
         else:
@@ -638,8 +690,16 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
     return params, f, ledger
 
 
-def _weights(f: jnp.ndarray, y: jnp.ndarray, cfg: ICOAConfig, key: jax.Array) -> jnp.ndarray:
-    """Ensemble weights from what the agents can see (robust iff protected)."""
+def _weights(f: jnp.ndarray, y: jnp.ndarray, cfg: ICOAConfig, key: jax.Array,
+             alive: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Ensemble weights from what the agents can see (robust iff protected).
+
+    `alive` (static-shaped (D,) bool, crash-schedule runs only) restricts the
+    combination to the surviving agents: dead agents get weight exactly 0 and
+    the optimum is re-solved over the survivors (ensemble.surviving_weights).
+    Crashes and minimax protection are mutually exclusive
+    (faults.require_fault_engine), so the robust branch never sees `alive`.
+    """
     r = y[None, :] - f
     if cfg.alpha > 1.0:
         a0 = cov.subsampled_covariance(key, r, cfg.alpha, use_kernel=cfg.use_kernel)
@@ -647,6 +707,8 @@ def _weights(f: jnp.ndarray, y: jnp.ndarray, cfg: ICOAConfig, key: jax.Array) ->
         a0 = cov.gram(r, use_kernel=cfg.use_kernel)
     if cfg.delta > 0.0:
         return minimax.robust_weights(a0, cfg.delta, steps=cfg.minimax_steps, lr=cfg.minimax_lr)
+    if alive is not None:
+        return ensemble.surviving_weights(a0, alive)
     return ensemble.optimal_weights(a0)
 
 
@@ -696,9 +758,11 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     seed = jnp.asarray(seed)
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
     state0 = init_state(family, keys, xcols, y)
+    fl = cfg.transport.faults if cfg.transport is not None else None
+    crashes = fl is not None and bool(fl.crash)
 
-    def record(params, f, k):
-        w = _weights(f, y, cfg, k)
+    def record(params, f, k, alive=None):
+        w = _weights(f, y, cfg, k, alive)
         train = jnp.mean((y - ensemble.combine(w, f)) ** 2)
         pred = ensemble_predict(family, params, w, xcols_test)
         test = jnp.mean((y_test - pred) ** 2)
@@ -710,16 +774,18 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     key0 = jax.random.PRNGKey(seed + 1)
     w0, tr0, te0, et0 = record(state0.params, state0.f, key0)
 
-    def step(carry, _):
+    def step(carry, r):
         params, f, key, led = carry
         key, k1, k2 = jax.random.split(key, 3)
-        params, f, _, led2 = sweep(family, cfg, params, f, xcols, y, k1, led)
-        w, tr, te, et = record(params, f, k2)
+        params, f, _, led2 = sweep(family, cfg, params, f, xcols, y, k1, led,
+                                   r)
+        alive = faults_trace.alive_at(fl, d, r) if crashes else None
+        w, tr, te, et = record(params, f, k2, alive)
         return (params, f, key, led2), (w, tr, te, et, led2.spent - led.spent)
 
     (params, f, _, _), (ws, trs, tes, ets, bts) = jax.lax.scan(
-        step, (state0.params, state0.f, key0, Ledger.empty()), None,
-        length=cfg.n_sweeps)
+        step, (state0.params, state0.f, key0, Ledger.empty()),
+        jnp.arange(cfg.n_sweeps))
     hist = {
         "train_mse": jnp.concatenate([tr0[None], trs]),
         "test_mse": jnp.concatenate([te0[None], tes]),
@@ -745,13 +811,15 @@ def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     d = xcols.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(seed), d)
     state = init_state(family, keys, xcols, y)
+    fl = cfg.transport.faults if cfg.transport is not None else None
+    crashes = fl is not None and bool(fl.crash)
     hist = {"train_mse": [], "test_mse": [], "eta": [], "bytes": [0.0]}
     eta_prev = jnp.inf
     key = jax.random.PRNGKey(seed + 1)
     ledger = Ledger.empty()
 
-    def record(params, f, key):
-        w = _weights(f, y, cfg, key)
+    def record(params, f, key, alive=None):
+        w = _weights(f, y, cfg, key, alive)
         train_mse = jnp.mean((y - ensemble.combine(w, f)) ** 2)
         hist["train_mse"].append(float(train_mse))
         if xcols_test is not None:
@@ -761,14 +829,15 @@ def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
         return w
 
     weights = record(state.params, state.f, key)
-    for _ in range(cfg.n_sweeps):
+    for r in range(cfg.n_sweeps):
         key, k1, k2 = jax.random.split(key, 3)
         params, f, _, led2 = sweep_fn(state.params, state.f, xcols, y, k1,
-                                      ledger)
+                                      ledger, jnp.asarray(r, jnp.int32))
         hist["bytes"].append(float(led2.spent - ledger.spent))
         ledger = led2
         state = ICOAState(params=params, f=f, key=key)
-        weights = record(params, f, k2)
+        alive = faults_trace.alive_at(fl, d, r) if crashes else None
+        weights = record(params, f, k2, alive)
         eta_now = hist["eta"][-1]
         if abs(eta_prev - eta_now) < cfg.eps:
             break

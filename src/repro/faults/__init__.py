@@ -1,0 +1,26 @@
+"""repro.faults — deterministic fault injection and resilience policies.
+
+Three pieces (DESIGN.md §12):
+
+    spec     `FaultSpec`, the frozen declarative failure model (drops with
+             bounded retry, bit-flip corruption, stragglers, crash/rejoin
+             schedules) — hashable, JSON round-trippable, rides inside
+             `transport.Transport` as a static jit argument
+    trace    the seeded event draws: every failure is a pure function of
+             (FaultSpec.seed, event tag, round, agent) via fold_in chains,
+             so traces replay bit-identically and never touch the solver PRNG
+    inject   the sweep-side gates both incremental engines call — fault-aware
+             twins of transport.policy that charge measured retransmission
+             bytes and skip dead/straggling/undelivered commits
+
+The zero-fault path costs nothing: `Transport.__post_init__` normalises an
+inert FaultSpec to None, and every injection site is a static `if` on it.
+"""
+from repro.faults.inject import (budget_setup, gate_broadcast,
+                                 require_fault_engine)
+from repro.faults.spec import FaultError, FaultSpec
+from repro.faults.trace import alive_at, broadcast_outcome, corrupt, straggles
+
+__all__ = ["FaultError", "FaultSpec", "alive_at", "broadcast_outcome",
+           "budget_setup", "corrupt", "gate_broadcast",
+           "require_fault_engine", "straggles"]

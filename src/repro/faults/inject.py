@@ -1,0 +1,97 @@
+"""Sweep-side fault injection: the fault-aware twins of transport.policy.
+
+Both incremental sweep bodies (core.icoa and core.distributed) route through
+these when `transport.faults` is set; when it is None they keep calling the
+originals, so the zero-fault program is bit-identical to the pre-fault solver
+(acceptance contract, tests/test_faults.py).
+
+Byte semantics under faults (DESIGN.md §12):
+
+  * the sweep-start gather charges only the ALIVE agents' floods — a dead
+    agent transmits nothing, and the peers keep its last delivered row
+    (stale state, masked out of the served combination);
+  * each candidate broadcast charges `attempts * broadcast_cost`: a dropped
+    attempt crossed the wire before it was lost, so retransmissions are real
+    retry byte-overhead (the chaos bench measures exactly this column);
+  * a straggler's timeout->skip spends nothing (the attempt never left);
+  * the retry policy is bounded (FaultSpec.max_retries) and synchronous-round:
+    backoff DELAY has no byte cost, so it is out of scope of the measured
+    ledger — only the retransmissions are modelled.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.faults import trace
+
+__all__ = ["budget_setup", "gate_broadcast", "require_fault_engine"]
+
+
+def require_fault_engine(transport, cfg) -> None:
+    """Trace-time guard, mirroring transport.require_budget_engine: fault
+    gating lives in the carried-CovState sweep bodies.  The spec layer
+    (api.ExperimentSpec.validate) raises its own SpecError twin naming the
+    solver/engine/delta fields — keep the conditions in lockstep."""
+    fl = transport.faults
+    if fl is None:
+        return
+    if cfg.engine not in ("incremental", "fused"):
+        raise ValueError(
+            "fault injection gates per-row broadcasts inside the carried "
+            "CovState sweep; the dense engine re-transmits everything by "
+            "construction — use engine='incremental' or 'fused'")
+    if fl.crash and cfg.delta > 0.0:
+        raise ValueError(
+            "crash schedules re-weight the ensemble over the survivors "
+            "(ensemble.surviving_weights, a masked closed form); the "
+            "minimax-protected weights (delta > 0) have no masked closed "
+            "form — run crash faults with delta=0")
+
+
+def budget_setup(transport, cs0, ledger, m: int, split: bool, step0, alive):
+    """Fault-aware sweep-start state: returns (live, order, bcosts, ledger).
+
+    Differs from transport.budget_setup in two ways: the gather charge sums
+    only the alive agents' floods (crashed agents transmit nothing), and
+    `bcosts` is always materialised — the per-agent fault gate needs the
+    prices even on unbudgeted runs, to charge measured retransmissions.
+    """
+    from repro.transport.policy import greedy_order   # lazy: no import cycle
+
+    bcosts = transport.broadcast_costs(m, split)
+    gather = jnp.sum(jnp.where(alive, bcosts, jnp.zeros_like(bcosts)))
+    if transport.byte_budget is None:
+        return jnp.bool_(True), None, bcosts, ledger.charge(gather)
+    live = ledger.affords(gather, transport.byte_budget)
+    ledger = ledger.charge_if(live, gather)
+    if transport.policy == "greedy_eta":
+        order, _ = greedy_order(cs0, step0)
+    else:
+        order = jnp.arange(transport.topology.n_agents)
+    return live, order, bcosts, ledger
+
+
+def gate_broadcast(fl, ledger, live, bcosts, i, alive_i, round_, budget):
+    """Fault-aware per-agent transmission gate; returns (ok, ledger).
+
+    `ok` is True iff agent i's candidate row reached every peer this round:
+    the agent is alive, not straggling, the broadcast was affordable, and at
+    least one of the `max_retries + 1` attempts survived the drop trace.
+    The ledger is charged `attempts * bcosts[i]` for every attempt that went
+    on the wire — retransmissions AND totally-lost broadcasts are paid for —
+    while stragglers and crashed agents spend nothing (they never sent).
+    """
+    delivered, attempts = trace.broadcast_outcome(fl, round_, i)
+    tx = alive_i
+    if fl.straggle_rate > 0.0:
+        tx = jnp.logical_and(tx, jnp.logical_not(trace.straggles(fl, round_,
+                                                                 i)))
+    cost = attempts * bcosts[i]
+    if budget is None:
+        can = tx
+    else:
+        can = jnp.logical_and(tx, jnp.logical_and(live,
+                                                  ledger.affords(cost,
+                                                                 budget)))
+    ledger = ledger.charge_if(can, cost)
+    return jnp.logical_and(can, delivered), ledger

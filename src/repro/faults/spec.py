@@ -1,0 +1,97 @@
+"""FaultSpec — the declarative, replayable failure model (DESIGN.md §12).
+
+One frozen dataclass describes everything that can go wrong on the wire:
+link drops (with a bounded retry policy), payload bit-flip corruption,
+straggler delays, and agent crash/rejoin schedules.  The spec is
+
+  * hashable and built from primitives/tuples only, so it rides inside
+    `transport.Transport` — itself a static jit argument — without touching
+    the trace;
+  * the ONLY source of fault randomness: every failure event is drawn from
+    `PRNGKey(seed)` folded with a per-event tag, the sweep round and the
+    agent index (faults.trace), never from the solver's PRNG stream, so a
+    fault trace is pure in (seed, round, agent) and replays bit-identically
+    across engines, backends, Monte-Carlo trials and process restarts;
+  * JSON round-trippable through `api.spec_from_dict` (strict unknown-key
+    errors naming the `spec['faults']` path).
+
+`max_retries` doubles as the resilience policy knob: 0 = drop-and-skip
+(a lost broadcast forfeits the agent's commit this round), k > 0 = retry
+up to k retransmissions, every attempt charged to the measured byte ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+__all__ = ["FaultError", "FaultSpec"]
+
+
+class FaultError(ValueError):
+    """A FaultSpec field is out of range or malformed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded, replayable fault injection at the transport boundary.
+
+    crash entries are (agent, down_round, rejoin_round) triples: the agent
+    is dead for rounds `down_round <= r < rejoin_round` (rejoin_round < 0 =
+    never rejoins).  A dead agent transmits nothing — its gather row is its
+    last delivered state, its commits are skipped, and the served ensemble
+    re-weights over the survivors (`ensemble.surviving_weights`).  Rejoin is
+    warm by construction: every sweep rebuilds the CovState from the carried
+    prediction matrix, so a rejoined agent re-enters with its pre-crash row.
+    """
+
+    seed: int = 0               # fault-trace PRNG seed (independent of the
+    #                             solver seed: same run + same fault seed =
+    #                             identical failures, retransmits included)
+    drop_rate: float = 0.0      # P(one broadcast attempt is lost on the wire)
+    corrupt_rate: float = 0.0   # P(a delivered payload arrives bit-flipped)
+    corrupt_bits: int = 8       # mantissa bits a corruption event may flip
+    #                             (mantissa-only: a corrupted payload is wrong
+    #                             but finite — it must survive the relay's
+    #                             non-finite check to reach the solver)
+    straggle_rate: float = 0.0  # P(an agent misses the round's commit window;
+    #                             timeout -> skip, no bytes spent)
+    max_retries: int = 0        # retransmissions after a dropped broadcast;
+    #                             every attempt is charged to the ledger
+    crash: Tuple[Tuple[int, int, int], ...] = ()   # (agent, down, rejoin)
+
+    @property
+    def is_inert(self) -> bool:
+        """True when this spec injects nothing — the zero-fault fast path
+        (Transport normalises inert specs to None, keeping the no-fault
+        sweep bit-identical to the pre-fault solver)."""
+        return (self.drop_rate == 0.0 and self.corrupt_rate == 0.0
+                and self.straggle_rate == 0.0 and not self.crash)
+
+    def validate(self) -> None:
+        for name in ("drop_rate", "corrupt_rate", "straggle_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise FaultError(
+                    f"{name} is a probability, must be in [0, 1] (got {v})")
+        if self.max_retries < 0:
+            raise FaultError(
+                f"max_retries must be >= 0 (got {self.max_retries})")
+        if self.corrupt_bits < 1:
+            raise FaultError(
+                f"corrupt_bits must be >= 1 (got {self.corrupt_bits})")
+        for pos, entry in enumerate(self.crash):
+            if len(entry) != 3:
+                raise FaultError(
+                    f"crash[{pos}] must be an (agent, down_round, "
+                    f"rejoin_round) triple (got {entry!r})")
+            agent, down, rejoin = entry
+            if agent < 0:
+                raise FaultError(
+                    f"crash[{pos}]: agent index must be >= 0 (got {agent})")
+            if down < 0:
+                raise FaultError(
+                    f"crash[{pos}]: down_round must be >= 0 (got {down})")
+            if 0 <= rejoin <= down:
+                raise FaultError(
+                    f"crash[{pos}]: rejoin_round {rejoin} must be after "
+                    f"down_round {down} (or < 0 for a permanent crash)")

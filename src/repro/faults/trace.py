@@ -1,0 +1,103 @@
+"""Deterministic fault traces: every failure event is a pure function of
+(FaultSpec.seed, event tag, sweep round, agent index).
+
+The draws use `jax.random.fold_in` chains off `PRNGKey(spec.seed)` — NOT the
+solver's PRNG carry — so injecting faults never perturbs the solver's own
+subsample/init streams, the trace is identical across engines and backends,
+and replaying a run with the same FaultSpec reproduces every drop, flip,
+straggle and retransmission bit for bit (the ledger's retry bytes included).
+All functions are traced-jnp only (jit/scan/shard_map safe; round_ and agent
+may be traced int32 scalars).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["alive_at", "broadcast_outcome", "corrupt", "straggles"]
+
+# event-stream tags: distinct fold_in constants keep the per-event substreams
+# independent even at equal (round, agent)
+_DROP = 0x0D
+_STRAGGLE = 0x57
+_CORRUPT = 0xC0
+
+
+def _draw_key(spec, tag: int, round_, agent) -> jax.Array:
+    k = jax.random.fold_in(jax.random.PRNGKey(spec.seed), tag)
+    k = jax.random.fold_in(k, jnp.asarray(round_, jnp.int32))
+    return jax.random.fold_in(k, jnp.asarray(agent, jnp.int32))
+
+
+def broadcast_outcome(spec, round_, agent):
+    """Did agent's round-`round_` broadcast reach the peers, and at what cost?
+
+    Draws `max_retries + 1` independent attempt outcomes at `drop_rate`.
+    Returns (delivered, attempts): `delivered` is True iff any attempt got
+    through; `attempts` (int32) counts the transmissions actually sent —
+    the leading failures plus the first success, or all `max_retries + 1`
+    when every attempt dropped.  The ledger charges attempts * broadcast
+    cost either way: lost packets crossed the wire too.
+    """
+    tries = int(spec.max_retries) + 1
+    u = jax.random.uniform(_draw_key(spec, _DROP, round_, agent), (tries,))
+    ok = u >= jnp.asarray(spec.drop_rate, u.dtype)
+    delivered = jnp.any(ok)
+    first = jnp.argmax(ok).astype(jnp.int32)
+    attempts = jnp.where(delivered, first + jnp.asarray(1, jnp.int32),
+                         jnp.asarray(tries, jnp.int32))
+    return delivered, attempts
+
+
+def straggles(spec, round_, agent) -> jnp.ndarray:
+    """True when the agent misses the round's commit window (timeout->skip:
+    the sweep proceeds without its update; no bytes are spent)."""
+    if spec.straggle_rate <= 0.0:
+        return jnp.bool_(False)
+    u = jax.random.uniform(_draw_key(spec, _STRAGGLE, round_, agent), ())
+    return u < jnp.asarray(spec.straggle_rate, u.dtype)
+
+
+def alive_at(spec, d: int, round_) -> jnp.ndarray:
+    """(D,) alive mask at sweep round `round_` from the static crash schedule.
+
+    Agent a with entry (a, down, rejoin) is dead for down <= r < rejoin
+    (rejoin < 0 = permanently).  round_ = -1 (before any sweep) is all-alive.
+    The crash tuple is static, so this unrolls to a handful of scalar
+    compares — free for the empty schedule.
+    """
+    r = jnp.asarray(round_, jnp.int32)
+    alive = jnp.ones((d,), jnp.bool_)
+    for agent, down, rejoin in spec.crash:
+        dead = r >= down
+        if rejoin >= 0:
+            dead = jnp.logical_and(dead, r < rejoin)
+        alive = alive.at[agent].set(jnp.logical_and(alive[agent],
+                                                    jnp.logical_not(dead)))
+    return alive
+
+
+def corrupt(spec, x: jnp.ndarray, round_, agent) -> jnp.ndarray:
+    """Apply a (possible) payload corruption event to a delivered row.
+
+    With probability `corrupt_rate` the whole payload arrives bit-flipped:
+    every element gets up to `corrupt_bits` random LOW-MANTISSA bits XORed
+    (double `bitcast_convert_type` through the matching uint).  Mantissa-only
+    flips perturb values by at most a relative 2^(bits - nmant) — the payload
+    is wrong but finite, so it passes the relay's non-finite check and
+    poisons the shared covariance state the way real silent corruption does.
+    Statically a no-op when corrupt_rate == 0.
+    """
+    if spec.corrupt_rate <= 0.0:
+        return x
+    kh, km = jax.random.split(_draw_key(spec, _CORRUPT, round_, agent))
+    u = jax.random.uniform(kh, ())
+    hit = u < jnp.asarray(spec.corrupt_rate, u.dtype)
+    nbits = min(int(spec.corrupt_bits), jnp.finfo(x.dtype).nmant)
+    itype = jnp.dtype(f"uint{jnp.dtype(x.dtype).itemsize * 8}")
+    mask = jnp.bitwise_and(jax.random.bits(km, x.shape, dtype=itype),
+                           jnp.asarray((1 << nbits) - 1, itype))
+    flipped = jax.lax.bitcast_convert_type(
+        jnp.bitwise_xor(jax.lax.bitcast_convert_type(x, itype), mask),
+        x.dtype)
+    return jnp.where(hit, flipped, x)

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from repro.core import covariance as cov_mod
 from repro.core import covstate, ensemble, icoa
 from repro.core.icoa import ICOAConfig
+from repro.faults import trace as faults_trace
 from repro.transport import Ledger
 
 __all__ = ["StreamState", "Ingestor"]
@@ -76,6 +77,10 @@ class StreamState(NamedTuple):
     ledger: Ledger           # cumulative measured re-sweep wire bytes
     preq_sse: jnp.ndarray    # () prequential squared-error sum since record
     preq_n: jnp.ndarray      # () int32 prequential instance count since record
+    rounds: jnp.ndarray      # () int32: global sweep counter — the fault
+    #                          layer's event coordinate (repro.faults): sweep
+    #                          k of the stream's life is fault round k, so a
+    #                          restored stream replays the SAME fault trace
 
 
 def _canon_float() -> jnp.dtype:
@@ -113,6 +118,8 @@ class Ingestor:
         self.sweeps_per_resweep = sweeps_per_resweep
         self._d = len(self.groups)
         self._cols = len(self.groups[0])
+        self._fl = cfg.transport.faults if cfg.transport is not None else None
+        self._crashes = self._fl is not None and bool(self._fl.crash)
         self._gidx = [jnp.asarray(g, jnp.int32) for g in self.groups]
         self._init_keys = jax.random.split(jax.random.PRNGKey(seed), self._d)
         self._ingest = jax.jit(self._ingest_impl)
@@ -142,7 +149,8 @@ class Ingestor:
             key=jax.random.PRNGKey(self.seed + 1),
             ledger=Ledger.empty(),
             preq_sse=jnp.zeros((), dt),
-            preq_n=jnp.asarray(0, jnp.int32))
+            preq_n=jnp.asarray(0, jnp.int32),
+            rounds=jnp.asarray(0, jnp.int32))
 
     # --------------------------------------------------------------- ingest
 
@@ -174,7 +182,14 @@ class Ingestor:
 
         # live weights off the warm solve state; uniform until the first
         # resweep's rebuild makes the solve state meaningful
-        w_live = cov.s / jnp.sum(cov.s)
+        if self._crashes:
+            # crash-degraded serving: mask the agents dead as of the LAST
+            # completed sweep round out of the combination (DESIGN.md §12)
+            alive = faults_trace.alive_at(
+                self._fl, self._d, state.rounds - jnp.asarray(1, jnp.int32))
+            w_live = ensemble.surviving_weights(cov.a0, alive)
+        else:
+            w_live = cov.s / jnp.sum(cov.s)
         uniform = jnp.full((self._d,), 1.0 / self._d, state.weights.dtype)
         weights = jnp.where(state.live > 0, w_live.astype(state.weights.dtype),
                             uniform)
@@ -193,11 +208,12 @@ class Ingestor:
 
     # -------------------------------------------------------------- resweep
 
-    def _record_impl(self, params, f, yw, k2):
+    def _record_impl(self, params, f, yw, k2, alive=None):
         """Post-sweep record: weights, window train MSE, eta_tilde — the
         jitted twin of core.icoa.run's record() (alpha=1: k2 is unused by
-        _weights but threaded for discipline parity)."""
-        w = icoa._weights(f, yw, self.cfg, k2)
+        _weights but threaded for discipline parity).  `alive` (crash-schedule
+        runs only) restricts the recorded weights to the survivors."""
+        w = icoa._weights(f, yw, self.cfg, k2, alive)
         train = jnp.mean((yw - ensemble.combine(w, f)) ** 2)
         et = ensemble.eta_tilde(cov_mod.gram(yw[None, :] - f,
                                              use_kernel=self.cfg.use_kernel))
@@ -241,14 +257,18 @@ class Ingestor:
 
         ledger = state.ledger
         bytes0 = int(ledger.spent)
+        rounds0 = int(state.rounds)
         etas: List[float] = []
         eta_prev = float("inf")
         w = train = None                 # sweeps_per_resweep >= 1 sets them
-        for _ in range(self.sweeps_per_resweep):
+        for j in range(self.sweeps_per_resweep):
             key, k1, k2 = jax.random.split(key, 3)
+            rnd = jnp.asarray(rounds0 + j, jnp.int32)
             params, f, _, ledger = icoa.sweep(self.family, self.cfg, params,
-                                              f, xw, yw, k1, ledger)
-            w, train, et = self._record(params, f, yw, k2)
+                                              f, xw, yw, k1, ledger, rnd)
+            alive = (faults_trace.alive_at(self._fl, self._d, rnd)
+                     if self._crashes else None)
+            w, train, et = self._record(params, f, yw, k2, alive)
             eta_now = float(1.0 / et)
             etas.append(eta_now)
             if abs(eta_prev - eta_now) < self.cfg.eps:
@@ -274,5 +294,6 @@ class Ingestor:
             params=params, f=f_full, cov=cov, weights=w, key=key,
             ledger=ledger, live=jnp.asarray(1, jnp.int32),
             preq_sse=jnp.zeros_like(state.preq_sse),
-            preq_n=jnp.zeros_like(state.preq_n))
+            preq_n=jnp.zeros_like(state.preq_n),
+            rounds=jnp.asarray(rounds0 + len(etas), jnp.int32))
         return state, record

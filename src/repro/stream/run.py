@@ -27,6 +27,7 @@ from typing import Any, Dict, List, Optional
 import jax.numpy as jnp
 
 from repro.api.specs import StreamSpec
+from repro.faults import trace as faults_trace
 from repro.stream.checkpoint import restore_stream, save_stream
 from repro.stream.ingest import Ingestor, StreamState
 from repro.stream.serve import PredictEngine
@@ -77,7 +78,7 @@ def build_ingestor(spec: StreamSpec) -> Ingestor:
     spec.validate()
     exp = spec.experiment
     groups = exp.data.groups
-    cfg = exp.solver.icoa_config(exp.transport.resolve(len(groups)),
+    cfg = exp.solver.icoa_config(exp.resolved_transport(),
                                  checks=exp.backend.checks)
     # the ledger-capacity guard reads cfg.n_sweeps as the run's worst case;
     # for a stream that is every sweep of every cadence period
@@ -124,8 +125,20 @@ def stream_fit(spec: StreamSpec, *, checkpoint_dir: Optional[str] = None,
                 f"(chunk={spec.chunk}) — was it saved by a different spec?")
         start_chunk = step // spec.chunk
 
+    # crash-degraded serving: publish the survivor mask (as of the last
+    # completed sweep round) alongside every weight refresh, so the engine
+    # can never serve a dead agent's stale predictions (DESIGN.md §12)
+    fl = ing.cfg.transport.faults if ing.cfg.transport is not None else None
+    crashes = fl is not None and bool(fl.crash)
+
+    def publish(state: StreamState) -> None:
+        alive = (faults_trace.alive_at(fl, len(ing.groups),
+                                       int(state.rounds) - 1)
+                 if crashes else None)
+        engine.update(state.params, state.weights, alive=alive)
+
     if engine is not None:
-        engine.update(state.params, state.weights)
+        publish(state)
         engine.warmup()
 
     records: List[Dict[str, Any]] = []
@@ -133,13 +146,13 @@ def stream_fit(spec: StreamSpec, *, checkpoint_dir: Optional[str] = None,
         x, yc = source(t)
         state = ing.ingest(state, x, yc)
         if engine is not None:
-            engine.update(state.params, state.weights)
+            publish(state)
         count = (t + 1) * spec.chunk
         if count % spec.resweep_every == 0:
             state, rec = ing.resweep(state)
             records.append(rec)
             if engine is not None:
-                engine.update(state.params, state.weights)
+                publish(state)
         if (checkpoint_dir is not None and spec.checkpoint_every is not None
                 and count % spec.checkpoint_every == 0):
             save_stream(checkpoint_dir, state)

@@ -12,7 +12,7 @@ arrays in place).
 """
 from __future__ import annotations
 
-from typing import Any, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,8 +50,25 @@ class PredictEngine:
         # pre-populates exactly the programs predict() will hit
         self._fn = jax.jit(_predict)
 
-    def update(self, params: Any, weights: jnp.ndarray) -> None:
-        """Publish fresh model state — an attribute swap, never a retrace."""
+    def update(self, params: Any, weights: jnp.ndarray,
+               alive: Optional[jnp.ndarray] = None) -> None:
+        """Publish fresh model state — an attribute swap, never a retrace.
+
+        `alive` ((D,) bool, fault-degraded serving) masks dead agents out of
+        the served combination and renormalises the survivors' weights —
+        defence in depth over the trainer's own survivor re-weighting, so a
+        crash between publishes can never serve a dead agent's stale
+        predictions.  Zero survivors degrade to uniform-over-all (the engine
+        keeps answering; DESIGN.md §12).  The mask is a couple of eager (D,)
+        ops at publish time — the compiled predict programs are untouched.
+        """
+        if alive is not None:
+            w = jnp.where(alive, weights, jnp.zeros_like(weights))
+            s = jnp.sum(w)
+            ok = s > 0
+            weights = jnp.where(
+                ok, w / jnp.where(ok, s, jnp.ones_like(s)),
+                jnp.full_like(weights, 1.0 / weights.shape[0]))
         self._params = params
         self._weights = weights
 

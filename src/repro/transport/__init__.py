@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis import sanitize
+from repro.faults.spec import FaultSpec
 from repro.transport.codecs import (CODECS, Codec, ExactCodec,
                                     Int8AffineCodec, TopKSparseCodec,
                                     build_codec, register_codec)
@@ -44,7 +45,8 @@ from repro.transport.topology import (TOPOLOGIES, Topology, TransportError,
                                       build_topology, register_topology)
 
 __all__ = [
-    "CODECS", "Codec", "ExactCodec", "Int8AffineCodec", "Ledger", "POLICIES",
+    "CODECS", "Codec", "ExactCodec", "FaultSpec", "Int8AffineCodec", "Ledger",
+    "POLICIES",
     "TOPOLOGIES", "Topology", "TopKSparseCodec", "Transport", "TransportError",
     "agent_broadcast_cost", "budget_setup", "build_codec", "build_topology",
     "default_transport", "ensure_sweep_capacity", "gate_broadcast",
@@ -61,6 +63,8 @@ class Transport:
     codec: Codec
     byte_budget: Optional[float] = None
     policy: str = "greedy_eta"
+    faults: Optional[FaultSpec] = None   # seeded failure model (repro.faults);
+    #                                      None = the perfectly-reliable wire
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -71,6 +75,13 @@ class Transport:
             raise TransportError(
                 f"byte_budget must be positive and finite (got "
                 f"{self.byte_budget}); use None for unbudgeted runs")
+        if self.faults is not None:
+            self.faults.validate()
+            if self.faults.is_inert:
+                # normalise: an inject-nothing spec IS the reliable wire, and
+                # folding it away here keeps the zero-fault sweep program
+                # (and its jit cache key) identical to the pre-fault solver
+                object.__setattr__(self, "faults", None)
 
     # ------------------------------------------------------ relay primitives
     # ONE copy of the hop loop: every public relay_* below differs only in
@@ -142,6 +153,12 @@ class Transport:
             raise TransportError(
                 f"transport topology {self.topology.name!r} was built for "
                 f"{self.topology.n_agents} agents but the run has {n_agents}")
+        if self.faults is not None:
+            for agent, _, _ in self.faults.crash:
+                if agent >= n_agents:
+                    raise TransportError(
+                        f"faults.crash names agent {agent} but the run has "
+                        f"{n_agents} agents")
         return self
 
 

@@ -110,7 +110,8 @@ def refit_cycle_bytes(transport, d: int, n: int) -> float:
 
 
 def ensure_sweep_capacity(transport, n_sweeps: int, m: int, split: bool,
-                          row_wise: bool, ledger: Ledger) -> None:
+                          row_wise: bool, ledger: Ledger,
+                          retries: int = 0) -> None:
     """Trace-time guard against silent int wrap-around: the schedule is
     static, so the run's worst-case spend is known before a byte moves.
 
@@ -119,9 +120,14 @@ def ensure_sweep_capacity(transport, n_sweeps: int, m: int, split: bool,
     because their unbudgeted schedule would overflow.  The guard assumes a
     fresh ledger (`ledger.spent` is traced and unreadable here); a caller
     pre-charging a ledger close to the dtype cap is on their own.
+
+    `retries` (FaultSpec.max_retries) bounds the fault layer's retransmit
+    overhead: in the worst case every candidate broadcast pays `retries`
+    extra floods — one additional gather-sized charge per sweep per retry.
     """
-    worst = n_sweeps * icoa_sweep_cost(transport, m, split=split,
-                                       row_wise=row_wise)
+    worst = n_sweeps * (icoa_sweep_cost(transport, m, split=split,
+                                        row_wise=row_wise)
+                        + retries * gather_cost(transport, m, split))
     if transport.byte_budget is not None:
         worst = min(worst, int(transport.byte_budget))
     cap = int(jnp.iinfo(ledger.spent.dtype).max)

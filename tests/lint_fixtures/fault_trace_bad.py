@@ -1,0 +1,25 @@
+"""Fixture: the fault-trace hazard — host RNG inside a traced outcome
+function.  `np.random` fires ONCE at trace time, so every round replays the
+same frozen "random" drop: the fault trace silently stops being a function
+of (seed, round, agent).  Every call here trips `host-call-in-trace` and
+nothing else."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def broadcast_outcome(round_, agent):
+    del round_, agent                   # the bug: outcome ignores coordinates
+    u = np.random.uniform()             # drawn at trace time, frozen forever
+    return jnp.asarray(u, jnp.float32) >= jnp.asarray(0.3, jnp.float32)
+
+
+def straggle_body(carry, round_):
+    delayed = np.random.rand() < 0.1    # one host draw for ALL scan steps
+    return carry + jnp.asarray(delayed, carry.dtype), round_
+
+
+def run(rounds):
+    init = jnp.asarray(0.0, jnp.float32)
+    return jax.lax.scan(straggle_body, init, rounds)

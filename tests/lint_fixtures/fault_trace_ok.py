@@ -1,0 +1,26 @@
+"""Fixture: the fault-trace hazard done right — every draw is a traced
+`jax.random` fold_in chain over (seed, round, agent), so outcomes replay
+bit-identically per coordinate.  Nothing here may fire
+`host-call-in-trace`."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def broadcast_outcome(round_, agent):
+    key = jax.random.fold_in(jax.random.PRNGKey(0), jnp.asarray(13, jnp.int32))
+    key = jax.random.fold_in(key, round_)
+    key = jax.random.fold_in(key, agent)
+    u = jax.random.uniform(key, ())
+    return u >= jnp.asarray(0.3, u.dtype)
+
+
+def straggle_body(carry, round_):
+    key = jax.random.fold_in(jax.random.PRNGKey(1), round_)
+    delayed = jax.random.uniform(key, ()) < jnp.asarray(0.1, jnp.float32)
+    return carry + jnp.asarray(delayed, carry.dtype), round_
+
+
+def run(rounds):
+    init = jnp.asarray(0.0, jnp.float32)
+    return jax.lax.scan(straggle_body, init, rounds)

@@ -40,6 +40,20 @@ def test_rule_fires_on_bad_fixture_only(rule, stem):
     assert ok == [], [v.format() for v in ok]
 
 
+def test_fault_trace_fixture_pair():
+    """PR 9's domain instance of the host-call hazard: a fault trace drawing
+    from `np.random` inside a jitted outcome function freezes ONE draw into
+    the program — the trace silently stops being pure in (seed, round,
+    agent).  The fold_in-chain twin (how repro.faults.trace actually draws)
+    must lint clean."""
+    bad = lint.lint_file(os.path.join(FIXTURES, "fault_trace_bad.py"))
+    assert bad, "host RNG in a traced fault outcome must be flagged"
+    assert {v.rule for v in bad} == {"host-call-in-trace"}
+    assert len(bad) == 2                 # the jitted fn AND the scan body
+    ok = lint.lint_file(os.path.join(FIXTURES, "fault_trace_ok.py"))
+    assert ok == [], [v.format() for v in ok]
+
+
 def test_violation_format_is_clickable():
     (v,) = lint.lint_source("import jax.numpy as jnp\nz = jnp.zeros((3,))\n",
                             path="somefile.py")

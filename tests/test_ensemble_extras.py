@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypcompat import HAVE_HYPOTHESIS, given, settings, st
+
 from repro.agents import RFFFamily
 from repro.core import ensemble, icoa
 from repro.data.friedman import make_dataset
@@ -66,6 +68,49 @@ def test_agent_failure_degrades_gracefully():
         v = float(w @ a @ w)
         assert v >= full - 1e-6          # can't beat the full ensemble
         assert v < 10 * full             # but no catastrophic blow-up
+
+
+def test_surviving_weights_single_survivor_is_one_hot():
+    """With one agent left there is nothing to weight: the survivor carries
+    the whole combination, exactly (PR 9 degraded-serving contract)."""
+    a = _rand_cov(4, 6)
+    for lone in range(6):
+        alive = jnp.zeros(6, bool).at[lone].set(True)
+        w = ensemble.surviving_weights(a, alive)
+        expect = np.zeros(6)
+        expect[lone] = 1.0
+        np.testing.assert_allclose(np.asarray(w), expect, atol=1e-6)
+
+
+def test_surviving_weights_zero_survivors_degrades_to_uniform():
+    """Nobody alive: serving must keep answering, so the fallback is the
+    uniform combination over ALL agents (stale but finite), never NaN."""
+    a = _rand_cov(5, 4)
+    w = ensemble.surviving_weights(a, jnp.zeros(4, bool))
+    np.testing.assert_allclose(np.asarray(w), np.full(4, 0.25), atol=1e-7)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 1000), d=st.integers(2, 8),
+           mask_bits=st.integers(0, 255))
+    def test_surviving_weights_property(seed, d, mask_bits):
+        """For EVERY survivor mask: weights are finite, sum to 1, dead
+        agents get exactly 0, and single/zero-survivor cases hit their
+        documented special forms."""
+        a = _rand_cov(seed, d)
+        alive_np = np.array([(mask_bits >> i) & 1 == 1 for i in range(d)])
+        w = np.asarray(ensemble.surviving_weights(a, jnp.asarray(alive_np)))
+        assert np.all(np.isfinite(w))
+        assert abs(w.sum() - 1.0) < 1e-4
+        n_alive = int(alive_np.sum())
+        if n_alive == 0:
+            np.testing.assert_allclose(w, np.full(d, 1.0 / d), atol=1e-6)
+        else:
+            np.testing.assert_allclose(w[~alive_np], 0.0, atol=1e-6)
+            if n_alive == 1:
+                assert abs(w[int(np.argmax(alive_np))] - 1.0) < 1e-5
 
 
 def test_surviving_weights_is_exported():
