@@ -29,6 +29,7 @@ import sys
 import time
 
 from benchmarks.common import row
+from benchmarks import envelope
 
 __all__ = ["run"]
 
@@ -181,7 +182,5 @@ def run():
         f"sharded_dev{max_k}_speedup_over_vmap":
             None if speedup is None else round(speedup, 2),
     }
-    with open(_OUT, "w") as fh:
-        json.dump(payload, fh, indent=2)
-        fh.write("\n")
+    envelope.write_bench(_OUT, "batch", payload)
     yield row("batch_json", 0, os.path.basename(_OUT))

@@ -1,0 +1,103 @@
+"""Shared envelope for every checked-in ``BENCH_*.json`` (DESIGN.md §13.4).
+
+Historically each bench wrote its own ad-hoc top-level shape, so nothing
+downstream could answer "which commit / machine / jax produced this number?"
+without spelunking git blame.  Every BENCH file now carries one uniform
+envelope::
+
+    {"meta": {"bench": ..., "git_sha": ..., "host_cpu_count": ...,
+              "jax_version": ..., "timestamp": ...},
+     "results": <the bench's own payload, unchanged>}
+
+Writers call :func:`write_bench`; readers call :func:`load_bench` (which
+validates) or just index ``doc["results"]``.  ``tools/bench_schema.py check``
+runs :func:`validate` over every checked-in file, so a bench that regresses
+to a bare payload fails CI, not a reader three PRs later.
+
+Files captured before the envelope existed are wrapped with meta recovered
+from ``git log -n1 -- <file>`` (sha + commit time); fields git cannot recover
+(host_cpu_count, jax_version of the capturing run) are ``null`` and the meta
+carries ``"legacy_wrap": true`` — truthful over plausible.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+from datetime import datetime, timezone
+from typing import Any, Dict
+
+__all__ = ["META_KEYS", "envelope", "write_bench", "load_bench", "validate"]
+
+META_KEYS = ("bench", "git_sha", "host_cpu_count", "jax_version", "timestamp")
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def envelope(bench: str, results: Any) -> Dict[str, Any]:
+    """Wrap a bench payload in the shared meta envelope (capture time = now)."""
+    import jax  # deferred: the schema checker must not need a jax import
+
+    return {
+        "meta": {
+            "bench": bench,
+            "git_sha": _git_sha(),
+            "host_cpu_count": os.cpu_count(),
+            "jax_version": jax.__version__,
+            "timestamp": datetime.now(timezone.utc)
+            .isoformat(timespec="seconds"),
+        },
+        "results": results,
+    }
+
+
+def write_bench(path: str, bench: str, results: Any, **json_kw) -> None:
+    """Serialise ``envelope(bench, results)`` to `path` (indent=2 + trailing
+    newline — the checked-in convention)."""
+    json_kw.setdefault("indent", 2)
+    with open(path, "w") as fh:
+        json.dump(envelope(bench, results), fh, **json_kw)
+        fh.write("\n")
+
+
+def validate(doc: Any, name: str = "<doc>") -> None:
+    """Raise ValueError naming every envelope violation in `doc`."""
+    problems = []
+    if not isinstance(doc, dict):
+        raise ValueError(f"{name}: top level must be an object, "
+                         f"got {type(doc).__name__}")
+    meta = doc.get("meta")
+    if not isinstance(meta, dict):
+        problems.append("missing 'meta' object")
+    else:
+        for k in META_KEYS:
+            if k not in meta:
+                problems.append(f"meta lacks {k!r}")
+        if not isinstance(meta.get("bench"), str):
+            problems.append("meta['bench'] must be a string")
+    if "results" not in doc:
+        problems.append("missing 'results'")
+    extra = sorted(set(doc) - {"meta", "results"})
+    if extra:
+        problems.append(f"unexpected top-level keys {extra} "
+                        f"(the payload belongs under 'results')")
+    if problems:
+        raise ValueError(f"{name}: " + "; ".join(problems))
+
+
+def load_bench(path: str) -> Dict[str, Any]:
+    """Load + validate one BENCH file; returns the full envelope doc."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    validate(doc, os.path.basename(path))
+    return doc

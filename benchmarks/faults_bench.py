@@ -27,6 +27,7 @@ import jax
 
 from benchmarks.common import row
 from repro import api
+from benchmarks import envelope
 
 __all__ = ["run"]
 
@@ -148,9 +149,7 @@ def run() -> list:
         "replay_identical": bool(replay_ok),
         "convergence_under_failure": convergence,
     }
-    with open(_OUT, "w") as fh:
-        json.dump(payload, fh, indent=2)
-        fh.write("\n")
+    envelope.write_bench(_OUT, "faults", payload)
     yield row("faults/json", 0, os.path.basename(_OUT))
 
     if not replay_ok:

@@ -32,6 +32,7 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.gram.ops import gram, row_gram
 from repro.kernels.sweep.ops import commit_sweep, probe_sweep
+from benchmarks import envelope
 
 __all__ = ["run"]
 
@@ -149,11 +150,11 @@ def run():
         byt = float(itemsize) * (2 * 4 * sd * 2 * 64 + 2 * 4 * 8 * 64)
         yield _entry(results, f"flash_decode/s{sd}", us, flops, byt, path)
 
-    with open(_OUT, "w") as fh:
-        json.dump({"backend": jax.default_backend(),
-                   "interpret_note": "pallas rows run the interpreter on "
-                   "non-TPU backends (correctness-path timing); ref rows are "
-                   "the CPU perf numbers", "smoke": smoke,
-                   "unit": "us_per_op", "results": results}, fh, indent=2)
-        fh.write("\n")
+    envelope.write_bench(
+        _OUT, "kernels",
+        {"backend": jax.default_backend(),
+         "interpret_note": "pallas rows run the interpreter on "
+         "non-TPU backends (correctness-path timing); ref rows are "
+         "the CPU perf numbers", "smoke": smoke,
+         "unit": "us_per_op", "results": results})
     yield row("kernels_json", 0, os.path.basename(_OUT))

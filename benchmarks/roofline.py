@@ -30,6 +30,7 @@ from benchmarks.common import row
 from repro.agents import LinearFamily
 from repro.core import icoa
 from repro.launch.hlo_analysis import HW, analyze_hlo, roofline_terms
+from benchmarks import envelope
 
 __all__ = ["run"]
 
@@ -123,13 +124,13 @@ def run(root: str = "."):
                   f"ai={ai:.2f};dom={dominant};"
                   f"bound_us={bound * 1e6:.1f};"
                   f"gflops={stats.flops / 1e9:.3f}")
-    with open(_OUT, "w") as fh:
-        json.dump({"backend": jax.default_backend(),
-                   "hw_model": {k: v for k, v in HW.items()},
-                   "note": "FLOPs/bytes from optimized-HLO walk "
-                   "(launch.hlo_analysis); bound_us is the max roofline "
-                   "term on the reference chip; measured_us is this box "
-                   "(CPU in CI) for trajectory tracking only",
-                   "results": results}, fh, indent=2)
-        fh.write("\n")
+    envelope.write_bench(
+        _OUT, "roofline",
+        {"backend": jax.default_backend(),
+         "hw_model": {k: v for k, v in HW.items()},
+         "note": "FLOPs/bytes from optimized-HLO walk "
+         "(launch.hlo_analysis); bound_us is the max roofline "
+         "term on the reference chip; measured_us is this box "
+         "(CPU in CI) for trajectory tracking only",
+         "results": results})
     yield row("roofline_json", 0, os.path.basename(_OUT))

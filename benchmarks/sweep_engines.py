@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from benchmarks.common import row
 from repro.agents import LinearFamily
 from repro.core import icoa
+from benchmarks import envelope
 
 __all__ = ["run"]
 
@@ -90,8 +91,7 @@ def run():
         results.append(rec)
         yield row(f"sweep_speedup_d{d}", 0,
                   f"{speedup:.2f}x inc/dense {fused_speedup:.2f}x fused/inc")
-    with open(_OUT, "w") as fh:
-        json.dump({"n": _N, "backend": jax.default_backend(),
-                   "unit": "us_per_sweep", "results": results}, fh, indent=2)
-        fh.write("\n")
+    envelope.write_bench(_OUT, "sweep",
+                         {"n": _N, "backend": jax.default_backend(),
+                          "unit": "us_per_sweep", "results": results})
     yield row("sweep_json", 0, os.path.basename(_OUT))

@@ -25,6 +25,7 @@ import numpy as np
 
 from benchmarks.common import row
 from repro import api
+from benchmarks import envelope
 
 __all__ = ["run"]
 
@@ -107,9 +108,7 @@ def run() -> list:
                                       and mse_regression <= 0.10),
         },
     }
-    with open(_OUT, "w") as fh:
-        json.dump(payload, fh, indent=2)
-        fh.write("\n")
+    envelope.write_bench(_OUT, "transport", payload)
     yield row("transport/json", 0, os.path.basename(_OUT))
     if not _SMOKE and not payload["headline"]["meets_2x_at_10pct"]:
         raise AssertionError(

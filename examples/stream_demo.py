@@ -49,7 +49,9 @@ def main():
     family = spec.experiment.agent.resolve(n_cols=len(groups[0]))
     engine = PredictEngine(family, groups, n_attrs, spec.serve_buckets)
 
-    served = {"n": 0, "lat_us": []}
+    # no ad-hoc stopwatches here: the engine's own obs.health rings/counters
+    # (the same ones serve_bench and the metrics_text scrape read) ARE the
+    # latency/throughput record — the request thread just drives traffic
     stop = threading.Event()
 
     def request_loop():
@@ -59,10 +61,7 @@ def main():
         x = rng.uniform(-1.0, 1.0, size=(args.batch, n_attrs)) \
             .astype(np.float32)
         while not stop.is_set():
-            t0 = time.perf_counter()
-            engine.predict(x).block_until_ready()
-            served["lat_us"].append((time.perf_counter() - t0) * 1e6)
-            served["n"] += args.batch
+            engine.predict(x)
 
     thread = threading.Thread(target=request_loop, daemon=True)
     thread.start()
@@ -77,8 +76,12 @@ def main():
     stop.set()
     thread.join(timeout=5.0)
 
-    print(f"\ndone in {wall:.1f}s  ({total / wall:,.0f} instances/sec "
-          f"end-to-end, {len(res.records)} re-sweeps, "
+    ing_rate = res.ingestor.counters["ingest_instances"].rate
+    print(f"\ndone in {wall:.1f}s  "
+          f"({res.ingestor.counters['ingest_instances'].total:,} instances "
+          f"ingested at {ing_rate:,.0f}/sec, "
+          f"{res.ingestor.counters['resweeps'].total} re-sweeps "
+          f"({res.ingestor.counters['resweep_sweeps'].total} sweeps), "
           f"{res.total_bytes:,} re-sweep bytes metered)")
     print(f"last checkpoint: step {latest_stream_step(ckdir)} in {ckdir}")
 
@@ -93,13 +96,19 @@ def main():
         print(f"  {r['count']:>9,}  {r['train_mse']:.6f}    "
               f"{r['preq_mse']:.6f}    {r['eta']:.4f}")
 
-    lat = np.asarray(served["lat_us"])
-    if lat.size:
-        print(f"\nserved {served['n']:,} predictions concurrently "
-              f"({served['n'] / wall:,.0f}/sec): latency p50 "
-              f"{np.percentile(lat, 50):.0f}us  p95 "
-              f"{np.percentile(lat, 95):.0f}us  p99 "
-              f"{np.percentile(lat, 99):.0f}us")
+    # serving stats straight from the engine's histograms/counters
+    reqs = engine.requests
+    if reqs.total:
+        pct = engine.latency[engine._bucket(args.batch)].percentiles()
+        print(f"\nserved {reqs.total * args.batch:,} predictions "
+              f"concurrently ({reqs.rate * args.batch:,.0f}/sec): latency "
+              f"p50 {pct['p50'] * 1e6:.0f}us  p95 {pct['p95'] * 1e6:.0f}us  "
+              f"p99 {pct['p99'] * 1e6:.0f}us")
+
+    print("\nprometheus scrape (engine + ingestor health):")
+    for line in engine.metrics_text(res.ingestor).splitlines():
+        if not line.startswith("#"):
+            print("  " + line)
 
 
 if __name__ == "__main__":

@@ -50,6 +50,8 @@ from repro.api.specs import (AgentSpec, BackendSpec, DataSpec, Dataset,
                              stream_spec_from_dict, stream_spec_to_dict)
 from repro.api.sweep import grid_specs, spec_with, sweep, zip_specs
 from repro.faults import FaultError, FaultSpec
+from repro.obs import Metrics, ObsError, ObsSpec
+from repro.obs.trace import trace as _obs_span
 
 # the online path lives in repro.stream but surfaces here (it consumes
 # api.specs, so this import must come after the spec imports above)
@@ -57,7 +59,8 @@ from repro.stream.run import StreamResult, stream_fit
 
 __all__ = [
     "AgentSpec", "BackendSpec", "CODECS", "DataSpec", "Dataset",
-    "ExperimentSpec", "FaultError", "FaultSpec", "History", "PARTITIONS",
+    "ExperimentSpec", "FaultError", "FaultSpec", "History", "Metrics",
+    "ObsError", "ObsSpec", "PARTITIONS",
     "Result", "ResultSet",
     "SOLVERS", "SOURCES", "Solver", "SpecError", "StreamResult",
     "StreamSpec", "TOPOLOGIES",
@@ -77,6 +80,8 @@ def fit(spec: ExperimentSpec) -> Result:
     dispatch to the registered solver on the requested backend, and return
     the standardised Result."""
     spec.validate()
-    data = spec.data.build()
-    family = spec.agent.resolve(n_cols=data.xcols.shape[-1])
-    return run_solver(spec, data, family)
+    with _obs_span("api.fit", solver=spec.solver.name,
+                   backend=spec.backend.name):
+        data = spec.data.build()
+        family = spec.agent.resolve(n_cols=data.xcols.shape[-1])
+        return run_solver(spec, data, family)

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import covariance as cov
 from repro.core import ensemble, icoa, minimax
+from repro.obs.taps import Metrics
 
 from repro.api.specs import Dataset, ExperimentSpec
 
@@ -68,6 +69,9 @@ class Result:
     f: jnp.ndarray            # (D, N_train) final per-agent train predictions
     history: History
     data: Optional[Dataset] = None   # in-memory only; never serialised
+    metrics: Optional[Metrics] = None  # collected obs taps (spec.obs); None
+    #                                    when obs is off.  In-memory only,
+    #                                    like `data`: io round-trips drop it
 
     # ------------------------------------------------------------- evaluate
 

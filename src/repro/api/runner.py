@@ -59,6 +59,7 @@ from repro.analysis import sanitize
 from repro.core import baselines, distributed, icoa
 from repro.data import sources as data_sources
 from repro.launch.mesh import make_trial_mesh
+from repro.obs import taps as obs_taps
 
 from repro.api.result import History, Result, ResultSet
 from repro.api.solvers import _bytes_history, _mesh
@@ -128,7 +129,8 @@ def build_runner(spec: ExperimentSpec) -> Callable[[Any], Dict[str, Any]]:
         if solver.name == "icoa":
             params, f, weights, hist = icoa.run_scan(
                 family, solver.icoa_config(spec.resolved_transport(),
-                                           checks=spec.backend.checks),
+                                           checks=spec.backend.checks,
+                                           obs=spec.obs.normalized()),
                 xcols, ytr, xcols_test, yte, seed)
         elif solver.name == "averaging":
             params, f, hist = baselines.averaging_scan(
@@ -176,7 +178,8 @@ def build_distributed_runner(spec: ExperimentSpec,
         if solver.name == "icoa":
             params, f, weights, hist = distributed.run_scan_distributed(
                 family, solver.icoa_config(spec.resolved_transport(),
-                                           checks=spec.backend.checks),
+                                           checks=spec.backend.checks,
+                                           obs=spec.obs.normalized()),
                 xcols, ytr, xcols_test, yte, seed, mesh)
         elif solver.name == "averaging":
             params, f, hist = distributed.run_averaging_scan_distributed(
@@ -393,6 +396,12 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
     # one bulk device-to-host transfer per history field, not one per scalar
     host = {k: np.asarray(out[k]) for k in ("train_mse", "test_mse", "eta")}
     conv = np.asarray(out["converged_at"]) if "converged_at" in out else None
+    # collected obs taps ride the out dict as one more stacked pytree: the
+    # trial axis lands in front of the per-sweep axis (vmap/scan semantics),
+    # so trial t's Metrics is a plain leading-axis slice
+    obs_norm = spec.obs.normalized()
+    taps_host = ({k: np.asarray(v) for k, v in out["taps"].items()}
+                 if out.get("taps") else None)
     def take(tree, t):
         return jax.tree.map(lambda a: a[t], tree)
 
@@ -405,8 +414,10 @@ def batch_fit(spec: ExperimentSpec, n_trials: int, *,
             bytes_transmitted=(list(bytes_hist) if bytes_meas is None
                                else [float(v) for v in bytes_meas[t]]),
             converged_at=None if conv is None else int(conv[t]))
+        metrics = None if taps_host is None else obs_taps.metrics_from_taps(
+            obs_norm, {k: v[t] for k, v in taps_host.items()})
         results.append(Result(
             spec=trial_spec(spec, t), family=family,
             params=take(out["params"], t), weights=out["weights"][t],
-            f=out["f"][t], history=history, data=None))
+            f=out["f"][t], history=history, data=None, metrics=metrics))
     return ResultSet(spec, results)

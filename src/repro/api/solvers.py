@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import baselines, distributed, ensemble, icoa
 from repro.core import covariance as cov
+from repro.obs import taps as obs_taps
 from repro.transport import ledger as ledger_mod
 
 from repro.api.result import History, Result
@@ -125,7 +126,8 @@ def _mesh(spec: ExperimentSpec, d: int):
 def _fit_icoa(spec: ExperimentSpec, data: Dataset, family) -> Result:
     d, n = data.xcols.shape[0], data.y.shape[0]
     cfg = spec.solver.icoa_config(spec.resolved_transport(),
-                                  checks=spec.backend.checks)
+                                  checks=spec.backend.checks,
+                                  obs=spec.obs.normalized())
     if spec.backend.name == "shard_map":
         params, weights, hist = distributed.run_distributed(
             family, cfg, data.xcols, data.y, data.xcols_test, data.y_test,
@@ -146,8 +148,9 @@ def _fit_icoa(spec: ExperimentSpec, data: Dataset, family) -> Result:
         # serial runs truncate AT the eps stop, so the converged record is
         # simply the last one (compiled runs compute it from the eps rule)
         converged_at=len(hist["train_mse"]) - 1)
+    metrics = obs_taps.metrics_from_taps(cfg.obs, hist.get("taps"))
     return Result(spec=spec, family=family, params=params, weights=weights,
-                  f=f, history=history, data=data)
+                  f=f, history=history, data=data, metrics=metrics)
 
 
 @register_solver("averaging")

@@ -30,6 +30,7 @@ from repro.agents import FAMILIES
 from repro.analysis import sanitize
 from repro.core.icoa import ICOAConfig
 from repro.faults import FaultError, FaultSpec
+from repro.obs.spec import ObsError, ObsSpec
 from repro.data import sources as data_sources
 from repro.data.partition import PARTITIONS, make_groups, validate_partition
 from repro.data.sources import SOURCES
@@ -236,19 +237,22 @@ class SolverSpec:
                 f"engine selects ICOA's covariance path; solver "
                 f"{self.name!r} has no per-probe covariance to cache")
 
-    def icoa_config(self, transport=None, checks: str = "off") -> ICOAConfig:
+    def icoa_config(self, transport=None, checks: str = "off",
+                    obs=None) -> ICOAConfig:
         """`transport` is a resolved transport.Transport (None = the legacy
         exact_f64/full default) — `ExperimentSpec.resolved_transport()`
         produces it from the spec's TransportSpec.  `checks` is the backend's
         sanitizer mode (BackendSpec.checks), threaded into the static cfg so
-        sanitized and bare sweeps key the jit cache separately."""
+        sanitized and bare sweeps key the jit cache separately.  `obs` is the
+        normalized ObsSpec (`ExperimentSpec.obs.normalized()`) — None keeps
+        the tap-free program, same static-gating contract as checks."""
         return ICOAConfig(
             n_sweeps=self.n_sweeps, eps=self.eps, step0=self.step0,
             backtrack=self.backtrack, max_probes=self.max_probes,
             alpha=self.alpha, delta=self.delta, minimax_steps=self.minimax_steps,
             minimax_lr=self.minimax_lr, use_kernel=self.use_kernel,
             accept_reject=self.accept_reject, row_broadcast=self.row_broadcast,
-            engine=self.engine, transport=transport, checks=checks)
+            engine=self.engine, transport=transport, checks=checks, obs=obs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -376,6 +380,9 @@ class ExperimentSpec:
     transport: TransportSpec = TransportSpec()
     faults: FaultSpec = FaultSpec()   # seeded failure model (repro.faults);
     #                                   the default injects nothing
+    obs: ObsSpec = ObsSpec()        # in-trace metric taps (DESIGN.md §13);
+    #                                 the default collects nothing and adds
+    #                                 zero traced ops (FaultSpec discipline)
     seed: int = 0                   # solver seed (init + subsample streams)
 
     def validate(self) -> None:
@@ -384,6 +391,15 @@ class ExperimentSpec:
         self.solver.validate()
         self.backend.validate()
         self.transport.validate()
+        try:
+            self.obs.validate()
+        except ObsError as e:
+            raise SpecError(f"obs: {e}") from None
+        if self.obs.enabled and self.solver.name != "icoa":
+            raise SpecError(
+                "obs taps are collected inside the compiled ICOA sweep; "
+                "solver {!r} has no sweep to tap (averaging and the refit "
+                "ring record only their History)".format(self.solver.name))
         if self.transport.byte_budget is not None:
             if (self.solver.name != "icoa"
                     or self.solver.engine not in ("incremental", "fused")):
@@ -569,11 +585,11 @@ def _crash_entries(value, where: str) -> Tuple[Tuple[int, int, int], ...]:
 
 def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
     top_unknown = sorted(set(d) - {"data", "agent", "solver", "backend",
-                                   "transport", "faults", "seed"})
+                                   "transport", "faults", "obs", "seed"})
     if top_unknown:
         raise SpecError(
             f"unrecognised section(s) in spec dict: {top_unknown}; "
-            f"valid: ['agent', 'backend', 'data', 'faults', 'seed', "
+            f"valid: ['agent', 'backend', 'data', 'faults', 'obs', 'seed', "
             f"'solver', 'transport']")
     data = _checked_fields(DataSpec, d.get("data", {}), "spec['data']")
     for key in ("source_options", "partition_options"):
@@ -589,6 +605,9 @@ def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
     faults = _checked_fields(FaultSpec, d.get("faults", {}), "spec['faults']")
     faults["crash"] = _crash_entries(faults.get("crash", ()),
                                      "spec['faults']['crash']")
+    # "obs" is optional for older saves: load as the inert default
+    obs = _checked_fields(ObsSpec, d.get("obs", {}), "spec['obs']")
+    obs["taps"] = tuple(str(t) for t in obs.get("taps", ()))
     return ExperimentSpec(
         data=DataSpec(**data),
         agent=AgentSpec(**agent),
@@ -598,6 +617,7 @@ def spec_from_dict(d: Dict[str, Any]) -> ExperimentSpec:
                                               "spec['backend']")),
         transport=TransportSpec(**trans),
         faults=FaultSpec(**faults),
+        obs=ObsSpec(**obs),
         seed=d.get("seed", 0),
     )
 

@@ -15,9 +15,32 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "tree_keys", "stored_keys"]
 
 _SEP = "|"
+
+
+def tree_keys(tree: Any) -> list:
+    """The flat npz key for every leaf of `tree`, in leaf order — the same
+    derivation save/restore use, exported so callers can diff a checkpoint's
+    stored keys against a template BEFORE restoring (stream.checkpoint turns
+    that diff into a named CheckpointError instead of a raw KeyError)."""
+    keys = []
+
+    def collect(kp, _):
+        keys.append(_SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                              for k in kp))
+
+    jax.tree_util.tree_map_with_path(collect, tree)
+    return keys
+
+
+def stored_keys(directory: str, step: int) -> list:
+    """Keys actually present in the step's npz archive."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        return sorted(data.files)
 
 
 def jnp_like(arr: np.ndarray, like) -> Any:

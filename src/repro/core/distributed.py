@@ -44,6 +44,7 @@ from repro.core import covariance as cov
 from repro.core import covstate
 from repro.core import ensemble, gradient, minimax
 from repro.core.icoa import ICOAConfig
+from repro.obs import taps as obs_taps
 from repro.transport import Ledger
 from repro.transport import ledger as ledger_mod
 
@@ -112,6 +113,10 @@ def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
                                      row_wise=cfg.row_broadcast, ledger=ledger)
     ledger = ledger.charge(ledger_mod.icoa_sweep_cost(
         tp, idx.shape[0], split=cfg.alpha > 1.0, row_wise=cfg.row_broadcast))
+    # taps are replicated D x D-side algebra (out_spec P() broadcasts them);
+    # the static topology size keeps shapes un-traced
+    taps0 = obs_taps.init_engine_taps(cfg.obs, tp.topology.n_agents,
+                                      f_local.dtype)
 
     def eta_tilde_of(f_sub_all, diag_all):
         a0 = _gathered_a0(f_sub_all, y[idx], diag_all, cfg.alpha, tp)
@@ -122,7 +127,7 @@ def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
         return ensemble.eta_tilde(a0)
 
     def agent_update(i, carry):
-        f_local, params_local, f_cache, diag_cache = carry
+        f_local, params_local, f_cache, diag_cache, tps = carry
         if cfg.row_broadcast:
             # §Perf C: rows only change when their owner updates, so the
             # carried gather stays current — no re-gather needed
@@ -168,6 +173,7 @@ def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
             jnp.where(me == i, new_f[idx], jnp.zeros_like(new_f[idx])), "agents")
         eta_post = eta_tilde_of(f_sub_all.at[i].set(my_sub_new), diag_all)
         accept = eta_post > eta0
+        tps = obs_taps.tap_accept(tps, cfg.obs, i, accept)
         new_p = jax.tree.map(lambda new, old: jnp.where(accept, new, old[0]),
                              new_p, params_local)
         new_f = jnp.where(accept, new_f, f_local[0])
@@ -183,14 +189,21 @@ def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
                                 "agents")
             f_cache = f_cache.at[i].set(row)
             diag_cache = diag_cache.at[i].set(dnew)
-        return f_local, params_local, f_cache, diag_cache
+        return f_local, params_local, f_cache, diag_cache, tps
 
     # one initial gather (row_broadcast keeps it current; the paper-faithful
     # path re-gathers inside the loop and ignores the carry)
     f_cache0 = jax.lax.all_gather(f_local[0][idx], "agents")
     diag_cache0 = jax.lax.all_gather(jnp.mean((y - f_local[0]) ** 2), "agents")
-    f_local, params_local, f_cache, diag_cache = jax.lax.fori_loop(
-        0, d, agent_update, (f_local, params_local, f_cache0, diag_cache0))
+    if "codec_error" in taps0:
+        # the dense schedule re-codes every probe; report the sweep-start
+        # gather's round trip (what the incremental body's CovState absorbs)
+        sent0 = y[idx][None, :] - f_cache0
+        taps0 = obs_taps.tap_codec_error(taps0, cfg.obs, sent0,
+                                         tp.relay_rows(sent0))
+    f_local, params_local, f_cache, diag_cache, taps = jax.lax.fori_loop(
+        0, d, agent_update, (f_local, params_local, f_cache0, diag_cache0,
+                             taps0))
 
     # final weights from what agents can see
     if cfg.row_broadcast:
@@ -203,7 +216,7 @@ def _sweep_body(cfg: ICOAConfig, tp, family, xcol, y, f_local, params_local,
         w = minimax.robust_weights(a0, cfg.delta, steps=cfg.minimax_steps, lr=cfg.minimax_lr)
     else:
         w = ensemble.optimal_weights(a0)
-    return f_local, params_local, w, ledger
+    return f_local, params_local, w, ledger, taps
 
 
 def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
@@ -252,13 +265,19 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
 
     # the engine's ONLY full gather: residual rows + local variances, once
     f_sub_all = jax.lax.all_gather(f_local[0][idx], "agents")       # (D, m)
-    r_sub0 = tp.relay_rows(y[idx][None, :] - f_sub_all)
+    sent0 = y[idx][None, :] - f_sub_all
+    r_sub0 = tp.relay_rows(sent0)
     if split:
         diag0 = tp.relay_scalars(
             jax.lax.all_gather(jnp.mean((y - f_local[0]) ** 2), "agents"))
         cs0 = covstate.build(r_sub0, exact_diag=diag0, use_kernel=uk)
     else:
         cs0 = covstate.build(r_sub0, use_kernel=uk)
+    # taps are replicated algebra (out_spec P() broadcasts the dict); static
+    # topology size, NOT the psum'd d, keeps the accumulator shapes un-traced
+    taps0 = obs_taps.init_engine_taps(cfg.obs, tp.topology.n_agents,
+                                      f_local.dtype)
+    taps0 = obs_taps.tap_codec_error(taps0, cfg.obs, sent0, r_sub0)
 
     # greedy priority probes at THIS body's back-search scale — sqrt(m) in
     # f32, vs sqrt(n) in the local engine — mirroring the pre-existing step0
@@ -282,7 +301,7 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
                                          cfg.minimax_steps, cfg.minimax_lr)
 
     def agent_update(slot, carry):
-        f_local, params_local, cs, led = carry
+        f_local, params_local, cs, led, tps = carry
         i = slot if order is None else order[slot]
 
         if protected:
@@ -357,10 +376,14 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
             ok, led = faults_inject.gate_broadcast(fl, led, live, bcosts, i,
                                                    alive[i], rnd, budget)
             accept = jnp.logical_and(accept, ok)
+            tps = obs_taps.tap_fault_retries(tps, cfg.obs, fl, rnd, i,
+                                             alive[i])
         elif budget is not None:
             can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
                                                        budget)
             accept = jnp.logical_and(accept, can_tx)
+            tps = obs_taps.tap_budget_reject(tps, cfg.obs, can_tx)
+        tps = obs_taps.tap_accept(tps, cfg.obs, i, accept)
 
         new_p = jax.tree.map(lambda new, old: jnp.where(accept, new, old[0]),
                              new_p, params_local)
@@ -376,10 +399,10 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
             u_commit = u_eval
         cs_next = covstate.apply_row_update(cs, i, r_cand, u_commit)
         cs = jax.tree.map(lambda a, b: jnp.where(accept, a, b), cs_next, cs)
-        return f_local, params_local, cs, led
+        return f_local, params_local, cs, led, tps
 
-    f_local, params_local, cs, ledger = jax.lax.fori_loop(
-        0, d, agent_update, (f_local, params_local, cs0, ledger))
+    f_local, params_local, cs, ledger, taps = jax.lax.fori_loop(
+        0, d, agent_update, (f_local, params_local, cs0, ledger, taps0))
 
     # final weights from the carried covariance — no re-gather needed
     if protected:
@@ -391,7 +414,7 @@ def _sweep_body_incremental(cfg: ICOAConfig, tp, family, xcol, y, f_local,
         w = ensemble.surviving_weights(cs.a0, alive)
     else:
         w = ensemble.optimal_weights(cs.a0)
-    return f_local, params_local, w, ledger
+    return f_local, params_local, w, ledger, taps
 
 
 def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
@@ -410,7 +433,9 @@ def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
     sm = _shmap(
         body, mesh,
         in_specs=(P("agents"), P(), P("agents"), P("agents"), P(), P(), P()),
-        out_specs=(P("agents"), P("agents"), P(), P()),
+        # the trailing P() is a tree PREFIX for the tap dict: every leaf of
+        # the (possibly empty) replicated tap pytree is unsharded
+        out_specs=(P("agents"), P("agents"), P(), P(), P()),
     )
 
     def sweep(xcols, y, f, params, key, ledger, round_=None):
@@ -422,15 +447,16 @@ def _sweep_shmap(mesh: Mesh, cfg: ICOAConfig, family):
         # scalar check added out here (shape-mismatched error select)
         rnd = jnp.asarray(0 if round_ is None else round_, jnp.int32)
         with sanitize.sanitize_scope(cfg.checks):
-            f, params, w, ledger = sm(xcols, y, f, params, key, ledger, rnd)
-        return f, params, w, ledger
+            f, params, w, ledger, taps = sm(xcols, y, f, params, key, ledger,
+                                            rnd)
+        return f, params, w, ledger, taps
 
     return sweep
 
 
 def distributed_sweep(mesh: Mesh, cfg: ICOAConfig, family):
     """Compiled shard_map sweep:
-    (xcols, y, f, params, key, ledger) -> (f, params, w, ledger)."""
+    (xcols, y, f, params, key, ledger) -> (f, params, w, ledger, taps)."""
     return jax.jit(_sweep_shmap(mesh, cfg, family))
 
 
@@ -456,6 +482,9 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     key = jax.random.PRNGKey(seed + 1)
     w = jnp.ones((d,), f.dtype) / d
     ledger = Ledger.empty()
+    rec_obs = cfg.obs is not None and ("eta" in cfg.obs.taps
+                                       or "s" in cfg.obs.taps)
+    tap_rows = []
 
     def record(params, f, w):
         hist["train_mse"].append(float(jnp.mean((y - w @ f) ** 2)))
@@ -464,22 +493,29 @@ def run_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
             hist["test_mse"].append(float(jnp.mean((y_test - w @ preds) ** 2)))
         # same definition as core.icoa.run: eta of the optimally-weighted
         # ensemble on the FULL residual covariance (diagnostic, not traffic)
-        hist["eta"].append(float(ensemble.eta(
-            cov.gram(y[None, :] - f, use_kernel=cfg.use_kernel))))
+        a0r = cov.gram(y[None, :] - f, use_kernel=cfg.use_kernel)
+        hist["eta"].append(float(ensemble.eta(a0r)))
+        if rec_obs:
+            return obs_taps.record_taps(cfg.obs, ensemble.eta(a0r),
+                                        ensemble.solve_vec(a0r))
+        return {}
 
     record(params, f, w)
     eta_prev = float("inf")   # same rule as core.icoa.run: compare post-sweep etas
     for r in range(cfg.n_sweeps):
         key, k1 = jax.random.split(key)
-        f, params, w, led2 = sweep_fn(xcols, y, f, params, k1, ledger,
-                                      jnp.asarray(r, jnp.int32))
+        f, params, w, led2, etaps = sweep_fn(xcols, y, f, params, k1, ledger,
+                                             jnp.asarray(r, jnp.int32))
         hist["bytes"].append(float(led2.spent - ledger.spent))
         ledger = led2
-        record(params, f, w)
+        rtaps = record(params, f, w)
+        if cfg.obs is not None and cfg.obs.enabled:
+            tap_rows.append({**etaps, **rtaps})
         eta_now = hist["eta"][-1]
         if abs(eta_prev - eta_now) < cfg.eps:
             break
         eta_prev = eta_now
+    hist["taps"] = obs_taps.stack_tap_rows(tap_rows)
     return params, w, hist
 
 
@@ -511,26 +547,33 @@ def run_scan_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray,
     f = jax.vmap(family.predict)(params, xcols)
 
     sweep_fn = _sweep_shmap(mesh, cfg, family)
+    rec_obs = cfg.obs is not None and ("eta" in cfg.obs.taps
+                                       or "s" in cfg.obs.taps)
 
     def record(params, f, w):
         train = jnp.mean((y - w @ f) ** 2)
         preds = jax.vmap(family.predict)(params, xcols_test)
         test = jnp.mean((y_test - w @ preds) ** 2)
-        eta = ensemble.eta(cov.gram(y[None, :] - f, use_kernel=cfg.use_kernel))
-        return train, test, eta
+        a0r = cov.gram(y[None, :] - f, use_kernel=cfg.use_kernel)
+        eta = ensemble.eta(a0r)
+        rtaps = (obs_taps.record_taps(cfg.obs, eta, ensemble.solve_vec(a0r))
+                 if rec_obs else {})
+        return train, test, eta, rtaps
 
     w0 = jnp.ones((d,), f.dtype) / d
-    tr0, te0, et0 = record(params, f, w0)
+    tr0, te0, et0, _ = record(params, f, w0)
     key0 = jax.random.PRNGKey(seed + 1)
 
     def step(carry, r):
         params, f, key, led = carry
         key, k1 = jax.random.split(key)
-        f, params, w, led2 = sweep_fn(xcols, y, f, params, k1, led, r)
-        tr, te, et = record(params, f, w)
-        return (params, f, key, led2), (w, tr, te, et, led2.spent - led.spent)
+        f, params, w, led2, etaps = sweep_fn(xcols, y, f, params, k1, led, r)
+        tr, te, et, rtaps = record(params, f, w)
+        return (params, f, key, led2), (w, tr, te, et,
+                                        led2.spent - led.spent,
+                                        {**etaps, **rtaps})
 
-    (params, f, _, _), (ws, trs, tes, ets, bts) = jax.lax.scan(
+    (params, f, _, _), (ws, trs, tes, ets, bts, taps) = jax.lax.scan(
         step, (params, f, key0, Ledger.empty()),
         jnp.arange(cfg.n_sweeps))
     hist = {
@@ -540,6 +583,7 @@ def run_scan_distributed(family, cfg: ICOAConfig, xcols: jnp.ndarray,
         "bytes": jnp.concatenate([jnp.zeros_like(bts[:1]), bts]),
     }
     hist["converged_at"] = icoa_mod.converged_record(hist["eta"], cfg.eps)
+    hist["taps"] = taps
     return params, f, ws[-1], hist
 
 

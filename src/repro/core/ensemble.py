@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["optimal_weights", "eta", "eta_tilde", "eta_tilde_from_predictions",
-           "combine", "surviving_weights"]
+           "combine", "solve_vec", "surviving_weights"]
 
 _JITTER = 1e-10
 
@@ -21,6 +21,13 @@ def _solve_ones(a_mat: jnp.ndarray) -> jnp.ndarray:
     d = a_mat.shape[0]
     ones = jnp.ones((d,), dtype=a_mat.dtype)
     return jnp.linalg.solve(a_mat + _JITTER * jnp.eye(d, dtype=a_mat.dtype), ones)
+
+
+def solve_vec(a_mat: jnp.ndarray) -> jnp.ndarray:
+    """The raw (jittered) solve vector s = (A + jitter I)^{-1} 1: the common
+    intermediate of `optimal_weights` (s normalised) and `eta_tilde` (sum s).
+    Exposed for the obs tap layer — the "s" tap records exactly this vector."""
+    return _solve_ones(a_mat)
 
 
 def optimal_weights(a_mat: jnp.ndarray) -> jnp.ndarray:

@@ -55,6 +55,8 @@ from repro.core import covstate
 from repro.core import ensemble
 from repro.core import gradient
 from repro.core import minimax
+from repro.obs import taps as obs_taps
+from repro.obs.spec import ObsSpec
 from repro.transport import Ledger
 from repro.transport import ledger as ledger_mod
 
@@ -97,6 +99,12 @@ class ICOAConfig:
                                # insert at trace time and failures raise.
                                # Part of this static cfg, so the jit cache
                                # keys sanitized and bare programs separately
+    obs: Optional[ObsSpec] = None  # in-trace metric taps (DESIGN.md §13):
+                               # None = off, zero extra traced ops (the
+                               # FaultSpec static-gating discipline); a
+                               # normalized ObsSpec selects named per-sweep
+                               # taps collected inside the compiled sweep
+                               # and returned as its 5th output
 
 
 @dataclasses.dataclass
@@ -154,7 +162,9 @@ def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
     traced `ledger` is charged from measured payload sizes — pass the ledger
     returned by the previous sweep to keep a running byte total (a byte
     budget gates row broadcasts against it).  Returns
-    (params, f, key, ledger).
+    (params, f, key, ledger, taps) — `taps` is the per-sweep tap dict of
+    `cfg.obs` ({} when obs is off: the dict is a valid empty pytree and the
+    program is bit-identical to the tap-free one).
 
     `cfg.checks` switches the checkify sanitizer rail (DESIGN.md §9.2): the
     scope below holds the trace-time flag open while THIS program traces, so
@@ -169,10 +179,11 @@ def sweep(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
     (repro.faults).  Without faults the round is ignored.
     """
     with sanitize.sanitize_scope(cfg.checks):
-        params, f, key, ledger = _sweep_impl(family, cfg, params, f, xcols,
-                                             y, key, ledger, round_)
+        params, f, key, ledger, taps = _sweep_impl(family, cfg, params, f,
+                                                   xcols, y, key, ledger,
+                                                   round_)
         f = sanitize.check_finite(f, "icoa.sweep: prediction matrix f")
-    return params, f, key, ledger
+    return params, f, key, ledger, taps
 
 
 def _sweep_impl(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
@@ -197,15 +208,15 @@ def _sweep_impl(family, cfg: ICOAConfig, params: Any, f: jnp.ndarray,
         idx = cov.subsample_indices(sub, n, cfg.alpha)
 
     if cfg.engine == "incremental":
-        params, f, ledger = _sweep_incremental(
+        params, f, ledger, taps = _sweep_incremental(
             family, cfg, tp, params, f, xcols, y, idx, ledger, rnd)
     elif cfg.engine == "fused":
-        params, f, ledger = _sweep_fused(
+        params, f, ledger, taps = _sweep_fused(
             family, cfg, tp, params, f, xcols, y, idx, ledger, rnd)
     else:
-        params, f, ledger = _sweep_dense(
+        params, f, ledger, taps = _sweep_dense(
             family, cfg, tp, params, f, xcols, y, idx, ledger)
-    return params, f, key, ledger
+    return params, f, key, ledger, taps
 
 
 def _transported_a0(tp, cfg: ICOAConfig, f: jnp.ndarray, y: jnp.ndarray,
@@ -240,6 +251,14 @@ def _sweep_dense(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
     m = n if idx is None else idx.shape[0]
     ledger = ledger.charge(ledger_mod.icoa_sweep_cost(
         tp, m, split=idx is not None, row_wise=cfg.row_broadcast))
+    taps0 = obs_taps.init_engine_taps(cfg.obs, d, f.dtype)
+    if "codec_error" in taps0:
+        # the dense schedule re-codes every probe; the tap reports the
+        # sweep-start round trip (the same payload the other engines gather)
+        r0 = y[None, :] - f
+        sent0 = r0 if idx is None else r0[:, idx]
+        taps0 = obs_taps.tap_codec_error(taps0, cfg.obs, sent0,
+                                         tp.relay_rows(sent0))
 
     if cfg.delta > 0.0:
         def obj(ff):
@@ -253,7 +272,7 @@ def _sweep_dense(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
             return ensemble.eta_tilde(_transported_a0(tp, cfg, ff, y, idx))
 
     def update_agent(i, carry):
-        params, f = carry
+        params, f, tps = carry
         g = jax.grad(lambda fi: obj(f.at[i].set(fi)))(f[i])
         gnorm = jnp.linalg.norm(g) + 1e-30
         g_unit = g / gnorm
@@ -284,13 +303,14 @@ def _sweep_dense(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
         # step, so without this guard eta drifts upward at the plateau
         # (beyond-paper fix; the paper's convergence claim is empirical)
         accept = (obj(f.at[i].set(f_new)) > eta0) if cfg.accept_reject else jnp.bool_(True)
+        tps = obs_taps.tap_accept(tps, cfg.obs, i, accept)
         p_i = jax.tree.map(lambda new, old: jnp.where(accept, new, old), p_new, p_old)
         f_i = jnp.where(accept, f_new, f[i])
         params = jax.tree.map(lambda t, u: t.at[i].set(u), params, p_i)
-        return params, f.at[i].set(f_i)
+        return params, f.at[i].set(f_i), tps
 
-    params, f = jax.lax.fori_loop(0, d, update_agent, (params, f))
-    return params, f, ledger
+    params, f, taps = jax.lax.fori_loop(0, d, update_agent, (params, f, taps0))
+    return params, f, ledger, taps
 
 
 def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
@@ -329,12 +349,16 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
     fl = tp.faults
 
     r0 = y[None, :] - f
+    sent = r0 if idx is None else r0[:, idx]
+    rel = tp.relay_rows(sent)
     if idx is None:
-        cs0 = covstate.build(tp.relay_rows(r0), use_kernel=uk)
+        cs0 = covstate.build(rel, use_kernel=uk)
     else:
-        cs0 = covstate.build(tp.relay_rows(r0[:, idx]),
+        cs0 = covstate.build(rel,
                              exact_diag=tp.relay_scalars(jnp.sum(r0 * r0, axis=1) / n),
                              use_kernel=uk)
+    taps0 = obs_taps.init_engine_taps(cfg.obs, d, f.dtype)
+    taps0 = obs_taps.tap_codec_error(taps0, cfg.obs, sent, rel)
 
     # the local engine's back-search starts at step0*sqrt(n), so the greedy
     # priority probes at that scale too (transport.policy.budget_setup)
@@ -354,7 +378,7 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
                                          cfg.minimax_steps, cfg.minimax_lr)
 
     def update_agent(slot, carry):
-        params, f, cs, led = carry
+        params, f, cs, led, tps = carry
         i = slot if order is None else order[slot]
         r_i = y - f[i]
 
@@ -447,10 +471,13 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
             ok, led = faults_inject.gate_broadcast(fl, led, live, bcosts, i,
                                                    alive[i], rnd, budget)
             accept = jnp.logical_and(accept, ok)
+            tps = obs_taps.tap_fault_retries(tps, cfg.obs, fl, rnd, i, alive[i])
         elif budget is not None:
             can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
                                                        budget)
             accept = jnp.logical_and(accept, can_tx)
+            tps = obs_taps.tap_budget_reject(tps, cfg.obs, can_tx)
+        tps = obs_taps.tap_accept(tps, cfg.obs, i, accept)
 
         p_i = jax.tree.map(lambda new, old: jnp.where(accept, new, old), p_new, p_old)
         f_i = jnp.where(accept, f_new, f[i])
@@ -459,11 +486,11 @@ def _sweep_incremental(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
 
         cs_next = covstate.apply_row_update(cs, i, r_new_sub, u_acc)
         cs = jax.tree.map(lambda a, b: jnp.where(accept, a, b), cs_next, cs)
-        return params, f, cs, led
+        return params, f, cs, led, tps
 
-    params, f, _, ledger = jax.lax.fori_loop(
-        0, d, update_agent, (params, f, cs0, ledger))
-    return params, f, ledger
+    params, f, _, ledger, taps = jax.lax.fori_loop(
+        0, d, update_agent, (params, f, cs0, ledger, taps0))
+    return params, f, ledger, taps
 
 
 def _small_inv(gm: jnp.ndarray) -> jnp.ndarray:
@@ -552,12 +579,16 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
     fl = tp.faults
 
     r0 = y[None, :] - f
+    sent = r0 if idx is None else r0[:, idx]
+    rel = tp.relay_rows(sent)
     if idx is None:
-        cs0 = covstate.build(tp.relay_rows(r0), use_kernel=uk)
+        cs0 = covstate.build(rel, use_kernel=uk)
     else:
-        cs0 = covstate.build(tp.relay_rows(r0[:, idx]),
+        cs0 = covstate.build(rel,
                              exact_diag=tp.relay_scalars(jnp.sum(r0 * r0, axis=1) / n),
                              use_kernel=uk)
+    taps0 = obs_taps.init_engine_taps(cfg.obs, d, f.dtype)
+    taps0 = obs_taps.tap_codec_error(taps0, cfg.obs, sent, rel)
 
     step0 = cfg.step0 * jnp.sqrt(jnp.asarray(n, f.dtype))
     if fl is not None:
@@ -591,7 +622,7 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
             return p_new, family.predict(p_new, xcols[i])
 
     def update_agent(slot, carry):
-        params, f, rs, a0, m_inv, s, eta, led = carry
+        params, f, rs, a0, m_inv, s, eta, led, tps = carry
         i = slot if order is None else order[slot]
         eta0 = eta
 
@@ -657,9 +688,11 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
             can_tx, led = faults_inject.gate_broadcast(fl, led, live, bcosts,
                                                        i, alive[i], rnd,
                                                        budget)
+            tps = obs_taps.tap_fault_retries(tps, cfg.obs, fl, rnd, i, alive[i])
         elif budget is not None:
             can_tx, led = transport_lib.gate_broadcast(led, live, bcosts, i,
                                                        budget)
+            tps = obs_taps.tap_budget_reject(tps, cfg.obs, can_tx)
         else:
             can_tx = jnp.bool_(True)
         # uk=False calls the oracle directly (no nested-jit call boundary in
@@ -674,6 +707,7 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
                 rs, m_inv, s, eta, i, delta, diag_keep, diag_add, threshold,
                 can_tx)
         eta = jnp.sum(s)
+        tps = obs_taps.tap_accept(tps, cfg.obs, i, accept)
 
         p_i = jax.tree.map(lambda new, old: jnp.where(accept, new, old),
                            p_new, p_old)
@@ -681,13 +715,13 @@ def _sweep_fused(family, cfg: ICOAConfig, tp, params: Any, f: jnp.ndarray,
         f = f.at[i].set(jnp.where(accept, f_new, f[i]))
         a0 = a0.at[i, :].add(u_eff).at[:, i].add(u_eff)   # u_eff = 0 on reject
         rs = rs.at[i].set(jnp.where(accept, r_new_sub, rs[i]))
-        return params, f, rs, a0, m_inv, s, eta, led
+        return params, f, rs, a0, m_inv, s, eta, led, tps
 
-    params, f, _, _, _, _, _, ledger = jax.lax.fori_loop(
+    params, f, _, _, _, _, _, ledger, taps = jax.lax.fori_loop(
         0, d, update_agent,
         (params, f, cs0.r_sub, cs0.a0, cs0.m_inv, cs0.s, cs0.eta_tilde,
-         ledger))
-    return params, f, ledger
+         ledger, taps0))
+    return params, f, ledger, taps
 
 
 def _weights(f: jnp.ndarray, y: jnp.ndarray, cfg: ICOAConfig, key: jax.Array,
@@ -753,6 +787,9 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     hist["converged_at"] — the record index where `run`'s eps rule would have
     stopped (the static schedule cannot break early, but it can report) —
     and hist["bytes"], the measured per-sweep ledger bytes (record 0 = 0).
+    With cfg.obs set, hist["taps"] is the dict of stacked per-sweep tap
+    series (length cfg.n_sweeps — sweep k aligns with record k+1); {} when
+    obs is off.
     """
     d = xcols.shape[0]
     seed = jnp.asarray(seed)
@@ -761,29 +798,47 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     fl = cfg.transport.faults if cfg.transport is not None else None
     crashes = fl is not None and bool(fl.crash)
 
+    rec_obs = cfg.obs is not None and ("eta" in cfg.obs.taps
+                                       or "s" in cfg.obs.taps)
+
     def record(params, f, k, alive=None):
         w = _weights(f, y, cfg, k, alive)
         train = jnp.mean((y - ensemble.combine(w, f)) ** 2)
         pred = ensemble_predict(family, params, w, xcols_test)
         test = jnp.mean((y_test - pred) ** 2)
-        eta = 1.0 / sanitize.check_nonzero(
-            _eta_tilde_sub(f, y, None, cfg),
-            "icoa.run_scan record: eta_tilde (eta = 1/eta_tilde)")
-        return w, train, test, eta
+        if rec_obs:
+            # expand _eta_tilde_sub so the tap shares the recorded Gram: the
+            # expression tree is identical to the off-mode one (XLA CSEs the
+            # duplicate solve), so History.eta is bitwise unchanged and the
+            # "eta" tap matches it exactly
+            a0r = _subsampled_a0(f, y, None, cfg)
+            eta = 1.0 / sanitize.check_nonzero(
+                ensemble.eta_tilde(a0r),
+                "icoa.run_scan record: eta_tilde (eta = 1/eta_tilde)")
+            rtaps = obs_taps.record_taps(cfg.obs, eta,
+                                         ensemble.solve_vec(a0r))
+        else:
+            eta = 1.0 / sanitize.check_nonzero(
+                _eta_tilde_sub(f, y, None, cfg),
+                "icoa.run_scan record: eta_tilde (eta = 1/eta_tilde)")
+            rtaps = {}
+        return w, train, test, eta, rtaps
 
     key0 = jax.random.PRNGKey(seed + 1)
-    w0, tr0, te0, et0 = record(state0.params, state0.f, key0)
+    w0, tr0, te0, et0, _ = record(state0.params, state0.f, key0)
 
     def step(carry, r):
         params, f, key, led = carry
         key, k1, k2 = jax.random.split(key, 3)
-        params, f, _, led2 = sweep(family, cfg, params, f, xcols, y, k1, led,
-                                   r)
+        params, f, _, led2, etaps = sweep(family, cfg, params, f, xcols, y,
+                                          k1, led, r)
         alive = faults_trace.alive_at(fl, d, r) if crashes else None
-        w, tr, te, et = record(params, f, k2, alive)
-        return (params, f, key, led2), (w, tr, te, et, led2.spent - led.spent)
+        w, tr, te, et, rtaps = record(params, f, k2, alive)
+        return (params, f, key, led2), (w, tr, te, et,
+                                        led2.spent - led.spent,
+                                        {**etaps, **rtaps})
 
-    (params, f, _, _), (ws, trs, tes, ets, bts) = jax.lax.scan(
+    (params, f, _, _), (ws, trs, tes, ets, bts, taps) = jax.lax.scan(
         step, (state0.params, state0.f, key0, Ledger.empty()),
         jnp.arange(cfg.n_sweeps))
     hist = {
@@ -793,6 +848,9 @@ def run_scan(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
         "bytes": jnp.concatenate([jnp.zeros_like(bts[:1]), bts]),
     }
     hist["converged_at"] = converged_record(hist["eta"], cfg.eps)
+    # scan already stacked each tap over the sweep axis (row k = sweep k,
+    # i.e. History record k+1); keep them out of the History arrays
+    hist["taps"] = taps
     return params, f, ws[-1], hist
 
 
@@ -817,6 +875,9 @@ def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
     eta_prev = jnp.inf
     key = jax.random.PRNGKey(seed + 1)
     ledger = Ledger.empty()
+    rec_obs = cfg.obs is not None and ("eta" in cfg.obs.taps
+                                       or "s" in cfg.obs.taps)
+    tap_rows = []
 
     def record(params, f, key, alive=None):
         w = _weights(f, y, cfg, key, alive)
@@ -825,21 +886,34 @@ def run(family, cfg: ICOAConfig, xcols: jnp.ndarray, y: jnp.ndarray,
         if xcols_test is not None:
             pred = ensemble_predict(family, params, w, xcols_test)
             hist["test_mse"].append(float(jnp.mean((y_test - pred) ** 2)))
-        hist["eta"].append(float(1.0 / _eta_tilde_sub(f, y, None, cfg)))
-        return w
+        if rec_obs:
+            # share the recorded Gram with the taps (see run_scan.record)
+            a0r = _subsampled_a0(f, y, None, cfg)
+            eta = 1.0 / ensemble.eta_tilde(a0r)
+            hist["eta"].append(float(eta))
+            rtaps = obs_taps.record_taps(cfg.obs, eta,
+                                         ensemble.solve_vec(a0r))
+        else:
+            hist["eta"].append(float(1.0 / _eta_tilde_sub(f, y, None, cfg)))
+            rtaps = {}
+        return w, rtaps
 
-    weights = record(state.params, state.f, key)
+    weights, _ = record(state.params, state.f, key)
     for r in range(cfg.n_sweeps):
         key, k1, k2 = jax.random.split(key, 3)
-        params, f, _, led2 = sweep_fn(state.params, state.f, xcols, y, k1,
-                                      ledger, jnp.asarray(r, jnp.int32))
+        params, f, _, led2, etaps = sweep_fn(state.params, state.f, xcols, y,
+                                             k1, ledger,
+                                             jnp.asarray(r, jnp.int32))
         hist["bytes"].append(float(led2.spent - ledger.spent))
         ledger = led2
         state = ICOAState(params=params, f=f, key=key)
         alive = faults_trace.alive_at(fl, d, r) if crashes else None
-        weights = record(params, f, k2, alive)
+        weights, rtaps = record(params, f, k2, alive)
+        if cfg.obs is not None and cfg.obs.enabled:
+            tap_rows.append({**etaps, **rtaps})
         eta_now = hist["eta"][-1]
         if abs(eta_prev - eta_now) < cfg.eps:
             break
         eta_prev = eta_now
+    hist["taps"] = obs_taps.stack_tap_rows(tap_rows)
     return state, weights, hist

@@ -1,0 +1,176 @@
+"""In-trace tap collection helpers + the host-side Metrics container.
+
+The helpers below are called from inside the jitted sweep engines
+(core.icoa, core.distributed) and the record steps.  Every one of them is a
+trace-time no-op when the tap is not selected: gating is a Python `if` on
+the static ObsSpec, so the off-mode program contains zero obs ops.  Tap
+dicts are plain dict pytrees — `{}` when off — so they ride fori_loop/scan
+carries, vmap batching and shard_map out_specs without a second code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.spec import TAPS, ObsSpec
+
+__all__ = ["Metrics", "init_engine_taps", "tap_accept", "tap_budget_reject",
+           "tap_fault_retries", "tap_codec_error", "record_taps",
+           "stack_tap_rows", "metrics_from_taps"]
+
+
+def _on(obs: Optional[ObsSpec], name: str) -> bool:
+    return obs is not None and name in obs.taps
+
+
+def init_engine_taps(obs: Optional[ObsSpec], d: int, dtype) -> Dict[str, Any]:
+    """Zeroed accumulators for the engine-side taps the spec selects."""
+    taps: Dict[str, Any] = {}
+    if obs is None:
+        return taps
+    if "accepts" in obs.taps:
+        taps["accepts"] = jnp.zeros((d,), dtype)
+    if "budget_rejects" in obs.taps:
+        taps["budget_rejects"] = jnp.zeros((), jnp.int32)
+    if "fault_retries" in obs.taps:
+        taps["fault_retries"] = jnp.zeros((), jnp.int32)
+    if "codec_error" in obs.taps:
+        taps["codec_error"] = jnp.zeros((), dtype)
+    return taps
+
+
+def tap_accept(taps: Dict[str, Any], obs: Optional[ObsSpec], i, accept
+               ) -> Dict[str, Any]:
+    """Record agent i's final commit acceptance (post budget/fault gating)."""
+    if not _on(obs, "accepts"):
+        return taps
+    out = dict(taps)
+    out["accepts"] = taps["accepts"].at[i].set(
+        accept.astype(taps["accepts"].dtype))
+    return out
+
+
+def tap_budget_reject(taps: Dict[str, Any], obs: Optional[ObsSpec], can_tx
+                      ) -> Dict[str, Any]:
+    """Count a budget-gate denial (pure-budget path only)."""
+    if not _on(obs, "budget_rejects"):
+        return taps
+    out = dict(taps)
+    out["budget_rejects"] = taps["budget_rejects"] + jnp.where(
+        can_tx, 0, 1).astype(jnp.int32)
+    return out
+
+
+def tap_fault_retries(taps: Dict[str, Any], obs: Optional[ObsSpec], fl,
+                      rnd, i, alive_i) -> Dict[str, Any]:
+    """Accumulate agent i's retransmissions beyond the first this sweep.
+
+    Recomputes the deterministic fault trace (faults.trace.broadcast_outcome
+    is a pure fold_in of (seed, round, agent)) instead of widening
+    gate_broadcast's return — the drawn attempt count is identical to the
+    one the gate charged.  A non-transmitting agent (dead or straggling)
+    contributes 0.  On unbudgeted runs the ledger charged exactly
+    attempts * bcost for every transmitting agent, so the tap total times
+    the row cost IS the ledger's retry overhead (tested); under a byte
+    budget the gate may decline to charge an unaffordable broadcast, so the
+    tap upper-bounds the charged retries there.
+    """
+    if not _on(obs, "fault_retries"):
+        return taps
+    from repro.faults import trace as faults_trace  # local: avoid cycles
+
+    delivered, attempts = faults_trace.broadcast_outcome(fl, rnd, i)
+    del delivered
+    tx = alive_i
+    if fl.straggle_rate > 0.0:
+        tx = jnp.logical_and(tx, ~faults_trace.straggles(fl, rnd, i))
+    out = dict(taps)
+    out["fault_retries"] = taps["fault_retries"] + jnp.where(
+        tx, attempts - 1, 0).astype(jnp.int32)
+    return out
+
+
+def tap_codec_error(taps: Dict[str, Any], obs: Optional[ObsSpec], sent,
+                    received) -> Dict[str, Any]:
+    """Relative Frobenius round-trip error of the sweep-start gather."""
+    if not _on(obs, "codec_error"):
+        return taps
+    dt = taps["codec_error"].dtype
+    sent = sent.astype(dt)
+    received = received.astype(dt)
+    num = jnp.sqrt(jnp.sum((received - sent) ** 2))
+    den = jnp.sqrt(jnp.sum(sent ** 2))
+    out = dict(taps)
+    out["codec_error"] = num / (den + jnp.asarray(1e-30, dt))
+    return out
+
+
+def record_taps(obs: Optional[ObsSpec], eta, s_vec) -> Dict[str, Any]:
+    """Record-side taps from the record step's already-computed quantities.
+
+    `eta` must be the exact value the history records (so the tap matches
+    History.eta bit-for-bit); `s_vec` the solve vector of the same Gram.
+    """
+    taps: Dict[str, Any] = {}
+    if _on(obs, "eta"):
+        taps["eta"] = eta
+    if _on(obs, "s"):
+        taps["s"] = s_vec
+    return taps
+
+
+def stack_tap_rows(rows: Sequence[Mapping[str, Any]]) -> Dict[str, np.ndarray]:
+    """Host-side: stack per-sweep tap dicts into (n_sweeps, ...) arrays."""
+    if not rows:
+        return {}
+    return {k: np.stack([np.asarray(r[k]) for r in rows])
+            for k in rows[0]}
+
+
+@dataclasses.dataclass
+class Metrics:
+    """Stable-schema container for collected tap series (DESIGN.md §13).
+
+    `taps` maps tap name -> numpy array with a leading sweep axis:
+    (n_sweeps,) for scalar taps, (n_sweeps, D) for per-agent taps — sweep k
+    (0-based) corresponds to History record k+1 (record 0, the
+    non-cooperative init, precedes any sweep).  In-memory only, like
+    `Result.data`: never serialised by result io.
+    """
+
+    taps: Dict[str, np.ndarray]
+    spec: ObsSpec
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.taps[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.taps
+
+    @property
+    def names(self) -> List[str]:
+        return sorted(self.taps)
+
+    @property
+    def n_sweeps(self) -> int:
+        return next(iter(self.taps.values())).shape[0] if self.taps else 0
+
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-ready view: {name: {values, axes, dtype, desc}}."""
+        return {k: {"values": np.asarray(v).tolist(),
+                    "axes": list(("sweep",) + tuple(TAPS[k]["axes"])),
+                    "dtype": str(np.asarray(v).dtype),
+                    "desc": TAPS[k]["desc"]}
+                for k, v in self.taps.items()}
+
+
+def metrics_from_taps(obs: Optional[ObsSpec], taps: Optional[Mapping[str, Any]]
+                      ) -> Optional[Metrics]:
+    """Host conversion: device tap arrays -> Metrics (None when obs off)."""
+    if obs is None or not obs.enabled or not taps:
+        return None
+    return Metrics(taps={k: np.asarray(v) for k, v in taps.items()},
+                   spec=obs)

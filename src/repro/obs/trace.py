@@ -1,0 +1,135 @@
+"""Host-side span tracer: structured JSONL event logs + profiler annotations.
+
+The tracer instruments the HOST orchestration layer (api.fit's solver
+dispatch, stream_fit's resweep cadence, checkpoint saves, fault-schedule
+boundaries) — never traced code: in-jit telemetry is the tap layer's job
+(obs.taps).  Disabled (the default) every `trace()` / `event()` call is a
+cheap no-op, so instrumented call sites cost nothing in production paths.
+
+    from repro import obs
+
+    obs.configure("events.jsonl", run_id="demo")
+    with obs.trace("fit", solver="icoa"):
+        ...
+    obs.event("record", count=2048, bytes_total=163840)
+    obs.disable()
+
+Schema (one JSON object per line):
+
+    {"ev": "span",  "name": ..., "run": ..., "t": <wall s>, "dur_s": ...,
+     "tags": {...}}
+    {"ev": "event", "name": ..., "run": ..., "t": <wall s>, "tags": {...}}
+
+`tags` carries the structured coordinates — resweep spans tag the fault
+trace's (round, agent) keys where applicable, so the JSONL joins against
+the seeded fault schedule.  Spans additionally open a
+`jax.profiler.TraceAnnotation` (and `step()` a StepTraceAnnotation), so the
+same names land in Perfetto/XProf captures when a profiler trace is active.
+`tools/obs_report.py` renders the run summary from the JSONL.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+import time
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+
+__all__ = ["Tracer", "configure", "disable", "active", "trace", "event",
+           "step"]
+
+
+class Tracer:
+    """Appends structured span/event lines to a JSONL file (thread-safe)."""
+
+    def __init__(self, path: str, run_id: Optional[str] = None) -> None:
+        self.path = path
+        self.run_id = run_id
+        self._fh = open(path, "a")
+        self._lock = threading.Lock()
+
+    def _emit(self, obj: Dict[str, Any]) -> None:
+        if self.run_id is not None:
+            obj["run"] = self.run_id
+        line = json.dumps(obj, default=str)
+        with self._lock:
+            self._fh.write(line + "\n")
+            self._fh.flush()
+
+    def span(self, name: str, t_start: float, dur_s: float,
+             tags: Dict[str, Any]) -> None:
+        self._emit({"ev": "span", "name": name, "t": t_start,
+                    "dur_s": dur_s, "tags": tags})
+
+    def event(self, name: str, tags: Dict[str, Any]) -> None:
+        self._emit({"ev": "event", "name": name, "t": time.time(),
+                    "tags": tags})
+
+    def close(self) -> None:
+        with self._lock:
+            self._fh.close()
+
+
+_tracer: Optional[Tracer] = None
+
+
+def configure(path: str, run_id: Optional[str] = None) -> Tracer:
+    """Open `path` (append mode) as the process-wide JSONL sink."""
+    global _tracer
+    if _tracer is not None:
+        _tracer.close()
+    _tracer = Tracer(path, run_id=run_id)
+    return _tracer
+
+
+def disable() -> None:
+    """Close the sink; trace()/event() return to no-ops."""
+    global _tracer
+    if _tracer is not None:
+        _tracer.close()
+        _tracer = None
+
+
+def active() -> bool:
+    return _tracer is not None
+
+
+@contextlib.contextmanager
+def trace(name: str, **tags: Any) -> Iterator[None]:
+    """Span context manager: JSONL line + jax.profiler.TraceAnnotation.
+
+    The profiler annotation opens even when no JSONL sink is configured —
+    it is free unless a profiler trace is being captured — but the JSONL
+    write happens only when `configure()` armed the tracer.
+    """
+    t_wall = time.time()
+    t0 = time.perf_counter()
+    with jax.profiler.TraceAnnotation(name):
+        try:
+            yield
+        finally:
+            if _tracer is not None:
+                _tracer.span(name, t_wall, time.perf_counter() - t0, tags)
+
+
+def event(name: str, **tags: Any) -> None:
+    """Point-in-time structured event (no-op when not configured)."""
+    if _tracer is not None:
+        _tracer.event(name, tags)
+
+
+@contextlib.contextmanager
+def step(name: str, step_num: int, **tags: Any) -> Iterator[None]:
+    """Span + StepTraceAnnotation: marks profiler step boundaries (XProf
+    groups device activity by these), tagging the JSONL span with the step."""
+    t_wall = time.time()
+    t0 = time.perf_counter()
+    with jax.profiler.StepTraceAnnotation(name, step_num=step_num):
+        try:
+            yield
+        finally:
+            if _tracer is not None:
+                tags = dict(tags, step=step_num)
+                _tracer.span(name, t_wall, time.perf_counter() - t0, tags)

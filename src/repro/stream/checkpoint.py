@@ -8,6 +8,13 @@ pure function of (seed, chunk index) (stream.source.ChunkSource), so a
 restarted process replays from chunk `count / chunk` and every subsequent
 record — ledger bytes included — is bit-identical to the uninterrupted run
 (tests/test_stream.py round-trip).
+
+Schema evolution: `StreamState` grows leaves across releases (PR 9 added the
+`rounds` fault-round counter).  An older checkpoint restored into today's
+template is missing those leaves; rather than dying inside numpy with a raw
+KeyError, `restore_stream` diffs the archive's stored keys against the
+template FIRST and raises `CheckpointError` naming exactly which leaves are
+absent and pointing at the README's migration table.
 """
 from __future__ import annotations
 
@@ -16,7 +23,14 @@ from typing import Optional, Tuple
 from repro.checkpoint import io as ckpt_io
 from repro.stream.ingest import StreamState
 
-__all__ = ["save_stream", "restore_stream", "latest_stream_step"]
+__all__ = ["CheckpointError", "save_stream", "restore_stream",
+           "latest_stream_step"]
+
+
+class CheckpointError(RuntimeError):
+    """A stream checkpoint cannot be restored into the current StreamState
+    schema (missing/extra leaves — typically a checkpoint written by an
+    older release; see README.md's 'Checkpoint migration' table)."""
 
 
 def save_stream(directory: str, state: StreamState) -> str:
@@ -24,16 +38,41 @@ def save_stream(directory: str, state: StreamState) -> str:
     return ckpt_io.save_checkpoint(directory, int(state.count), state)
 
 
+def _check_schema(directory: str, step: int, like: StreamState) -> None:
+    expected = set(ckpt_io.tree_keys(like))
+    stored = set(ckpt_io.stored_keys(directory, step))
+    missing = sorted(expected - stored)
+    extra = sorted(stored - expected)
+    if missing:
+        raise CheckpointError(
+            f"stream checkpoint step {step} in {directory!r} is missing "
+            f"leaves {missing} required by the current StreamState schema "
+            f"(it has {len(stored)} leaves, the template needs "
+            f"{len(expected)}). It was most likely written by an older "
+            f"release — e.g. pre-PR-9 checkpoints lack the 'rounds' "
+            f"fault-round counter. See README.md § 'Checkpoint migration' "
+            f"for the per-leaf backfill recipe.")
+    if extra:
+        raise CheckpointError(
+            f"stream checkpoint step {step} in {directory!r} carries leaves "
+            f"{extra} the current StreamState schema does not know — it was "
+            f"written by a NEWER release; restore it with that release, or "
+            f"see README.md § 'Checkpoint migration'.")
+
+
 def restore_stream(directory: str, like: StreamState,
                    step: Optional[int] = None) -> Tuple[StreamState, int]:
     """Restore into the structure of `like` (an Ingestor.init_state template,
     whose dtypes are the current runtime's canonical ones).  `step=None`
-    picks the newest checkpoint.  Returns (state, step)."""
+    picks the newest checkpoint.  Returns (state, step).  Raises
+    `CheckpointError` (naming the offending leaves) when the stored schema
+    does not match the template."""
     if step is None:
         step = ckpt_io.latest_step(directory)
         if step is None:
             raise FileNotFoundError(
                 f"no stream checkpoint found in {directory!r}")
+    _check_schema(directory, step, like)
     state = ckpt_io.restore_checkpoint(directory, step, like)
     return state, step
 

@@ -49,6 +49,8 @@ from repro.core import covariance as cov_mod
 from repro.core import covstate, ensemble, icoa
 from repro.core.icoa import ICOAConfig
 from repro.faults import trace as faults_trace
+from repro.obs import health as obs_health
+from repro.obs import taps as obs_taps
 from repro.transport import Ledger
 
 __all__ = ["StreamState", "Ingestor"]
@@ -125,6 +127,17 @@ class Ingestor:
         self._ingest = jax.jit(self._ingest_impl)
         self._record = jax.jit(self._record_impl)
         self._writeback = jax.jit(self._writeback_impl)
+        # host-side runtime health (repro.obs.health): throughput counters are
+        # maintained OUTSIDE the jitted programs — chunk size is static, so
+        # the increments cost nothing traced and the compiled ingest program
+        # is byte-identical whether or not anyone reads them
+        self.counters = {
+            "ingest_chunks": obs_health.Counter(),
+            "ingest_instances": obs_health.Counter(),
+            "resweeps": obs_health.Counter(),
+            "resweep_sweeps": obs_health.Counter(),
+        }
+        self.last_preq_mse = float("nan")  # prequential MSE of the last record
 
     # ------------------------------------------------------------- lifecycle
 
@@ -204,6 +217,8 @@ class Ingestor:
                y_chunk: jnp.ndarray) -> StreamState:
         """Absorb one (chunk, n_attrs)/(chunk,) micro-batch — one pre-jitted
         program, no steady-state recompiles."""
+        self.counters["ingest_chunks"].add(1)
+        self.counters["ingest_instances"].add(self.chunk)
         return self._ingest(state, x, y_chunk)
 
     # -------------------------------------------------------------- resweep
@@ -212,12 +227,21 @@ class Ingestor:
         """Post-sweep record: weights, window train MSE, eta_tilde — the
         jitted twin of core.icoa.run's record() (alpha=1: k2 is unused by
         _weights but threaded for discipline parity).  `alive` (crash-schedule
-        runs only) restricts the recorded weights to the survivors."""
+        runs only) restricts the recorded weights to the survivors.
+
+        With obs record taps on, eta/s are read off the SAME Gram the record
+        already solves (`eta = 1/eta_tilde(a0r)`), so the recorded eta_now and
+        the tapped eta are bitwise equal and the off-mode program is unchanged.
+        """
         w = icoa._weights(f, yw, self.cfg, k2, alive)
         train = jnp.mean((yw - ensemble.combine(w, f)) ** 2)
-        et = ensemble.eta_tilde(cov_mod.gram(yw[None, :] - f,
-                                             use_kernel=self.cfg.use_kernel))
-        return w, train, et
+        a0r = cov_mod.gram(yw[None, :] - f, use_kernel=self.cfg.use_kernel)
+        et = ensemble.eta_tilde(a0r)
+        obs = self.cfg.obs
+        rec_obs = obs is not None and ("eta" in obs.taps or "s" in obs.taps)
+        rtaps = (obs_taps.record_taps(obs, 1.0 / et, ensemble.solve_vec(a0r))
+                 if rec_obs else {})
+        return w, train, et, rtaps
 
     def _writeback_impl(self, f_full, y_full, f_new):
         """Write swept predictions back into the window and rebuild the
@@ -260,35 +284,47 @@ class Ingestor:
         rounds0 = int(state.rounds)
         etas: List[float] = []
         eta_prev = float("inf")
+        obs_on = self.cfg.obs is not None and self.cfg.obs.enabled
+        tap_rows: List[Dict[str, Any]] = []
         w = train = None                 # sweeps_per_resweep >= 1 sets them
         for j in range(self.sweeps_per_resweep):
             key, k1, k2 = jax.random.split(key, 3)
             rnd = jnp.asarray(rounds0 + j, jnp.int32)
-            params, f, _, ledger = icoa.sweep(self.family, self.cfg, params,
-                                              f, xw, yw, k1, ledger, rnd)
+            params, f, _, ledger, etps = icoa.sweep(self.family, self.cfg,
+                                                    params, f, xw, yw, k1,
+                                                    ledger, rnd)
             alive = (faults_trace.alive_at(self._fl, self._d, rnd)
                      if self._crashes else None)
-            w, train, et = self._record(params, f, yw, k2, alive)
+            w, train, et, rtps = self._record(params, f, yw, k2, alive)
             eta_now = float(1.0 / et)
             etas.append(eta_now)
+            if obs_on:
+                tap_rows.append({**etps, **rtps})
             if abs(eta_prev - eta_now) < self.cfg.eps:
                 break
             eta_prev = eta_now
 
         f_full, cov = self._writeback(state.f, state.y, f)
         preq_n = int(state.preq_n)
+        preq_mse = (float(state.preq_sse) / preq_n if preq_n
+                    else float("nan"))
+        self.counters["resweeps"].add(1)
+        self.counters["resweep_sweeps"].add(len(etas))
+        self.last_preq_mse = preq_mse
         record = {
             "count": count,
             "filled": filled,
             "train_mse": float(train),
-            "preq_mse": (float(state.preq_sse) / preq_n if preq_n
-                         else float("nan")),
+            "preq_mse": preq_mse,
             "preq_n": preq_n,
             "eta": etas[-1],
             "etas": etas,
             "sweeps": len(etas),
             "bytes": int(ledger.spent) - bytes0,
             "bytes_total": int(ledger.spent),
+            # one tap row per EXECUTED sweep (stacked leading axis), {} when
+            # obs is off — stream_fit concatenates rows across resweeps
+            "taps": obs_taps.stack_tap_rows(tap_rows),
         }
         state = state._replace(
             params=params, f=f_full, cov=cov, weights=w, key=key,

@@ -25,9 +25,14 @@ import dataclasses
 from typing import Any, Dict, List, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.specs import StreamSpec
 from repro.faults import trace as faults_trace
+from repro.obs import taps as obs_taps
+from repro.obs.trace import active as obs_active
+from repro.obs.trace import event as obs_event
+from repro.obs.trace import trace as obs_span
 from repro.stream.checkpoint import restore_stream, save_stream
 from repro.stream.ingest import Ingestor, StreamState
 from repro.stream.serve import PredictEngine
@@ -46,6 +51,13 @@ class StreamResult:
     weights: jnp.ndarray        # final live combination weights
     records: List[Dict[str, Any]]   # one dict per resweep (see Ingestor)
     state: StreamState          # final live state (checkpointable)
+    metrics: Optional[obs_taps.Metrics] = None  # obs taps, one row per
+    #                             EXECUTED sweep across all resweeps (None
+    #                             when spec.experiment.obs is off)
+    ingestor: Optional[Ingestor] = None  # the live Ingestor that drove the
+    #                             run — its obs.health counters (ingest
+    #                             throughput, resweep totals, last preq MSE)
+    #                             are the run's runtime-health source of truth
 
     @property
     def counts(self) -> List[int]:
@@ -79,7 +91,8 @@ def build_ingestor(spec: StreamSpec) -> Ingestor:
     exp = spec.experiment
     groups = exp.data.groups
     cfg = exp.solver.icoa_config(exp.resolved_transport(),
-                                 checks=exp.backend.checks)
+                                 checks=exp.backend.checks,
+                                 obs=exp.obs.normalized())
     # the ledger-capacity guard reads cfg.n_sweeps as the run's worst case;
     # for a stream that is every sweep of every cadence period
     total_sweeps = max(1, (spec.total_instances // spec.resweep_every)
@@ -142,20 +155,49 @@ def stream_fit(spec: StreamSpec, *, checkpoint_dir: Optional[str] = None,
         engine.warmup()
 
     records: List[Dict[str, Any]] = []
-    for t in range(start_chunk, total_chunks):
-        x, yc = source(t)
-        state = ing.ingest(state, x, yc)
-        if engine is not None:
-            publish(state)
-        count = (t + 1) * spec.chunk
-        if count % spec.resweep_every == 0:
-            state, rec = ing.resweep(state)
-            records.append(rec)
+    with obs_span("stream.fit", total_instances=spec.total_instances,
+                  chunk=spec.chunk, resweep_every=spec.resweep_every):
+        for t in range(start_chunk, total_chunks):
+            x, yc = source(t)
+            state = ing.ingest(state, x, yc)
             if engine is not None:
                 publish(state)
-        if (checkpoint_dir is not None and spec.checkpoint_every is not None
-                and count % spec.checkpoint_every == 0):
-            save_stream(checkpoint_dir, state)
+            count = (t + 1) * spec.chunk
+            if count % spec.resweep_every == 0:
+                rounds0 = int(state.rounds)
+                with obs_span("stream.resweep", round=rounds0, count=count):
+                    state, rec = ing.resweep(state)
+                records.append(rec)
+                obs_event("stream.record", round=rounds0, count=count,
+                          sweeps=rec["sweeps"], eta=rec["eta"],
+                          train_mse=rec["train_mse"],
+                          preq_mse=rec["preq_mse"], bytes=rec["bytes"],
+                          bytes_total=rec["bytes_total"])
+                if crashes and obs_active():
+                    # fault-trace coordinates: agents newly dead over the
+                    # sweep rounds this resweep executed (DESIGN.md §13.2)
+                    for r in range(rounds0, int(state.rounds)):
+                        before = faults_trace.alive_at(fl, len(ing.groups),
+                                                       r - 1)
+                        after = faults_trace.alive_at(fl, len(ing.groups), r)
+                        for i in np.nonzero(np.asarray(before & ~after))[0]:
+                            obs_event("fault.crash", round=r,
+                                            agent=int(i))
+                if engine is not None:
+                    publish(state)
+            if (checkpoint_dir is not None
+                    and spec.checkpoint_every is not None
+                    and count % spec.checkpoint_every == 0):
+                with obs_span("stream.checkpoint", step=count):
+                    save_stream(checkpoint_dir, state)
 
+    obs_norm = exp.obs.normalized()
+    tap_stacks = [r["taps"] for r in records if r.get("taps")]
+    metrics = None
+    if obs_norm is not None and tap_stacks:
+        merged = {k: np.concatenate([s[k] for s in tap_stacks])
+                  for k in tap_stacks[0]}
+        metrics = obs_taps.metrics_from_taps(obs_norm, merged)
     return StreamResult(spec=spec, family=ing.family, params=state.params,
-                        weights=state.weights, records=records, state=state)
+                        weights=state.weights, records=records, state=state,
+                        metrics=metrics, ingestor=ing)

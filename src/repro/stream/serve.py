@@ -12,12 +12,14 @@ arrays in place).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+import time
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ensemble
+from repro.obs import health as obs_health
 
 __all__ = ["PredictEngine"]
 
@@ -49,6 +51,14 @@ class PredictEngine:
         # one jit wrapper; the bucket sizes key its trace cache, so warmup()
         # pre-populates exactly the programs predict() will hit
         self._fn = jax.jit(_predict)
+
+        # in-engine runtime health (repro.obs.health): ONE latency ring per
+        # bucket program, fed by the engine itself — pad + execute +
+        # block_until_ready, the full request-visible cost of that program.
+        # Consumers (serve_bench, stream_demo, the metrics_text hook) read
+        # these instead of running their own stopwatches.
+        self.latency = {b: obs_health.LatencyRing() for b in self.buckets}
+        self.requests = obs_health.Counter()
 
     def update(self, params: Any, weights: jnp.ndarray,
                alive: Optional[jnp.ndarray] = None) -> None:
@@ -88,24 +98,81 @@ class PredictEngine:
                 return b
         return self.buckets[-1]
 
+    def _predict_one(self, x: jnp.ndarray, n: int) -> jnp.ndarray:
+        """ONE bucket program execution, timed end-to-end into its ring (pad +
+        execute + block_until_ready — the request-visible latency of that
+        program).  The stride path calls this per slice, so each execution is
+        observed exactly once."""
+        b = self._bucket(n)
+        t0 = time.perf_counter()
+        if n < b:
+            x = jnp.concatenate(
+                [x, jnp.zeros((b - n, x.shape[1]), x.dtype)])
+        out = self._fn(self._params, self._weights, x)
+        out.block_until_ready()
+        self.latency[b].observe(time.perf_counter() - t0)
+        return out[:n]
+
     def predict(self, x: jnp.ndarray) -> jnp.ndarray:
         """(B, n_attrs) -> (B,) ensemble predictions at the live weights.
 
         B <= max bucket: one padded call.  Larger B strides through the
         largest bucket.  Either way every executed program was compiled at
         warmup — zero steady-state retraces (audit-gated in serve_bench).
+        Per-bucket execution latency lands in `self.latency` (obs.health
+        rings); `predict` blocks on the result so the observed time is the
+        caller's, not the dispatch queue's.
         """
         if self._params is None:
             raise ValueError("PredictEngine.predict before update(): no live "
                              "params/weights have been published")
+        self.requests.add(1)
         x = jnp.asarray(x)
         n = x.shape[0]
         big = self.buckets[-1]
         if n > big:
-            return jnp.concatenate([self.predict(x[i:i + big])
-                                    for i in range(0, n, big)])
-        b = self._bucket(n)
-        if n < b:
-            x = jnp.concatenate(
-                [x, jnp.zeros((b - n, x.shape[1]), x.dtype)])
-        return self._fn(self._params, self._weights, x)[:n]
+            return jnp.concatenate(
+                [self._predict_one(x[i:i + big], min(big, n - i))
+                 for i in range(0, n, big)])
+        return self._predict_one(x, n)
+
+    # ------------------------------------------------------- metrics hook
+
+    def metrics_rows(self, ingestor=None) -> List[tuple]:
+        """(name, type, help, value, labels) rows for obs.health.
+        prometheus_text — engine request/latency state plus, when an
+        `Ingestor` is passed, its throughput counters and last prequential
+        MSE (the full stream/serve health surface in one scrape)."""
+        rows: List[tuple] = [
+            ("repro_serve_requests_total", "counter",
+             "predict() calls answered", float(self.requests.total), None),
+            ("repro_serve_requests_per_second", "gauge",
+             "request rate over the observed span", self.requests.rate, None),
+        ]
+        for b in self.buckets:
+            ring = self.latency[b]
+            lab = {"bucket": str(b)}
+            rows.append((
+                "repro_serve_predict_executions_total", "counter",
+                "bucket program executions", float(ring.count), lab))
+            for q, v in ring.percentiles().items():
+                rows.append((
+                    "repro_serve_predict_latency_seconds", "gauge",
+                    "end-to-end bucket execution latency (ring window)",
+                    v, {**lab, "quantile": q}))
+        if ingestor is not None:
+            for name, c in ingestor.counters.items():
+                rows.append((f"repro_stream_{name}_total", "counter",
+                             f"stream {name.replace('_', ' ')}",
+                             float(c.total), None))
+                rows.append((f"repro_stream_{name}_per_second", "gauge",
+                             f"stream {name.replace('_', ' ')} rate",
+                             c.rate, None))
+            rows.append(("repro_stream_preq_mse", "gauge",
+                         "prequential MSE of the last resweep record",
+                         ingestor.last_preq_mse, None))
+        return rows
+
+    def metrics_text(self, ingestor=None) -> str:
+        """Prometheus text exposition (v0.0.4) of `metrics_rows`."""
+        return obs_health.prometheus_text(self.metrics_rows(ingestor))

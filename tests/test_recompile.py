@@ -60,6 +60,48 @@ def test_counting_scope_detaches_cleanly():
     assert jax.config.jax_log_compiles == prev_flag
 
 
+def test_counting_inside_obs_trace_span_is_complete():
+    """Counting scopes nest inside obs.trace spans without losing compiles:
+    the tracer's jax.profiler annotation must not perturb the logging hook
+    the counter rides on (observability layered over the audit — both see
+    the same program launches)."""
+    from repro import obs
+
+    x4, x7 = jnp.ones((4,), jnp.float32), jnp.ones((7,), jnp.float32)
+    with recompile.count_compilations() as outer:
+        with obs.trace("test.outer-span", case="nested"):
+            jax.jit(lambda x: x - 1.0)(x4)          # compile 1
+            with recompile.count_compilations() as inner:
+                with obs.trace("test.inner-span"):
+                    jax.jit(lambda x: x / 2.0)(x7)  # compile 2
+            jax.jit(lambda x: x * 3.0)(x4)          # compile 3 (outer only)
+    assert inner.total == 1, inner.counts
+    # nothing dropped: the outer scope saw every compile, incl. the inner
+    # span's; nothing double-counted: exactly 3
+    assert outer.total == 3, outer.counts
+
+
+def test_absorb_counts_during_active_scope_neither_drops_nor_doubles(
+        monkeypatch):
+    """The forked-bench-worker path (absorb_counts) used simultaneously with
+    a local counting scope: worker counts fold into the INSTALLED process
+    audit exactly once, and the local scope keeps seeing only its own
+    in-process compiles."""
+    installed = recompile.CompilationLog()
+    monkeypatch.setattr(recompile, "_installed", installed)
+    x6 = jnp.ones((6,), jnp.float32)
+    with recompile.count_compilations() as local:
+        jax.jit(lambda x: x + 5.0)(x6)              # in-process compile
+        # a forked worker reports back mid-scope (batch_bench's protocol)
+        recompile.absorb_counts({"worker_sweep": 4})
+        recompile.absorb_counts({"worker_sweep": 1, "worker_predict": 2})
+    # absorbed counts land on the installed audit log, accumulated not
+    # overwritten, and never leak into the local scope's counts
+    assert installed.counts == {"worker_sweep": 5, "worker_predict": 2}
+    assert "worker_sweep" not in local.counts
+    assert local.total == 1, local.counts
+
+
 # ------------------------------------------------------------------ budget
 
 

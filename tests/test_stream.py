@@ -181,6 +181,43 @@ def test_resume_requires_checkpoint_dir():
         stream_fit(spec, resume=True)
 
 
+def test_legacy_checkpoint_missing_leaf_raises_named_error(tmp_path):
+    """A pre-PR-9 checkpoint (no `rounds` fault-round counter) must fail with
+    a CheckpointError NAMING the missing leaf + the README migration table —
+    not the raw numpy KeyError the restore used to die with."""
+    from repro.stream.checkpoint import (CheckpointError, restore_stream,
+                                         save_stream)
+
+    spec = _stream_spec(window=128, chunk=64, total_instances=128,
+                        resweep_every=128)
+    ing = build_ingestor(spec)
+    state = ing.init_state()
+    state = state._replace(count=jnp.asarray(64, jnp.int32))
+    ckdir = os.fspath(tmp_path / "ck")
+    save_stream(ckdir, state)
+
+    # synthesize the legacy layout: strip the `rounds` leaf from BOTH the
+    # npz archive and the manifest, exactly what an old release wrote
+    npz = os.path.join(ckdir, "ckpt_00000064.npz")
+    man = os.path.join(ckdir, "ckpt_00000064.json")
+    arrays = dict(np.load(npz))
+    assert ".rounds" in arrays
+    del arrays[".rounds"]
+    np.savez_compressed(npz, **arrays)
+    manifest = json.load(open(man))
+    manifest["keys"] = [k for k in manifest["keys"] if k != ".rounds"]
+    json.dump(manifest, open(man, "w"))
+
+    with pytest.raises(CheckpointError, match=r"\.rounds.*README"):
+        restore_stream(ckdir, like=ing.init_state())
+
+    # and an intact checkpoint still restores through the schema check
+    ck2 = os.fspath(tmp_path / "ck2")
+    save_stream(ck2, state)
+    restored, step = restore_stream(ck2, like=ing.init_state())
+    assert step == 64 and int(restored.count) == 64
+
+
 # ------------------------------------------------------------- serving
 
 

@@ -339,12 +339,12 @@ def test_sweep_returns_and_threads_ledger():
     keys = jax.random.split(jax.random.PRNGKey(0), 5)
     st = icoa.init_state(fam, keys, xc, ytr)
     cfg = icoa.ICOAConfig(n_sweeps=1)
-    params, f, _, led = icoa.sweep(fam, cfg, st.params, st.f, xc, ytr,
-                                   jax.random.PRNGKey(1))
+    params, f, _, led, _ = icoa.sweep(fam, cfg, st.params, st.f, xc, ytr,
+                                      jax.random.PRNGKey(1))
     assert float(led.spent) == 2 * 5 * _N * 8.0
     # a second sweep keeps the running total
-    _, _, _, led2 = icoa.sweep(fam, cfg, params, f, xc, ytr,
-                               jax.random.PRNGKey(2), led)
+    _, _, _, led2, _ = icoa.sweep(fam, cfg, params, f, xc, ytr,
+                                  jax.random.PRNGKey(2), led)
     assert float(led2.spent) == 2 * float(led.spent)
     # dense engine + budget is rejected at trace time too
     with pytest.raises(ValueError, match="incremental"):

@@ -1,0 +1,64 @@
+"""Validate every checked-in BENCH_*.json against the shared envelope.
+
+Usage::
+
+    python tools/bench_schema.py check [root]
+
+Exit 0 when every BENCH file at the repo root parses and carries the
+``{"meta": {bench, git_sha, host_cpu_count, jax_version, timestamp},
+"results": ...}`` envelope (benchmarks/envelope.py); exit 1 with one line per
+violation otherwise.  CI runs this in the obs smoke job, so a bench writer
+that regresses to a bare payload fails the PR that broke it.
+
+Deliberately dependency-free (no jax import): it must run in any lint
+environment.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(_HERE, ".."))
+
+from benchmarks.envelope import validate  # noqa: E402
+
+
+def check(root: str) -> int:
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        print(f"bench_schema: no BENCH_*.json under {root!r}")
+        return 1
+    bad = 0
+    for path in paths:
+        name = os.path.basename(path)
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+            validate(doc, name)
+        except (ValueError, OSError) as e:
+            bad += 1
+            print(f"FAIL {name}: {e}")
+            continue
+        meta = doc["meta"]
+        legacy = " (legacy wrap)" if meta.get("legacy_wrap") else ""
+        print(f"ok   {name}: bench={meta['bench']} "
+              f"sha={str(meta['git_sha'])[:12]}{legacy}")
+    if bad:
+        print(f"bench_schema: {bad}/{len(paths)} file(s) violate the "
+              f"envelope")
+    return 1 if bad else 0
+
+
+def main(argv) -> int:
+    if not argv or argv[0] != "check":
+        print(__doc__)
+        return 2
+    root = argv[1] if len(argv) > 1 else os.path.join(_HERE, "..")
+    return check(root)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,75 @@
+"""CI obs smoke (DESIGN.md §13): one fit and one stream run with taps ON
+and the span tracer armed, writing the event log to the given path.
+
+Usage::
+
+    PYTHONPATH=src python tools/obs_smoke.py [events.jsonl]
+
+Asserts the tap surface end-to-end — `Result.metrics` / `StreamResult.
+metrics` populated with the registry shapes, the eta tap matching the
+recorded history, runtime-health counters moving, and a non-trivial
+Prometheus scrape — then leaves the JSONL for `tools/obs_report.py` (whose
+ledger cross-check is the next CI step) and uploads as an artifact.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro import api, obs
+from repro.stream import PredictEngine
+
+
+def main(argv) -> int:
+    path = argv[0] if argv else "obs_events.jsonl"
+    obs.configure(path, run_id="ci-smoke")
+    try:
+        spec = api.ExperimentSpec(
+            data=api.DataSpec(n_train=150, n_test=150, seed=7),
+            agent=api.AgentSpec(family="polynomial",
+                                options=(("degree", 3),)),
+            solver=api.SolverSpec(n_sweeps=3, eps=0.0),
+            obs=obs.ObsSpec(taps=("eta", "s", "accepts")))
+        res = api.fit(spec)
+        d = len(spec.data.groups)
+        assert res.metrics is not None
+        assert res.metrics["eta"].shape == (3,)
+        assert res.metrics["accepts"].shape == (3, d)
+        np.testing.assert_allclose(res.metrics["eta"],
+                                   np.asarray(res.history.eta[1:]),
+                                   rtol=1e-5)
+        print(f"fit: metrics {res.metrics.names}, "
+              f"eta tap == history ({res.metrics.n_sweeps} sweeps)")
+
+        exp = api.ExperimentSpec(
+            data=api.DataSpec(source="cosine", n_train=256, n_test=64),
+            solver=api.SolverSpec(name="icoa", n_sweeps=3, eps=0.0),
+            obs=obs.ObsSpec(taps=("eta", "accepts")))
+        sspec = api.StreamSpec(experiment=exp, window=256, chunk=64,
+                               total_instances=256, resweep_every=128)
+        sres = api.stream_fit(sspec)
+        assert sres.metrics is not None and sres.metrics.n_sweeps > 0
+        c = sres.ingestor.counters
+        assert c["ingest_instances"].total == 256
+        assert c["resweeps"].total == len(sres.records)
+        groups = exp.data.groups
+        engine = PredictEngine(sres.family, groups, n_attrs=len(groups))
+        engine.update(sres.params, sres.weights)
+        engine.warmup()
+        engine.predict(np.zeros((8, len(groups)),
+                                np.asarray(sres.weights).dtype))
+        scrape = engine.metrics_text(sres.ingestor)
+        assert "repro_serve_requests_total 1.0" in scrape
+        assert "repro_stream_ingest_instances_total 256.0" in scrape
+        print(f"stream: {sres.metrics.n_sweeps} tapped sweeps over "
+              f"{len(sres.records)} resweeps; scrape "
+              f"{len(scrape.splitlines())} lines")
+    finally:
+        obs.disable()
+    print(f"event log: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
